@@ -1,0 +1,197 @@
+"""Benchmarks reproducing the paper's tables/figures on synthetic datasets of
+matching shape (no network access — see data/ratings.paper_dataset).
+
+  fig2  — proportion of total time spent in the MF process vs #epochs
+  fig5  — per-latent-vector sparsity across epochs (trend holds => one-shot
+          rearrangement is valid)
+  fig7  — factor distributions are normal-like; Eq. 7/8 threshold hits the
+          requested pruning rate empirically
+  fig11 — speedup & MAE vs pruning rate (the headline result)
+  fig12 — runtime vs k (dense vs accelerated)
+  fig13 — hyperparameter sweeps (lr / strategy / init)
+
+Speedups are reported two ways (DESIGN.md §6): `work` speedup = dense MACs /
+executed MACs (hardware-transferable; compare with the paper's 1.2-1.65x),
+and `wall` = CPU wall-clock ratio (reported for completeness; a vectorized
+masked CPU run does not skip masked FLOPs).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import (
+    DPMFTrainer,
+    TrainConfig,
+    percentage_mae,
+    sparsity_per_dim,
+    work_speedup,
+)
+from repro.core.threshold import (
+    empirical_pruned_fraction,
+    measure_stats,
+    threshold_for_rate,
+)
+from repro.data import paper_dataset, train_test_split
+
+
+def _dataset(name: str, scale: float, seed: int = 0):
+    ds = paper_dataset(name, seed=seed, scale=scale)
+    return train_test_split(ds, 0.2, seed=seed)
+
+
+def _train(train_ds, test_ds, **kw):
+    # Paper protocol: LibMF defaults (adagrad, lr 0.1, non-negative init).
+    defaults = dict(k=30, epochs=8, batch_size=4096, optimizer="adagrad",
+                    lr=0.1, init_method="libmf", seed=0)
+    defaults.update(kw)
+    trainer = DPMFTrainer(TrainConfig(**defaults), train_ds, test_ds)
+    trainer.run()
+    return trainer
+
+
+def fig2_time_share(scale: float = 0.3) -> None:
+    train_ds, test_ds = _dataset("movielens100k", scale)
+    for epochs in (1, 5, 10):
+        t0 = time.perf_counter()
+        trainer = _train(train_ds, None, epochs=epochs)
+        total = time.perf_counter() - t0
+        mf_time = trainer.total_train_time()
+        emit(
+            f"fig2/time_share_epochs{epochs}",
+            total * 1e6,
+            f"mf_fraction={mf_time / total:.3f}",
+        )
+
+
+def fig5_sparsity_trend(scale: float = 0.3) -> None:
+    train_ds, test_ds = _dataset("movielens100k", scale)
+    trainer = DPMFTrainer(
+        TrainConfig(k=30, epochs=6, batch_size=4096, pruning_rate=0.0), train_ds
+    )
+    threshold = 0.06
+    rows = []
+    for _ in range(6):
+        trainer.run_epoch()
+        sp_p = float(jnp.mean(sparsity_per_dim(trainer.params.p, threshold)))
+        sp_q = float(jnp.mean(sparsity_per_dim(trainer.params.q, threshold)))
+        rows.append((sp_p, sp_q))
+    emit(
+        "fig5/sparsity_trend",
+        0.0,
+        "p_sparsity=" + "|".join(f"{a:.3f}" for a, _ in rows)
+        + ";q_sparsity=" + "|".join(f"{b:.3f}" for _, b in rows),
+    )
+    # the paper's observation: sparsity decreases with training
+    assert rows[0][0] >= rows[-1][0] - 0.05
+
+
+def fig7_threshold_accuracy(scale: float = 0.3) -> None:
+    train_ds, _ = _dataset("movielens100k", scale)
+    trainer = DPMFTrainer(
+        TrainConfig(k=30, epochs=1, batch_size=4096, pruning_rate=0.0), train_ds
+    )
+    trainer.run_epoch()
+    for rate in (0.1, 0.3, 0.5):
+        stats = measure_stats(trainer.params.p)
+        t = threshold_for_rate(stats, rate)
+        frac = float(empirical_pruned_fraction(trainer.params.p, t))
+        emit(
+            f"fig7/threshold_rate{rate}",
+            0.0,
+            f"T={float(t):.4f};empirical={frac:.3f};target={rate}",
+        )
+
+
+def fig11_speedup_vs_rate(
+    datasets=("movielens100k", "jester"), scale: float = 0.25, epochs: int = 25
+) -> None:
+    for name in datasets:
+        train_ds, test_ds = _dataset(name, scale)
+        t0 = time.perf_counter()
+        dense = _train(train_ds, test_ds, epochs=epochs, pruning_rate=0.0)
+        t_dense = time.perf_counter() - t0
+        base_mae = dense.history[-1].test_mae
+        emit(f"fig11/{name}/rate0.0", t_dense * 1e6, f"mae={base_mae:.4f}")
+        for rate in (0.1, 0.3, 0.5):
+            t0 = time.perf_counter()
+            acc = _train(train_ds, test_ds, epochs=epochs, pruning_rate=rate)
+            t_acc = time.perf_counter() - t0
+            mae = acc.history[-1].test_mae
+            emit(
+                f"fig11/{name}/rate{rate}",
+                t_acc * 1e6,
+                f"mae={mae:.4f};pmae={percentage_mae(mae, base_mae):.2f}%"
+                f";work_speedup={work_speedup(acc.history):.3f}"
+                f";wall_speedup={t_dense / t_acc:.3f}",
+            )
+
+
+def fig12_runtime_vs_k(scale: float = 0.25, epochs: int = 15) -> None:
+    train_ds, test_ds = _dataset("movielens100k", scale)
+    for k in (20, 50, 80):
+        dense = _train(train_ds, None, k=k, epochs=epochs, pruning_rate=0.0)
+        acc = _train(train_ds, None, k=k, epochs=epochs, pruning_rate=0.3)
+        emit(
+            f"fig12/k{k}",
+            dense.total_train_time() * 1e6,
+            f"work_speedup={work_speedup(acc.history):.3f}"
+            f";acc_wall_us={acc.total_train_time() * 1e6:.0f}",
+        )
+
+
+def fig13_hyperparams(scale: float = 0.25, epochs: int = 15) -> None:
+    train_ds, test_ds = _dataset("movielens100k", scale)
+    base = _train(train_ds, test_ds, epochs=epochs, pruning_rate=0.0)
+    base_mae = base.history[-1].test_mae
+
+    variants = {
+        "lr0.05": dict(lr=0.05),
+        "lr0.1": dict(lr=0.1),
+        "lr0.15": dict(lr=0.15),
+        "twin": dict(strategy="twin"),
+        "normal_init": dict(init_method="normal"),
+    }
+    for name, kw in variants.items():
+        acc = _train(train_ds, test_ds, epochs=epochs, pruning_rate=0.3, **kw)
+        mae = acc.history[-1].test_mae
+        emit(
+            f"fig13/{name}",
+            acc.total_train_time() * 1e6,
+            f"work_speedup={work_speedup(acc.history):.3f}"
+            f";pmae={percentage_mae(mae, base_mae):.2f}%",
+        )
+
+
+def ablation_rearrangement(scale: float = 0.5, epochs: int = 15) -> None:
+    """Beyond-paper ablation: Algorithm 1's role.  The paper argues the
+    joint-sparsity rearrangement limits pruning error; removing it (prune
+    with the same thresholds, original latent order) should cost accuracy
+    and/or skip less coherent work."""
+    train_ds, test_ds = _dataset("movielens100k", scale)
+    dense = _train(train_ds, test_ds, epochs=epochs, pruning_rate=0.0)
+    base_mae = dense.history[-1].test_mae
+    with_r = _train(train_ds, test_ds, epochs=epochs, pruning_rate=0.3)
+    without_r = _train(train_ds, test_ds, epochs=epochs, pruning_rate=0.3,
+                       rearrange=False)
+    for name, t in (("with_alg1", with_r), ("without_alg1", without_r)):
+        emit(
+            f"ablation/rearrangement/{name}",
+            t.total_train_time() * 1e6,
+            f"pmae={percentage_mae(t.history[-1].test_mae, base_mae):.2f}%"
+            f";work_speedup={work_speedup(t.history):.3f}",
+        )
+
+
+def run(full: bool = False) -> None:
+    scale = 1.0 if full else 0.25
+    fig2_time_share(scale=min(scale, 0.3))
+    fig5_sparsity_trend(scale=min(scale, 0.3))
+    fig7_threshold_accuracy(scale=min(scale, 0.3))
+    fig11_speedup_vs_rate(scale=(1.0 if full else 0.5), epochs=25)
+    fig12_runtime_vs_k(scale=scale)
+    fig13_hyperparams(scale=scale)
+    ablation_rearrangement(scale=0.5)

@@ -1,0 +1,257 @@
+"""Roofline table assembly from the dry-run records (§Roofline deliverable).
+
+Per (arch x shape x mesh): the three roofline terms in seconds, the dominant
+bottleneck, MODEL_FLOPS, the useful-FLOP ratio, and the roofline fraction.
+
+Accounting notes (all quantities are PER DEVICE, matching cost_analysis):
+  * LM cells are corrected with the two-point depth extrapolation
+    (roofline/analysis.extrapolate_depth) because XLA costs scanned layer
+    bodies once per program.
+  * MODEL_FLOPS uses 6*N_active*T (train) / 2*N_active*T (forward) plus the
+    causal-attention term for LM; analytic per-example counts for the MF /
+    recsys / GNN families (formulas inline below).
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+from benchmarks.common import emit
+from repro import configs as cfg_lib
+from repro.roofline import analysis, hw
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+OUT_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+LM_TOKENS = {
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128,
+    "long_500k": 1,
+}
+LM_KV = {"decode_32k": 32768, "long_500k": 524288}
+
+
+def _mlp_macs(dims) -> int:
+    return sum(a * b for a, b in zip(dims[:-1], dims[1:]))
+
+
+def model_flops_total(arch: str, shape: str, kind: str) -> Optional[float]:
+    """Analytic useful FLOPs for the whole step (all devices)."""
+    cfg = cfg_lib.get_config(arch)
+    if arch in ("gemma-7b", "qwen1.5-4b", "qwen3-4b", "deepseek-v2-lite-16b",
+                "granite-moe-1b-a400m"):
+        tokens = LM_TOKENS[shape]
+        n_act = cfg.active_param_count()
+        if kind == "train":
+            base = 6.0 * n_act * tokens
+            attn = 6.0 * tokens * cfg.n_layers * cfg.n_heads * cfg.head_dim * 4096
+            return base + attn
+        if shape in LM_KV:  # decode: params fwd + attention over the cache
+            s = LM_KV[shape]
+            attn = 4.0 * tokens * cfg.n_layers * cfg.n_heads * cfg.head_dim * s
+            return 2.0 * n_act * tokens + attn
+        # prefill: forward + causal attention (avg context S/2)
+        attn = 2.0 * tokens * cfg.n_layers * cfg.n_heads * cfg.head_dim * 32768
+        return 2.0 * n_act * tokens + attn
+
+    if arch == "dpmf":
+        if kind == "train":  # train_1m and train_1m_sm
+            return 6.0 * cfg.k * 1_048_576
+        return 2.0 * 1024 * cfg.num_items * cfg.k  # serve_top100
+
+    if arch == "fm":
+        f, k = cfg.n_fields, cfg.embed_dim
+        batches = {"train_batch": 65536, "serve_p99": 512,
+                   "serve_bulk": 262144}
+        if shape == "retrieval_cand":
+            return 2.0 * 1_000_000 * k + 4.0 * (f - 1) * k
+        b = batches[shape]
+        fwd = 4.0 * f * k * b
+        return 3.0 * fwd if kind == "train" else fwd
+
+    if arch == "dlrm-mlperf":
+        per_ex = 2.0 * (
+            _mlp_macs((cfg.n_dense,) + cfg.bot_mlp)
+            + _mlp_macs((cfg.bot_mlp[-1] + cfg.n_interact,) + cfg.top_mlp)
+            + (cfg.n_sparse + 1) ** 2 * cfg.embed_dim // 2
+        )
+        sizes = {"train_batch": 65536, "serve_p99": 512,
+                 "serve_bulk": 262144, "retrieval_cand": 1_000_000}
+        b = sizes[shape]
+        return (3.0 if kind == "train" else 1.0) * per_ex * b
+
+    if arch == "sasrec":
+        d, s = cfg.embed_dim, cfg.seq_len
+        per_tok = 2.0 * cfg.n_blocks * (6 * d * d + 2 * s * d)
+        sizes = {"train_batch": 65536, "serve_p99": 512, "serve_bulk": 262144,
+                 "retrieval_cand": 1}
+        b = sizes[shape]
+        enc = per_tok * s * b
+        if shape == "retrieval_cand":
+            return enc + 2.0 * 1_000_000 * d
+        if kind == "train":
+            return 3.0 * (enc + 2.0 * 2 * s * d * b)
+        return enc + 2.0 * b * (cfg.n_items + 1) * d  # catalog scoring
+
+    if arch == "bst":
+        d, s = cfg.embed_dim, cfg.seq_len + 1
+        per_ex = 2.0 * cfg.n_blocks * s * (6 * d * d + 2 * s * d) + 2.0 * _mlp_macs(
+            (s * d + cfg.n_profile,) + cfg.mlp_dims + (1,)
+        )
+        sizes = {"train_batch": 65536, "serve_p99": 512, "serve_bulk": 262144,
+                 "retrieval_cand": 1_000_000}
+        b = sizes[shape]
+        return (3.0 if kind == "train" else 1.0) * per_ex * b
+
+    if arch == "gat-cora":
+        graphs = {
+            "full_graph_sm": (2708, 10556, 1433, 7),
+            "minibatch_lg": (1024 * 166, 1024 * 165, 602, 41),
+            "ogb_products": (2449029, 61859140, 100, 47),
+            "molecule": (128 * 30, 128 * 64, 32, 8),
+        }
+        n, e, d_feat, n_cls = graphs[shape]
+        h, dh = cfg.n_heads, cfg.d_hidden
+        l1 = 2.0 * n * d_feat * h * dh + 6.0 * e * h * dh
+        l2 = 2.0 * n * (h * dh) * n_cls + 6.0 * e * n_cls
+        return 3.0 * (l1 + l2)  # train
+
+    return None
+
+
+def _load(
+    arch: str, shape: str, tag: str, calib: int = 0, variant: str = ""
+) -> Optional[Dict]:
+    suffix = (f"__v-{variant}" if variant else "") + (
+        f"__calib{calib}" if calib else ""
+    )
+    safe = arch.replace("/", "_").replace(".", "_")
+    path = os.path.join(RESULTS_DIR, f"{safe}__{shape}__{tag}{suffix}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        rec = json.load(f)
+    return rec if rec.get("status") == "ok" else None
+
+
+# §Perf hillclimbed cells: (arch, shape) -> best beyond-paper variant.
+# (dpmf's optimized step is its own cell, train_1m_sm.)
+BEST_VARIANTS = {
+    ("deepseek-v2-lite-16b", "train_4k"): "moe_sm2",
+    ("gemma-7b", "train_4k"): "remat_dots",
+    ("granite-moe-1b-a400m", "train_4k"): "moe_sm",  # bonus: same fix as deepseek
+}
+
+
+@dataclasses.dataclass
+class Row:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    chips: int
+    flops_dev: float
+    bytes_dev: float
+    coll_dev: float
+    terms: Dict[str, float]
+    corrected: bool
+    variant: str = ""
+
+
+def _one_row(arch, shape, mesh_tag, chips, variant=""):
+    rec = _load(arch, shape, mesh_tag, variant=variant)
+    if rec is None:
+        return None
+    flops = rec.get("cost", {}).get("flops", 0.0) or 0.0
+    byts = rec.get("cost", {}).get("bytes_accessed", 0.0) or 0.0
+    coll = rec.get("collectives", {}).get("total_bytes", 0.0) or 0.0
+    corrected = False
+
+    c1 = _load(arch, shape, mesh_tag, calib=1, variant=variant)
+    c2 = _load(arch, shape, mesh_tag, calib=2, variant=variant)
+    if c1 and c2:
+        cfg = cfg_lib.get_config(arch)
+        fix = analysis.extrapolate_depth(c1, c2, cfg.scan_layers)
+        flops, byts = fix["flops"], fix["bytes_accessed"]
+        coll = fix["collective_bytes"]
+        corrected = True
+
+    mf_total = model_flops_total(arch, shape, rec.get("kind", ""))
+    terms = analysis.roofline_terms(
+        flops * chips, byts * chips, coll * chips, chips,
+        model_flops=mf_total,
+    )
+    return Row(arch, shape, mesh_tag, rec.get("kind", ""), chips,
+               flops, byts, coll, terms, corrected, variant)
+
+
+def build_rows(mesh_tag: str = "singlepod"):
+    chips = hw.CHIPS_SINGLE_POD if mesh_tag == "singlepod" else hw.CHIPS_MULTI_POD
+    rows = []
+    for arch, shape in cfg_lib.all_cells(include_dpmf=True):
+        row = _one_row(arch, shape, mesh_tag, chips)
+        if row is None:
+            continue
+        rows.append(row)
+        variant = BEST_VARIANTS.get((arch, shape))
+        if variant:
+            vrow = _one_row(arch, shape, mesh_tag, chips, variant=variant)
+            if vrow is not None:
+                rows.append(vrow)
+    return rows
+
+
+def render_markdown(rows) -> str:
+    hdr = (
+        "| arch | shape | kind | compute_s | memory_s | collective_s | "
+        "dominant | useful/HLO | roofline_frac |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        t = r.terms
+        uf = t.get("useful_flop_fraction")
+        rf = t.get("roofline_fraction")
+        name = r.arch + (f" [{r.variant}]" if r.variant else "")
+        lines.append(
+            f"| {name} | {r.shape} | {r.kind} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | {t['dominant']} | "
+            f"{uf:.3f} | {rf:.3f} |" if uf is not None else
+            f"| {name} | {r.shape} | {r.kind} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | {t['dominant']} | "
+            f"- | - |"
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def run(full: bool = False) -> None:
+    del full
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for tag in ("singlepod", "multipod"):
+        rows = build_rows(tag)
+        if not rows:
+            emit(f"roofline/{tag}", 0.0, "no dry-run records found")
+            continue
+        md = render_markdown(rows)
+        out = os.path.join(OUT_DIR, f"roofline_{tag}.md")
+        with open(out, "w") as f:
+            f.write(md)
+        with open(os.path.join(OUT_DIR, f"roofline_{tag}.json"), "w") as f:
+            json.dump(
+                [dataclasses.asdict(r) for r in rows], f, indent=2, default=str
+            )
+        for r in rows:
+            rf = r.terms.get("roofline_fraction")
+            suffix = f"[{r.variant}]" if r.variant else ""
+            emit(
+                f"roofline/{tag}/{r.arch}{suffix}/{r.shape}",
+                r.terms["bound_s"] * 1e6,
+                f"dominant={r.terms['dominant']}"
+                + (f";roofline_frac={rf:.3f}" if rf is not None else "")
+                + (";depth-corrected" if r.corrected else ""),
+            )
+        emit(f"roofline/{tag}/table", 0.0, out)

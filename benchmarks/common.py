@@ -1,0 +1,25 @@
+"""Shared benchmark helpers: CSV emission + wall-clock timing."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The harness contract: ``name,us_per_call,derived`` CSV lines."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (microseconds) of a jax-producing callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        start = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - start)
+    times.sort()
+    return times[len(times) // 2] * 1e6

@@ -1,0 +1,45 @@
+"""Benchmark entry point: one function per paper table/figure plus the
+roofline assembly.  Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig11,roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--full", action="store_true",
+                        help="paper-scale datasets/epochs (slow)")
+    parser.add_argument("--only", default=None,
+                        help="comma-separated subset: figures,kernels,roofline")
+    args = parser.parse_args()
+
+    from benchmarks import bench_kernels, bench_paper_figures, bench_roofline
+
+    suites = {
+        "figures": bench_paper_figures.run,
+        "kernels": bench_kernels.run,
+        "roofline": bench_roofline.run,
+    }
+    selected = (
+        {s.strip() for s in args.only.split(",")} if args.only else set(suites)
+    )
+    failed = 0
+    for name, fn in suites.items():
+        if name not in selected:
+            continue
+        try:
+            fn(full=args.full)
+        except Exception:
+            failed += 1
+            print(f"bench/{name},0.0,ERROR", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Quickstart: dynamic-pruning MF in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Trains FunkSVD on a MovieLens-100K-shaped synthetic dataset twice — dense
+baseline vs dynamically pruned — and prints the paper's headline metrics
+(MAE, percentage-MAE, work-proportional speedup).
+"""
+from repro.core import DPMFTrainer, TrainConfig, percentage_mae, work_speedup
+from repro.data import paper_dataset, train_test_split
+
+ds = paper_dataset("movielens100k", seed=0, scale=0.5)
+train_ds, test_ds = train_test_split(ds, test_fraction=0.2, seed=0)
+
+dense = DPMFTrainer(
+    TrainConfig(k=30, epochs=15, pruning_rate=0.0, lr=0.1, init_method="libmf"),
+    train_ds, test_ds,
+)
+dense.run()
+
+pruned = DPMFTrainer(
+    TrainConfig(k=30, epochs=15, pruning_rate=0.3, lr=0.1, init_method="libmf"),
+    train_ds, test_ds,
+)
+pruned.run()
+
+mae_org = dense.history[-1].test_mae
+mae_acc = pruned.history[-1].test_mae
+print(f"dense  MAE: {mae_org:.4f}")
+print(f"pruned MAE: {mae_acc:.4f}  (P_MAE = {percentage_mae(mae_acc, mae_org):+.2f}%)")
+print(f"thresholds: T_p={pruned.history[-1].t_p:.4f} T_q={pruned.history[-1].t_q:.4f}")
+print(f"work-proportional speedup: {work_speedup(pruned.history):.2f}x "
+      f"(paper reports 1.2-1.65x wall-clock)")

@@ -1,0 +1,45 @@
+"""Serving example: train briefly, checkpoint, then serve batched top-k
+recommendation requests through the dynamically-pruned scoring path (the
+Pallas pruned-matmul kernel, interpret mode on CPU).
+
+    PYTHONPATH=src python examples/serve_recommendations.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DPMFTrainer, TrainConfig
+from repro.core.mf import predict_all_items
+from repro.data import paper_dataset, train_test_split
+
+ds = paper_dataset("movielens100k", seed=0, scale=0.3)
+train_ds, test_ds = train_test_split(ds, 0.2, seed=0)
+
+trainer = DPMFTrainer(
+    TrainConfig(k=32, epochs=6, pruning_rate=0.3), train_ds, test_ds
+)
+trainer.run()
+print(f"trained: test MAE {trainer.history[-1].test_mae:.4f}")
+
+users = jnp.asarray([3, 14, 15], jnp.int32)
+scores = predict_all_items(
+    trainer.params, users, trainer.t_p, trainer.t_q, use_kernel=True
+)
+top = np.asarray(jnp.argsort(-scores, axis=1)[:, :5])
+for row, user in enumerate(np.asarray(users)):
+    recs = ", ".join(
+        f"item {item} ({float(scores[row, item]):.2f})" for item in top[row]
+    )
+    print(f"user {user}: {recs}")
+
+# batched-request latency (XLA masked path — the production CPU fallback)
+rng = np.random.default_rng(0)
+batch_users = jnp.asarray(rng.integers(0, ds.num_users, 256), jnp.int32)
+start = time.perf_counter()
+predict_all_items(
+    trainer.params, batch_users, trainer.t_p, trainer.t_q, use_kernel=False
+).block_until_ready()
+dt = time.perf_counter() - start
+print(f"256 catalog-scoring requests in {dt * 1e3:.1f} ms "
+      f"({256 / dt:.0f} req/s on 1 CPU core)")

@@ -1,0 +1,2 @@
+"""repro: dynamic-pruning matrix factorization (DP-MF) framework in JAX."""
+__version__ = "0.1.0"

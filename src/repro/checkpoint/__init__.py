@@ -1,0 +1,8 @@
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    AsyncCheckpointer,
+    all_steps,
+    elastic_load,
+    latest_step,
+    restore,
+    save,
+)

@@ -1,0 +1,186 @@
+"""Fault-tolerant checkpointing.
+
+Design constraints for thousand-node deployments:
+
+* **Atomicity** — a checkpoint is written to a temp directory and published
+  with ``os.rename`` (atomic on POSIX), so a preempted writer never leaves a
+  half-checkpoint that a restart could load.
+* **Resumability** — metadata carries (epoch, step, data seed) so the loader
+  replays the exact data order (see data/loader.py).
+* **Keep-N retention** — bounded disk usage under frequent checkpointing.
+* **Async save** — a background thread serializes while the accelerators keep
+  training; ``wait()`` joins before the next save or job exit.
+* **Elastic restore** — arrays are saved with logical shapes only; the caller
+  re-shards onto whatever mesh the restarted job has (``elastic_load`` simply
+  returns host arrays + a helper to ``device_put`` with new shardings).
+
+Storage is ``.npz`` + JSON — the container has no orbax; the format is
+deliberately dependency-free and append-only.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+_SEP = "__"
+
+
+def _flatten_with_paths(tree: Pytree) -> List[Tuple[str, np.ndarray]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out.append((key or "root", np.asarray(leaf)))
+    return out
+
+
+def save(
+    directory: str,
+    step: int,
+    tree: Pytree,
+    *,
+    metadata: Optional[Dict[str, Any]] = None,
+    keep: int = 3,
+) -> str:
+    """Blocking atomic save.  Returns the published checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:012d}")
+    tmp = final + f".tmp.{os.getpid()}.{int(time.time() * 1e6)}"
+    os.makedirs(tmp, exist_ok=True)
+
+    arrays = dict(_flatten_with_paths(tree))
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {"step": step, "keys": sorted(arrays), **(metadata or {})}
+    with open(os.path.join(tmp, "metadata.json"), "w") as f:
+        json.dump(meta, f, indent=2, default=str)
+    # fsync the payload before publishing so a crash cannot publish garbage.
+    for name in ("arrays.npz", "metadata.json"):
+        fd = os.open(os.path.join(tmp, name), os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _garbage_collect(directory, keep)
+    return final
+
+
+def _garbage_collect(directory: str, keep: int) -> None:
+    steps = all_steps(directory)
+    for step in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{step:012d}"), ignore_errors=True)
+    # stale temp dirs from crashed writers
+    for name in os.listdir(directory):
+        if ".tmp." in name:
+            path = os.path.join(directory, name)
+            if time.time() - os.path.getmtime(path) > 3600:
+                shutil.rmtree(path, ignore_errors=True)
+
+
+def all_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and ".tmp." not in name:
+            try:
+                steps.append(int(name[len("step_"):]))
+            except ValueError:
+                continue
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(
+    directory: str,
+    tree_like: Pytree,
+    *,
+    step: Optional[int] = None,
+) -> Tuple[Pytree, Dict[str, Any]]:
+    """Restore into the structure of ``tree_like``.  Returns (tree, metadata)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:012d}")
+    with open(os.path.join(path, "metadata.json")) as f:
+        meta = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        arrays = {k: data[k] for k in data.files}
+
+    keys = [k for k, _ in _flatten_with_paths(tree_like)]
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    restored = []
+    for key, like in zip(keys, leaves):
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(np.shape(like)):
+            raise ValueError(
+                f"leaf {key!r}: checkpoint shape {arr.shape} != expected "
+                f"{np.shape(like)}"
+            )
+        restored.append(arr)
+    return treedef.unflatten(restored), meta
+
+
+def elastic_load(
+    directory: str,
+    tree_like: Pytree,
+    shard_fn: Callable[[Pytree], Pytree],
+    *,
+    step: Optional[int] = None,
+) -> Tuple[Pytree, Dict[str, Any]]:
+    """Restore then re-shard onto the *current* mesh (which may differ from
+    the mesh the checkpoint was written under — elastic scaling)."""
+    host_tree, meta = restore(directory, tree_like, step=step)
+    return shard_fn(host_tree), meta
+
+
+class AsyncCheckpointer:
+    """Overlap serialization with training; at most one save in flight."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Pytree, metadata=None) -> None:
+        self.wait()
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)  # snapshot now
+
+        def work():
+            try:
+                save(self.directory, step, host_tree, metadata=metadata, keep=self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,60 @@
+"""Architecture registry: the 10 assigned archs + the paper's own (dpmf).
+
+``build_cell(arch, shape)`` materializes a CellSpec (step fn + abstract
+inputs + shardings); ``all_cells()`` enumerates the full dry-run matrix.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+_ARCH_MODULES = {
+    "gemma-7b": "repro.configs.gemma_7b",
+    "qwen1.5-4b": "repro.configs.qwen15_4b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe",
+    "gat-cora": "repro.configs.gat_cora",
+    "fm": "repro.configs.fm_arch",
+    "sasrec": "repro.configs.sasrec_arch",
+    "bst": "repro.configs.bst_arch",
+    "dlrm-mlperf": "repro.configs.dlrm_mlperf",
+    "dpmf": "repro.configs.dpmf",
+}
+
+ASSIGNED_ARCHS: Tuple[str, ...] = tuple(
+    a for a in _ARCH_MODULES if a != "dpmf"
+)
+ALL_ARCHS: Tuple[str, ...] = tuple(_ARCH_MODULES)
+
+
+def get_module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch])
+
+
+def get_config(arch: str):
+    return get_module(arch).CONFIG
+
+
+def get_smoke_config(arch: str):
+    return get_module(arch).smoke_config()
+
+
+def shape_ids(arch: str) -> List[str]:
+    return list(get_module(arch).cells().keys())
+
+
+def build_cell(arch: str, shape_id: str):
+    builders = get_module(arch).cells()
+    if shape_id not in builders:
+        raise KeyError(
+            f"unknown shape {shape_id!r} for {arch!r}; known: {sorted(builders)}"
+        )
+    return builders[shape_id]()
+
+
+def all_cells(include_dpmf: bool = True) -> List[Tuple[str, str]]:
+    archs = ALL_ARCHS if include_dpmf else ASSIGNED_ARCHS
+    return [(arch, sid) for arch in archs for sid in shape_ids(arch)]

@@ -1,0 +1,396 @@
+"""Cell machinery: an (architecture x input-shape) cell bundles the step
+function, abstract inputs (ShapeDtypeStructs — never allocated), and the
+sharding assignment for a given mesh.  ``launch/dryrun.py`` lowers and
+compiles every cell; smoke tests run reduced clones of the same builders.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.distributed.collectives import microbatch_grads
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as rec_lib
+from repro.models import transformer as tfm
+from repro.optim.optimizers import Adam, Sgd
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape_id: str
+    kind: str  # train | prefill | decode | serve | retrieval
+    step_fn: Callable
+    abstract_args: Tuple
+    in_shardings: Callable[[Mesh], Tuple]
+    donate_argnums: Tuple[int, ...] = ()
+    note: str = ""
+
+    @property
+    def cell_id(self) -> str:
+        return f"{self.arch}::{self.shape_id}"
+
+
+def abstract_like(fn, *args, **kwargs):
+    return jax.eval_shape(fn, *args, **kwargs)
+
+
+def _adam_shardings(param_sh):
+    return {
+        "m": param_sh,
+        "v": param_sh,
+        "t": None,  # filled by caller with replicated sharding
+    }
+
+
+# ---------------------------------------------------------------------------
+# LM transformer cells
+# ---------------------------------------------------------------------------
+
+
+def lm_train_cell(
+    arch: str,
+    shape_id: str,
+    cfg: tfm.TransformerConfig,
+    *,
+    global_batch: int,
+    seq_len: int,
+    n_micro: int = 1,
+    lr: float = 3e-4,
+) -> CellSpec:
+    optimizer = Adam(lr=lr)
+
+    def loss_fn(params, batch):
+        return tfm.lm_loss(params, batch, cfg)
+
+    def step(params, opt_state, batch):
+        loss, grads = microbatch_grads(loss_fn, params, batch, n_micro)
+        params, opt_state = optimizer.apply(params, opt_state, grads)
+        return params, opt_state, loss
+
+    rng = jax.random.PRNGKey(0)
+    a_params = abstract_like(functools.partial(tfm.init_params, cfg=cfg), rng)
+    a_opt = abstract_like(optimizer.init, a_params)
+    a_batch = {
+        "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+    }
+
+    def in_shardings(mesh: Mesh):
+        p_sh = shd.transformer_param_shardings(a_params, mesh)
+        o_sh = {
+            "m": p_sh,
+            "v": jax.tree_util.tree_map(lambda s: s, p_sh),
+            "t": shd.replicated(mesh),
+        }
+        b_sh = shd.lm_batch_shardings(mesh)
+        return (p_sh, o_sh, b_sh)
+
+    return CellSpec(
+        arch=arch,
+        shape_id=shape_id,
+        kind="train",
+        step_fn=step,
+        abstract_args=(a_params, a_opt, a_batch),
+        in_shardings=in_shardings,
+        donate_argnums=(0, 1),
+    )
+
+
+def lm_prefill_cell(
+    arch: str,
+    shape_id: str,
+    cfg: tfm.TransformerConfig,
+    *,
+    global_batch: int,
+    seq_len: int,
+) -> CellSpec:
+    def step(params, tokens):
+        return tfm.prefill(params, tokens, cfg)
+
+    rng = jax.random.PRNGKey(0)
+    a_params = abstract_like(functools.partial(tfm.init_params, cfg=cfg), rng)
+    a_tokens = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
+
+    def in_shardings(mesh: Mesh):
+        return (
+            shd.transformer_param_shardings(a_params, mesh),
+            shd.ns(mesh, shd.data_axes(mesh), None),
+        )
+
+    return CellSpec(
+        arch=arch,
+        shape_id=shape_id,
+        kind="prefill",
+        step_fn=step,
+        abstract_args=(a_params, a_tokens),
+        in_shardings=in_shardings,
+    )
+
+
+def lm_decode_cell(
+    arch: str,
+    shape_id: str,
+    cfg: tfm.TransformerConfig,
+    *,
+    global_batch: int,
+    kv_len: int,
+    shard_seq: bool = False,
+    note: str = "",
+) -> CellSpec:
+    """One-token decode against a kv_len cache.  ``shard_seq`` shards the KV
+    sequence axis instead of batch (SP decode — the batch=1 long-context
+    cells)."""
+
+    def step(params, state, tokens):
+        return tfm.decode_step(params, tokens, state, cfg)
+
+    rng = jax.random.PRNGKey(0)
+    a_params = abstract_like(functools.partial(tfm.init_params, cfg=cfg), rng)
+    a_state = abstract_like(
+        functools.partial(
+            tfm.init_decode_state, cfg, global_batch, kv_len, length=kv_len - 1
+        )
+    )
+    a_tokens = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)
+
+    def in_shardings(mesh: Mesh):
+        state_sh = shd.tree_shardings(
+            a_state, shd.decode_state_spec_fn(mesh, shard_seq=shard_seq), mesh
+        )
+        return (
+            shd.transformer_param_shardings(a_params, mesh),
+            state_sh,
+            shd.ns(mesh, shd.data_axes(mesh), None) if not shard_seq
+            else shd.ns(mesh, None, None),
+        )
+
+    return CellSpec(
+        arch=arch,
+        shape_id=shape_id,
+        kind="decode",
+        step_fn=step,
+        abstract_args=(a_params, a_state, a_tokens),
+        in_shardings=in_shardings,
+        donate_argnums=(1,),
+        note=note,
+    )
+
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+def lm_cells(arch: str, cfg: tfm.TransformerConfig) -> Dict[str, Callable[[], CellSpec]]:
+    return {
+        "train_4k": lambda: lm_train_cell(
+            arch, "train_4k", cfg, global_batch=256, seq_len=4096
+        ),
+        "prefill_32k": lambda: lm_prefill_cell(
+            arch, "prefill_32k", cfg, global_batch=32, seq_len=32768
+        ),
+        "decode_32k": lambda: lm_decode_cell(
+            arch, "decode_32k", cfg, global_batch=128, kv_len=32768
+        ),
+        "long_500k": lambda: lm_decode_cell(
+            arch,
+            "long_500k",
+            cfg,
+            global_batch=1,
+            kv_len=524288,
+            shard_seq=True,
+            note=(
+                "long-context decode is O(L) (one query vs cached KV) — "
+                "runnable with full attention; KV sequence axis sharded (SP)."
+            ),
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def gnn_train_cell(
+    arch: str,
+    shape_id: str,
+    cfg: gnn_lib.GATConfig,
+    *,
+    num_nodes: int,
+    num_edges: int,
+    with_edge_mask: bool = False,
+    lr: float = 5e-3,
+    note: str = "",
+    pad_multiple: int = 512,
+) -> CellSpec:
+    # Pad node/edge counts to the device-grid multiple so both stay shardable
+    # (padded nodes carry label -1, padded edges carry mask 0 — the data
+    # pipeline produces exactly this layout).
+    if num_nodes % pad_multiple or num_edges % pad_multiple:
+        num_nodes += (-num_nodes) % pad_multiple
+        num_edges += (-num_edges) % pad_multiple
+        with_edge_mask = True
+    optimizer = Adam(lr=lr)
+
+    def loss_fn(params, batch):
+        return gnn_lib.loss_fn(params, batch, cfg)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = optimizer.apply(params, opt_state, grads)
+        return params, opt_state, loss
+
+    rng = jax.random.PRNGKey(0)
+    a_params = abstract_like(functools.partial(gnn_lib.init_params, cfg=cfg), rng)
+    a_opt = abstract_like(optimizer.init, a_params)
+    a_batch = {
+        "features": jax.ShapeDtypeStruct((num_nodes, cfg.d_feat), jnp.float32),
+        "edges": jax.ShapeDtypeStruct((num_edges, 2), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((num_nodes,), jnp.int32),
+    }
+    if with_edge_mask:
+        a_batch["edge_mask"] = jax.ShapeDtypeStruct((num_edges,), jnp.float32)
+
+    def in_shardings(mesh: Mesh):
+        p_sh = shd.tree_shardings(a_params, shd.gnn_spec_fn(mesh), mesh)
+        o_sh = {
+            "m": p_sh,
+            "v": jax.tree_util.tree_map(lambda s: s, p_sh),
+            "t": shd.replicated(mesh),
+        }
+        b_all = shd.gnn_batch_shardings(mesh)
+        b_sh = {key: b_all[key] for key in a_batch}
+        return (p_sh, o_sh, b_sh)
+
+    return CellSpec(
+        arch=arch,
+        shape_id=shape_id,
+        kind="train",
+        step_fn=step,
+        abstract_args=(a_params, a_opt, a_batch),
+        in_shardings=in_shardings,
+        donate_argnums=(0, 1),
+        note=note,
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells (shared step builders)
+# ---------------------------------------------------------------------------
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1_000_000),
+}
+
+
+def recsys_train_cell(
+    arch: str,
+    shape_id: str,
+    *,
+    init_fn,
+    loss_fn,
+    batch_specs: Dict[str, jax.ShapeDtypeStruct],
+    lr: float = 1e-2,
+    note: str = "",
+) -> CellSpec:
+    optimizer = Sgd(lr=lr)  # MLPerf DLRM trains embeddings with plain SGD
+
+    def step(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, _ = optimizer.apply(params, {}, grads)
+        return params, loss
+
+    a_params = abstract_like(init_fn, jax.random.PRNGKey(0))
+
+    def in_shardings(mesh: Mesh):
+        p_sh = shd.tree_shardings(a_params, shd.recsys_spec_fn(mesh), mesh)
+        b_sh = shd.recsys_batch_shardings(mesh, batch_specs)
+        return (p_sh, b_sh)
+
+    return CellSpec(
+        arch=arch,
+        shape_id=shape_id,
+        kind="train",
+        step_fn=step,
+        abstract_args=(a_params, batch_specs),
+        in_shardings=in_shardings,
+        donate_argnums=(0,),
+        note=note,
+    )
+
+
+def recsys_serve_cell(
+    arch: str,
+    shape_id: str,
+    *,
+    init_fn,
+    forward_fn,
+    batch_specs: Dict[str, jax.ShapeDtypeStruct],
+    kind: str = "serve",
+    note: str = "",
+) -> CellSpec:
+    a_params = abstract_like(init_fn, jax.random.PRNGKey(0))
+
+    def step(params, batch):
+        return forward_fn(params, batch)
+
+    def in_shardings(mesh: Mesh):
+        p_sh = shd.tree_shardings(a_params, shd.recsys_spec_fn(mesh), mesh)
+        b_sh = shd.recsys_batch_shardings(mesh, batch_specs)
+        return (p_sh, b_sh)
+
+    return CellSpec(
+        arch=arch,
+        shape_id=shape_id,
+        kind=kind,
+        step_fn=step,
+        abstract_args=(a_params, batch_specs),
+        in_shardings=in_shardings,
+        note=note,
+    )
+
+
+def streaming_topk_scores(
+    h: jax.Array,       # (B, d) user states
+    table: jax.Array,   # (V, d) item embeddings
+    *,
+    k: int = 100,
+    chunk: int = 65536,
+) -> Tuple[jax.Array, jax.Array]:
+    """Catalog-scale retrieval: score against the item table in chunks with a
+    running top-k merge, so peak memory is (B, chunk) instead of (B, V)."""
+    v = table.shape[0]
+    n_chunks = max(v // chunk, 1)
+
+    # Unrolled python loop (not lax.scan) so cost_analysis counts every
+    # chunk's matmul — while bodies are costed once per program, not per trip.
+    best_s = jnp.full((h.shape[0], k), -jnp.inf, h.dtype)
+    best_i = jnp.zeros((h.shape[0], k), jnp.int32)
+    for idx in range(n_chunks):
+        tab = jax.lax.dynamic_slice_in_dim(table, idx * chunk, chunk, axis=0)
+        scores = jnp.einsum("bd,cd->bc", h, tab)
+        ids = idx * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        cat_s = jnp.concatenate([best_s, scores], axis=1)
+        cat_i = jnp.concatenate(
+            [best_i, jnp.broadcast_to(ids[None], scores.shape).astype(jnp.int32)],
+            axis=1,
+        )
+        best_s, pos = jax.lax.top_k(cat_s, k)
+        best_i = jnp.take_along_axis(cat_i, pos, axis=1)
+    return best_s, best_i

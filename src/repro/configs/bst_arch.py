@@ -1,0 +1,86 @@
+"""bst [arXiv:1905.06874]: Behavior Sequence Transformer (Alibaba) —
+embed_dim 32, 20-item history + target, 1 block x 8 heads, MLP 1024-512-256.
+BST is a *ranking* model: retrieval_cand ranks 1M candidates through the
+full transformer+MLP (the honest serving cost)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models import recsys
+
+ARCH_ID = "bst"
+
+# n_items + 1 (padding row) = 2^20: catalog table row-shardable over 512 devs.
+CONFIG = recsys.BSTConfig(
+    name=ARCH_ID, n_items=1_048_575, embed_dim=32, seq_len=20, n_blocks=1,
+    n_heads=8, mlp_dims=(1024, 512, 256), n_profile=16,
+)
+
+
+def smoke_config() -> recsys.BSTConfig:
+    return recsys.BSTConfig(
+        name=ARCH_ID + "-smoke", n_items=500, embed_dim=16, seq_len=8,
+        n_blocks=1, n_heads=4, mlp_dims=(64, 32), n_profile=4,
+    )
+
+
+def _init(rng):
+    return recsys.init_bst_params(rng, CONFIG)
+
+
+def _batch_specs(batch: int):
+    return {
+        "hist": jax.ShapeDtypeStruct((batch, CONFIG.seq_len), jnp.int32),
+        "target": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "profile": jax.ShapeDtypeStruct((batch, CONFIG.n_profile), jnp.float32),
+        "label": jax.ShapeDtypeStruct((batch,), jnp.float32),
+    }
+
+
+def cells():
+    def train():
+        return base.recsys_train_cell(
+            ARCH_ID,
+            "train_batch",
+            init_fn=_init,
+            loss_fn=functools.partial(recsys.bst_loss, cfg=CONFIG),
+            batch_specs=_batch_specs(65536),
+        )
+
+    def serve(shape_id, batch):
+        def forward(params, b):
+            return recsys.bst_forward(
+                params, b["hist"], b["target"], b["profile"], CONFIG
+            )
+
+        return base.recsys_serve_cell(
+            ARCH_ID, shape_id, init_fn=_init, forward_fn=forward,
+            batch_specs=_batch_specs(batch),
+        )
+
+    def retrieval():
+        def forward(params, b):
+            c = b["cand_ids"].shape[0]
+            hist = jnp.broadcast_to(b["hist"], (c, CONFIG.seq_len))
+            profile = jnp.broadcast_to(b["profile"], (c, CONFIG.n_profile))
+            return recsys.bst_forward(params, hist, b["cand_ids"], profile, CONFIG)
+
+        specs = {
+            "hist": jax.ShapeDtypeStruct((1, CONFIG.seq_len), jnp.int32),
+            "profile": jax.ShapeDtypeStruct((1, CONFIG.n_profile), jnp.float32),
+            "cand_ids": jax.ShapeDtypeStruct((1_000_000,), jnp.int32),
+        }
+        return base.recsys_serve_cell(
+            ARCH_ID, "retrieval_cand", init_fn=_init, forward_fn=forward,
+            batch_specs=specs, kind="retrieval",
+            note="full-model ranking of 1M candidates (BST is a ranker)",
+        )
+
+    return {
+        "train_batch": train,
+        "serve_p99": lambda: serve("serve_p99", 512),
+        "serve_bulk": lambda: serve("serve_bulk", 262144),
+        "retrieval_cand": retrieval,
+    }

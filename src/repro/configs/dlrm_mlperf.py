@@ -1,0 +1,100 @@
+"""dlrm-mlperf [arXiv:1906.00091]: MLPerf DLRM (Criteo 1TB) — 13 dense /
+26 sparse fields, embed_dim 128, bot MLP 13-512-256-128, top MLP
+1024-1024-512-256-1, dot interaction.  The dot-interaction block runs the
+paper's pruned-factor path (embeddings masked by effective rank)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models import recsys
+
+ARCH_ID = "dlrm-mlperf"
+
+
+def _pad512(v: int) -> int:
+    """Round table rows up to a 512 multiple so every table row-shards over
+    the full device grid (hash spaces are arbitrary; MLPerf itself caps them)."""
+    return v + (-v) % 512
+
+
+CONFIG = recsys.DLRMConfig(
+    name=ARCH_ID,
+    vocab_sizes=tuple(
+        _pad512(v) if v >= 8192 else v for v in recsys.MLPERF_CRITEO_VOCABS
+    ),
+)
+PRUNE_T = 0.002  # tables init at vocab^-0.5 — thresholds live on that scale
+
+
+def smoke_config() -> recsys.DLRMConfig:
+    return recsys.DLRMConfig(
+        name=ARCH_ID + "-smoke",
+        n_dense=5,
+        embed_dim=16,
+        vocab_sizes=(50, 60, 70),
+        bot_mlp=(32, 16),
+        top_mlp=(32, 16, 1),
+    )
+
+
+def _init(rng):
+    return recsys.init_dlrm_params(rng, CONFIG)
+
+
+def _batch_specs(batch: int):
+    return {
+        "dense": jax.ShapeDtypeStruct((batch, CONFIG.n_dense), jnp.float32),
+        "sparse": jax.ShapeDtypeStruct((batch, CONFIG.n_sparse), jnp.int32),
+        "label": jax.ShapeDtypeStruct((batch,), jnp.float32),
+    }
+
+
+def cells():
+    def train():
+        return base.recsys_train_cell(
+            ARCH_ID,
+            "train_batch",
+            init_fn=_init,
+            loss_fn=functools.partial(recsys.dlrm_loss, cfg=CONFIG, t_v=PRUNE_T),
+            batch_specs=_batch_specs(65536),
+            note="MLPerf DLRM; embeddings row-sharded over the full device grid",
+        )
+
+    def serve(shape_id, batch):
+        def forward(params, b):
+            return recsys.dlrm_forward(params, b["dense"], b["sparse"], CONFIG, PRUNE_T)
+
+        return base.recsys_serve_cell(
+            ARCH_ID, shape_id, init_fn=_init, forward_fn=forward,
+            batch_specs=_batch_specs(batch),
+        )
+
+    def retrieval():
+        def forward(params, b):
+            return recsys.dlrm_retrieval(
+                params, b["dense"], b["sparse"], b["cand_ids"], CONFIG, PRUNE_T
+            )
+
+        specs = {
+            "dense": jax.ShapeDtypeStruct((1, CONFIG.n_dense), jnp.float32),
+            "sparse": jax.ShapeDtypeStruct((1, CONFIG.n_sparse), jnp.int32),
+            "cand_ids": jax.ShapeDtypeStruct((1_000_000,), jnp.int32),
+        }
+        return base.recsys_serve_cell(
+            ARCH_ID,
+            "retrieval_cand",
+            init_fn=_init,
+            forward_fn=forward,
+            batch_specs=specs,
+            kind="retrieval",
+            note="rank 1M candidates through the full interaction+top-MLP",
+        )
+
+    return {
+        "train_batch": train,
+        "serve_p99": lambda: serve("serve_p99", 512),
+        "serve_bulk": lambda: serve("serve_bulk", 262144),
+        "retrieval_cand": retrieval,
+    }

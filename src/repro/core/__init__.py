@@ -1,0 +1,40 @@
+"""The paper's contribution: dynamic pruning for accelerated MF."""
+from repro.core.mf import (  # noqa: F401
+    MFOptState,
+    MFParams,
+    eval_mae,
+    init_opt_state,
+    init_params,
+    predict_all_items,
+    predict_pairs,
+    train_step,
+)
+from repro.core.ranks import (  # noqa: F401
+    effective_ranks,
+    mask_rows,
+    pair_rank,
+    pruned_pair_dot,
+    rank_mask,
+    sparsity_per_dim,
+    work_fraction,
+)
+from repro.core.rearrange import (  # noqa: F401
+    apply_perm,
+    apply_perm_tree,
+    joint_sparsity,
+    rearrangement,
+)
+from repro.core.threshold import (  # noqa: F401
+    MatrixStats,
+    empirical_pruned_fraction,
+    measure_stats,
+    threshold_for_rate,
+    thresholds_from_matrices,
+)
+from repro.core.trainer import (  # noqa: F401
+    DPMFTrainer,
+    EpochRecord,
+    TrainConfig,
+    percentage_mae,
+    work_speedup,
+)

@@ -1,0 +1,510 @@
+"""MF model family: FunkSVD, BiasSVD, SVD++ with first-class dynamic pruning.
+
+The paper develops its method on FunkSVD and notes it applies unchanged to
+BiasSVD and SVD++ ("they have the same training process"); all three are
+implemented here behind one step function.  Pruning is always expressed
+through thresholds ``(t_p, t_q)`` — passing zeros disables it *numerically*
+(no factor satisfies ``|v| < 0``), so the dense baseline and the accelerated
+path share one code path and one compiled program.
+
+Conventions: ``p`` is (m, k) user-major, ``q`` is (n, k) item-major (the
+paper's ``Q_{k x n}`` transposed), biases are (rows, 1) so the row-optimizer
+API applies uniformly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ranks import effective_ranks, rank_mask
+from repro.kernels import ops as kops
+from repro.optim.optimizers import RowOptimizer
+
+Batch = Dict[str, jax.Array]
+
+
+class MFParams(NamedTuple):
+    p: jax.Array                       # (m, k)
+    q: jax.Array                       # (n, k)
+    user_bias: Optional[jax.Array]     # (m, 1) | None
+    item_bias: Optional[jax.Array]     # (n, 1) | None
+    global_mean: Optional[jax.Array]   # ()     | None
+    implicit: Optional[jax.Array]      # (n + 1, k) | None; row n is padding
+
+
+def init_params(
+    rng: jax.Array,
+    num_users: int,
+    num_items: int,
+    k: int,
+    *,
+    variant: str = "funk",          # funk | bias | svdpp
+    init_method: str = "normal",    # normal | uniform | libmf  (paper §5.3)
+    scale: float = 0.1,
+    global_mean: float = 0.0,
+    dtype=jnp.float32,
+) -> MFParams:
+    kp, kq, ky = jax.random.split(rng, 3)
+    if init_method == "normal":
+        p = scale * jax.random.normal(kp, (num_users, k), dtype)
+        q = scale * jax.random.normal(kq, (num_items, k), dtype)
+        y = scale * jax.random.normal(ky, (num_items + 1, k), dtype)
+    elif init_method == "uniform":
+        # Same std as the normal init so thresholds are comparable.
+        lim = scale * (3.0 ** 0.5)
+        p = jax.random.uniform(kp, (num_users, k), dtype, -lim, lim)
+        q = jax.random.uniform(kq, (num_items, k), dtype, -lim, lim)
+        y = jax.random.uniform(ky, (num_items + 1, k), dtype, -lim, lim)
+    elif init_method == "libmf":
+        # LibMF's non-negative init, U(0, 1/sqrt(k)).  The positive common
+        # component it induces is what concentrates significance in leading
+        # latent dims (the paper's Fig. 7 distributions have mu > 0, and
+        # Eq. 8 explicitly handles the asymmetric case) — the regime where
+        # dynamic pruning keeps P_MAE <= 20% (EXPERIMENTS.md §Repro).
+        lim = k ** -0.5
+        p = jax.random.uniform(kp, (num_users, k), dtype, 0.0, lim)
+        q = jax.random.uniform(kq, (num_items, k), dtype, 0.0, lim)
+        y = jax.random.uniform(ky, (num_items + 1, k), dtype, 0.0, lim)
+    else:
+        raise ValueError(f"unknown init {init_method!r}")
+
+    with_bias = variant in ("bias", "svdpp")
+    return MFParams(
+        p=p,
+        q=q,
+        user_bias=jnp.zeros((num_users, 1), dtype) if with_bias else None,
+        item_bias=jnp.zeros((num_items, 1), dtype) if with_bias else None,
+        global_mean=jnp.asarray(global_mean, dtype) if with_bias else None,
+        implicit=y.at[num_items].set(0.0) if variant == "svdpp" else None,
+    )
+
+
+def _user_vector(
+    params: MFParams, u: jax.Array, hist: Optional[jax.Array]
+) -> jax.Array:
+    """p_u, or SVD++'s p_u + |N(u)|^-1/2 * sum_{j in N(u)} y_j."""
+    p_rows = params.p[u]
+    if params.implicit is None or hist is None:
+        return p_rows
+    # hist: (B, H) item ids padded with num_items (the zero row of `implicit`).
+    n_items = params.implicit.shape[0] - 1
+    y_sum = jnp.sum(params.implicit[hist], axis=1)
+    counts = jnp.sum((hist < n_items).astype(jnp.float32), axis=1, keepdims=True)
+    return p_rows + y_sum * jax.lax.rsqrt(jnp.maximum(counts, 1.0))
+
+
+def predict_pairs(
+    params: MFParams,
+    u: jax.Array,
+    i: jax.Array,
+    t_p: jax.Array | float = 0.0,
+    t_q: jax.Array | float = 0.0,
+    hist: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Pruned predictions for (u, i) pairs.  Returns (pred, pair_ranks)."""
+    pu = _user_vector(params, u, hist)
+    qi = params.q[i]
+    r_u = effective_ranks(pu, t_p)
+    r_i = effective_ranks(qi, t_q)
+    k = pu.shape[-1]
+    mask = rank_mask(jnp.minimum(r_u, r_i), k)
+    pred = jnp.sum(pu.astype(jnp.float32) * qi.astype(jnp.float32) * mask, axis=-1)
+    if params.user_bias is not None:
+        pred = (
+            pred
+            + params.global_mean
+            + params.user_bias[u, 0]
+            + params.item_bias[i, 0]
+        )
+    return pred, jnp.minimum(r_u, r_i)
+
+
+def predict_all_items(
+    params: MFParams,
+    u: jax.Array,
+    t_p: jax.Array | float = 0.0,
+    t_q: jax.Array | float = 0.0,
+    *,
+    use_kernel: bool = True,
+    hist: Optional[jax.Array] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Serving / retrieval: score a user batch against *all* items.
+
+    This is the paper's "matrix multiplication" stage at recommendation time
+    and the hot path of the `retrieval_cand` shape — routed through the
+    tile-ragged Pallas kernel.
+    """
+    pu = _user_vector(params, u, hist)
+    r_u = effective_ranks(pu, t_p)
+    r_i = effective_ranks(params.q, t_q)
+    if use_kernel:
+        scores = kops.pruned_matmul(
+            pu, params.q, t_p, t_q, interpret=interpret
+        )
+    else:
+        from repro.kernels import ref
+
+        scores = ref.pruned_matmul_ref(pu, params.q, r_u, r_i)
+    if params.user_bias is not None:
+        scores = (
+            scores
+            + params.global_mean
+            + params.user_bias[u]
+            + params.item_bias[:, 0][None, :]
+        )
+    return scores
+
+
+class MFOptState(NamedTuple):
+    p: Dict[str, jax.Array]
+    q: Dict[str, jax.Array]
+    user_bias: Optional[Dict[str, jax.Array]]
+    item_bias: Optional[Dict[str, jax.Array]]
+    implicit: Optional[Dict[str, jax.Array]]
+
+
+def init_opt_state(params: MFParams, opt: RowOptimizer) -> MFOptState:
+    return MFOptState(
+        p=opt.init(params.p),
+        q=opt.init(params.q),
+        user_bias=None if params.user_bias is None else opt.init(params.user_bias),
+        item_bias=None if params.item_bias is None else opt.init(params.item_bias),
+        implicit=None if params.implicit is None else opt.init(params.implicit),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("opt", "lam", "use_fused_kernel", "interpret"),
+)
+def train_step(
+    params: MFParams,
+    opt_state: MFOptState,
+    batch: Batch,
+    t_p: jax.Array,
+    t_q: jax.Array,
+    lr: jax.Array,
+    dim_mask: jax.Array,  # (k,) twin-learners / strategy mask
+    *,
+    opt: RowOptimizer,
+    lam: float,
+    use_fused_kernel: bool = False,
+    interpret: Optional[bool] = None,
+) -> Tuple[MFParams, MFOptState, Dict[str, jax.Array]]:
+    """One minibatched, dynamically-pruned MF update (Algs. 2 + 3).
+
+    ``use_fused_kernel`` routes the plain-SGD FunkSVD case through the fused
+    Pallas kernel; every other (variant, optimizer) combination uses the
+    masked XLA formulation with identical semantics.  Duplicate (u, i) rows in
+    a batch accumulate additively (scatter-add), the standard minibatch
+    relaxation of the paper's sequential SGD.
+    """
+    u, i, r = batch["user"], batch["item"], batch["rating"].astype(jnp.float32)
+    hist = batch.get("hist")
+    k = params.p.shape[-1]
+
+    pu = _user_vector(params, u, hist)
+    qi = params.q[i]
+    r_u = effective_ranks(pu, t_p)
+    r_i = effective_ranks(qi, t_q)
+    pair_ranks = jnp.minimum(r_u, r_i)
+    mask = rank_mask(pair_ranks, k) * dim_mask[None, :]
+
+    fused_ok = (
+        use_fused_kernel
+        and opt.name == "sgd"
+        and params.user_bias is None
+        and params.implicit is None
+    )
+    if fused_ok:
+        new_pu, new_qi, err = kops.fused_mf_sgd(
+            params.p[u],
+            qi,
+            r,
+            t_p,
+            t_q,
+            lr=1.0,  # lr folded below so it can stay a traced array
+            lam=lam,
+            interpret=interpret,
+        )
+        # kernel computed rows at lr=1; rescale the delta by the traced lr and
+        # the strategy mask, then scatter-add (duplicate-safe).
+        dp = (new_pu - params.p[u]) * lr * dim_mask[None, :]
+        dq = (new_qi - qi) * lr * dim_mask[None, :]
+        new_params = params._replace(
+            p=params.p.at[u].add(dp.astype(params.p.dtype)),
+            q=params.q.at[i].add(dq.astype(params.q.dtype)),
+        )
+        metrics = {
+            "abs_err": jnp.mean(jnp.abs(err)),
+            "work_fraction": jnp.mean(pair_ranks.astype(jnp.float32)) / k,
+        }
+        return new_params, opt_state, metrics
+
+    pred = jnp.sum(pu.astype(jnp.float32) * qi.astype(jnp.float32) * mask, axis=-1)
+    if params.user_bias is not None:
+        pred = (
+            pred
+            + params.global_mean
+            + params.user_bias[u, 0]
+            + params.item_bias[i, 0]
+        )
+    err = r - pred
+
+    # Gradients of 0.5*err^2 + 0.5*lam*||.||^2 wrt the gathered rows; the
+    # paper's update p += lr*(err*q - lam*p) is descent on exactly this.
+    g_p = (lam * pu - err[:, None] * qi).astype(jnp.float32)
+    g_q = (lam * qi - err[:, None] * pu).astype(jnp.float32)
+
+    new_p, st_p = opt.apply_rows(params.p, opt_state.p, u, g_p, mask, lr)
+    new_q, st_q = opt.apply_rows(params.q, opt_state.q, i, g_q, mask, lr)
+    new_params = params._replace(p=new_p, q=new_q)
+    new_state = opt_state._replace(p=st_p, q=st_q)
+
+    if params.user_bias is not None:
+        ones = jnp.ones((u.shape[0], 1), jnp.float32)
+        g_bu = (lam * params.user_bias[u] - err[:, None]).astype(jnp.float32)
+        g_bi = (lam * params.item_bias[i] - err[:, None]).astype(jnp.float32)
+        new_bu, st_bu = opt.apply_rows(
+            params.user_bias, opt_state.user_bias, u, g_bu, ones, lr
+        )
+        new_bi, st_bi = opt.apply_rows(
+            params.item_bias, opt_state.item_bias, i, g_bi, ones, lr
+        )
+        new_params = new_params._replace(user_bias=new_bu, item_bias=new_bi)
+        new_state = new_state._replace(user_bias=st_bu, item_bias=st_bi)
+
+    if params.implicit is not None and hist is not None:
+        # dL/dy_j = -err * q_i / sqrt(|N(u)|) for each j in N(u), masked.
+        n_items = params.implicit.shape[0] - 1
+        counts = jnp.sum((hist < n_items).astype(jnp.float32), axis=1, keepdims=True)
+        coef = err[:, None] * jax.lax.rsqrt(jnp.maximum(counts, 1.0))
+        g_y = -(coef[:, None, :] * (qi * mask)[:, None, :]) * jnp.ones(
+            (1, hist.shape[1], 1), jnp.float32
+        )
+        g_y = g_y + lam * params.implicit[hist]
+        flat_idx = hist.reshape(-1)
+        flat_g = g_y.reshape(-1, k)
+        flat_mask = jnp.repeat(mask, hist.shape[1], axis=0) * (
+            flat_idx < n_items
+        ).astype(jnp.float32)[:, None]
+        new_y, st_y = opt.apply_rows(
+            params.implicit, opt_state.implicit, flat_idx, flat_g, flat_mask, lr
+        )
+        new_y = new_y.at[n_items].set(0.0)  # keep the padding row inert
+        new_params = new_params._replace(implicit=new_y)
+        new_state = new_state._replace(implicit=st_y)
+
+    metrics = {
+        "abs_err": jnp.mean(jnp.abs(err)),
+        "work_fraction": jnp.mean(pair_ranks.astype(jnp.float32)) / k,
+    }
+    return new_params, new_state, metrics
+
+
+@jax.jit
+def eval_mae(
+    params: MFParams,
+    batch: Batch,
+    t_p: jax.Array,
+    t_q: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sum |err| and count over a (possibly weight-masked) eval batch."""
+    pred, _ = predict_pairs(
+        params, batch["user"], batch["item"], t_p, t_q, batch.get("hist")
+    )
+    w = batch.get("weight", jnp.ones_like(pred))
+    abs_err = jnp.abs(batch["rating"].astype(jnp.float32) - pred) * w
+    return jnp.sum(abs_err), jnp.sum(w)
+
+
+# ---------------------------------------------------------------------------
+# Owner-compute distributed step (§Perf iteration for the paper's model)
+# ---------------------------------------------------------------------------
+
+
+def train_step_shard_map(
+    params: MFParams,
+    opt_state: MFOptState,
+    batch: Batch,
+    t_p: jax.Array,
+    t_q: jax.Array,
+    *,
+    lr: float,
+    lam: float,
+    opt_name: str = "adagrad",
+    eps: float = 1e-8,
+    compress_grads: bool = False,
+    mesh=None,
+) -> Tuple[MFParams, MFOptState, Dict[str, jax.Array]]:
+    """DP-MF minibatch step with owner-compute collectives (FunkSVD only).
+
+    The XLA-SPMD lowering of :func:`train_step` all-reduces the gathered
+    (B, k) item rows *and* the full (n, k) item-gradient scatter across the
+    mesh (~7 GB/device/step at the dpmf train_1m shape).  This formulation
+    exploits the sharding contract instead:
+
+      * user rows P are sharded over the data axes; the data pipeline routes
+        each rating to its user's shard (standard row-wise sharding), so all
+        P traffic is local;
+      * item rows Q are sharded over "model"; each model rank computes the
+        *partial* masked dot for the ratings whose item it owns (other ranks
+        contribute exact zeros, because a zero row has effective rank 0);
+      * ONE psum of the (B_loc,) partial predictions and ONE psum of the
+        (B_loc, k) masked p-deltas cross the links; the q update never
+        leaves its owner.
+
+    ``compress_grads`` additionally int8-quantizes the p-gradient psum and
+    the q-delta all-gather payloads (4x fewer bytes on the dominant
+    collectives; per-tensor scales psum'd alongside).  Quantization error is
+    bounded by scale/2 per element; for long runs pair with error feedback
+    at the driver (distributed/compression.py).
+
+    Collectives drop from O(n*k + B*k) all-reduce bytes to O(B_loc*k) —
+    measured in EXPERIMENTS.md §Perf.  Semantics are identical to
+    :func:`train_step` (same masked Alg. 2/3 math; duplicate rows accumulate).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    if mesh is None:
+        mesh = jax.sharding.get_abstract_mesh()
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    n_model = mesh.shape["model"]
+    m_loc = params.p.shape[0] // n_dp
+    n_loc = params.q.shape[0] // n_model
+    k = params.p.shape[1]
+    adagrad = opt_name == "adagrad"
+
+    def body(p_blk, q_blk, acc_p, acc_q, u, i, r, t_p, t_q):
+        # block-local coordinates
+        dp_idx = jnp.int32(0)
+        stride = 1
+        for a in reversed(dp):
+            dp_idx = dp_idx + jax.lax.axis_index(a) * stride
+            stride *= mesh.shape[a]
+        u_loc = u - dp_idx * m_loc          # pipeline guarantees ownership
+        m_idx = jax.lax.axis_index("model")
+        off_i = m_idx * n_loc
+        is_local = (i >= off_i) & (i < off_i + n_loc)
+        i_loc = jnp.clip(i - off_i, 0, n_loc - 1)
+
+        p_rows = p_blk[u_loc].astype(jnp.float32)          # (B_loc, k)
+        q_rows = jnp.where(
+            is_local[:, None], q_blk[i_loc].astype(jnp.float32), 0.0
+        )
+
+        r_u = effective_ranks(p_rows, t_p)
+        r_i = effective_ranks(q_rows, t_q)  # 0 on non-owners (zero rows)
+        mask_p = rank_mask(r_u, k)
+        mask_q = rank_mask(r_i, k)
+        pair_mask = mask_p * mask_q
+
+        # Everything is gated by ownership: at t_q == 0 a zero (non-owner)
+        # row has effective rank k, so relying on rank-masking alone would
+        # multiply the lambda term by n_model through the psum.
+        own = is_local[:, None].astype(jnp.float32)
+        pred = jax.lax.psum(
+            jnp.sum(p_rows * q_rows * pair_mask, axis=-1) * is_local, "model"
+        )
+        err = r.astype(jnp.float32) - pred
+
+        # p gradient: assembled on the item owner (it holds q), then one psum.
+        # Both gradients carry the full pair mask (Alg. 3 truncates the
+        # entire update at min(r_u, r_i)), matching train_step exactly.
+        g_p_partial = own * pair_mask * (lam * p_rows - err[:, None] * q_rows)
+        if compress_grads:
+            from repro.distributed.compression import compressed_psum
+
+            g_p = compressed_psum(g_p_partial, "model")
+        else:
+            g_p = jax.lax.psum(g_p_partial, "model")
+        g_q = own * pair_mask * (lam * q_rows - err[:, None] * p_rows)
+        safe_i = jnp.where(is_local, i_loc, 0)
+
+        if adagrad:
+            acc_p_rows = acc_p[u_loc] + g_p * g_p
+            dp_rows = -lr * g_p / jnp.sqrt(acc_p_rows + eps)
+            acc_p = acc_p.at[u_loc].add(g_p * g_p)
+            acc_q_rows = acc_q[safe_i] + g_q * g_q
+            dq_rows = jnp.where(
+                is_local[:, None], -lr * g_q / jnp.sqrt(acc_q_rows + eps), 0.0
+            )
+        else:  # plain SGD
+            dp_rows = -lr * g_p
+            dq_rows = -lr * g_q
+
+        p_blk = p_blk.at[u_loc].add(dp_rows.astype(p_blk.dtype))
+
+        # Q is replicated along the data axes, but each data shard computed
+        # deltas only for ITS ratings: all-gather the sparse (B_loc, k) delta
+        # rows (+ indices, + adagrad g^2) so every replica applies the same
+        # total update.  This moves B*k delta floats instead of the dense
+        # (n, k) gradient all-reduce XLA emits for train_step.
+        if dp:
+            if compress_grads:
+                from repro.distributed.compression import (
+                    dequantize_int8,
+                    quantize_int8,
+                )
+
+                q8, scale = quantize_int8(dq_rows)
+                gat_q8 = jax.lax.all_gather(q8, dp)
+                gat_scale = jax.lax.all_gather(scale, dp)
+                gat_dq = dequantize_int8(
+                    gat_q8, gat_scale.reshape((-1,) + (1,) * q8.ndim)
+                ).reshape(-1, k)
+            else:
+                gat_dq = jax.lax.all_gather(dq_rows, dp).reshape(-1, k)
+            gat_idx = jax.lax.all_gather(safe_i, dp).reshape(-1)
+            q_blk = q_blk.at[gat_idx].add(gat_dq.astype(q_blk.dtype))
+            if adagrad:
+                gat_g2 = jax.lax.all_gather(g_q * g_q, dp).reshape(-1, k)
+                acc_q = acc_q.at[gat_idx].add(gat_g2)
+        else:
+            q_blk = q_blk.at[safe_i].add(dq_rows.astype(q_blk.dtype))
+            if adagrad:
+                acc_q = acc_q.at[safe_i].add(g_q * g_q)
+
+        abs_err = jax.lax.pmean(jnp.mean(jnp.abs(err)), dp + ("model",))
+        r_i_owner = jax.lax.psum(r_i * is_local, "model")
+        work = jax.lax.pmean(
+            jnp.mean(jnp.minimum(r_u, r_i_owner).astype(jnp.float32)) / k,
+            dp + ("model",),
+        )
+        return p_blk, q_blk, acc_p, acc_q, abs_err[None], work[None]
+
+    acc_p_in = opt_state.p.get("acc") if adagrad else params.p
+    acc_q_in = opt_state.q.get("acc") if adagrad else params.q
+
+    new_p, new_q, acc_p, acc_q, abs_err, work = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(dp, None), P("model", None), P(dp, None), P("model", None),
+            P(dp), P(dp), P(dp), P(), P(),
+        ),
+        out_specs=(
+            P(dp, None), P("model", None), P(dp, None), P("model", None),
+            P(None), P(None),
+        ),
+        check_vma=False,
+    )(
+        params.p, params.q, acc_p_in, acc_q_in,
+        batch["user"], batch["item"], batch["rating"].astype(jnp.float32),
+        jnp.asarray(t_p, jnp.float32), jnp.asarray(t_q, jnp.float32),
+    )
+    new_params = params._replace(p=new_p, q=new_q)
+    new_state = (
+        opt_state._replace(p={"acc": acc_p}, q={"acc": acc_q})
+        if adagrad
+        else opt_state
+    )
+    metrics = {"abs_err": abs_err[0], "work_fraction": work[0]}
+    return new_params, new_state, metrics

@@ -1,0 +1,81 @@
+"""Effective ranks: the vectorized form of the paper's early stopping.
+
+Algorithms 2/3 scan ``t = 1..k`` and break at the first ``t`` with
+``|p_{u,t}| < T_p`` or ``|q_{t,i}| < T_q``.  Define
+
+    r_u = first insignificant index of row u (k if none)
+    r_i = first insignificant index of row i (k if none)
+
+Then the early-stopped dot product is exactly ``sum_{t < min(r_u, r_i)}``
+and the early-stopped update touches exactly ``t < min(r_u, r_i)``.  All
+pruned paths in this codebase are expressed through these ranks; the
+equivalence with the scalar loop is property-tested.
+
+Ranks are *dynamic*: they are recomputed from the current factor values at
+every use site (per batch for training, per call for serving), matching the
+paper's "dynamically performed based on the actual sparsity ... of certain
+epochs".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def effective_ranks(rows: jax.Array, threshold: jax.Array) -> jax.Array:
+    """First-insignificant index per row of ``rows`` (…, k) -> (…,) int32.
+
+    ``threshold == 0`` disables pruning (no ``|v| < 0``): all ranks are k.
+    """
+    insig = jnp.abs(rows) < threshold
+    first = jnp.argmax(insig, axis=-1).astype(jnp.int32)
+    any_insig = jnp.any(insig, axis=-1)
+    k = rows.shape[-1]
+    return jnp.where(any_insig, first, jnp.int32(k))
+
+
+def pair_rank(r_u: jax.Array, r_i: jax.Array) -> jax.Array:
+    """k_eff(u, i) — broadcastable min of the two ranks."""
+    return jnp.minimum(r_u, r_i)
+
+
+def rank_mask(ranks: jax.Array, k: int, dtype=jnp.float32) -> jax.Array:
+    """(…,) ranks -> (…, k) 0/1 mask selecting the computed prefix."""
+    iota = jnp.arange(k, dtype=jnp.int32)
+    return (iota < ranks[..., None]).astype(dtype)
+
+
+def mask_rows(rows: jax.Array, threshold: jax.Array) -> jax.Array:
+    """Zero the suffix starting at each row's first insignificant factor.
+
+    Note this is *not* ``where(|rows| < T, 0, rows)``: significant factors
+    sitting after the first insignificant one are zeroed too, exactly as the
+    paper's ``break`` skips them.
+    """
+    r = effective_ranks(rows, threshold)
+    return rows * rank_mask(r, rows.shape[-1], rows.dtype)
+
+
+def pruned_pair_dot(
+    p_rows: jax.Array,
+    q_rows: jax.Array,
+    t_p: jax.Array,
+    t_q: jax.Array,
+) -> jax.Array:
+    """Batched Alg. 2: early-stopped dot of paired rows (B, k) x (B, k) -> (B,).
+
+    Masking each operand by its own rank makes every term with
+    ``t >= min(r_u, r_i)`` vanish, reproducing the break exactly.
+    """
+    return jnp.sum(mask_rows(p_rows, t_p) * mask_rows(q_rows, t_q), axis=-1)
+
+
+def work_fraction(r_u: jax.Array, r_i: jax.Array, k: int) -> jax.Array:
+    """Fraction of the dense k-MACs actually executed for a batch of pairs —
+    the work-proportional speedup denominator reported in EXPERIMENTS.md."""
+    return jnp.mean(pair_rank(r_u, r_i).astype(jnp.float32)) / float(k)
+
+
+def sparsity_per_dim(matrix: jax.Array, threshold: jax.Array) -> jax.Array:
+    """Per-latent-dim insignificance fraction (paper Figs. 3/5/8)."""
+    return jnp.mean((jnp.abs(matrix) < threshold).astype(jnp.float32), axis=0)

@@ -1,0 +1,96 @@
+"""Threshold determination for dynamic pruning (paper §4.2, Eqs. 7/8, Appendix).
+
+Given a target pruning rate ``p`` and the empirical (mu, sigma) of a feature
+matrix measured after the first training epoch, find ``T > 0`` such that a
+fraction ``p`` of latent factors fall in ``(-T, T)`` under the fitted normal:
+
+    phi(x) - phi(-x - 2*mu/sigma) = p        (Eq. 8)
+    T = sigma * x + mu                       (Eq. 7)
+
+The paper looks ``x`` up in a standard-normal table; we solve the same
+monotonic equation by bisection under ``jit``.  The solve runs once per
+training job (after epoch 1), so a fixed 64-step bisection is both exact to
+float precision and free in the schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.stats import norm
+
+
+class MatrixStats(NamedTuple):
+    """Empirical normal fit of one feature matrix."""
+
+    mu: jax.Array
+    sigma: jax.Array
+
+
+def measure_stats(matrix: jax.Array) -> MatrixStats:
+    """Fit N(mu, sigma^2) to all latent factors of ``matrix`` (paper Fig. 7)."""
+    m = matrix.astype(jnp.float32)
+    mu = jnp.mean(m)
+    sigma = jnp.std(m)
+    return MatrixStats(mu=mu, sigma=sigma)
+
+
+def _pruned_fraction(x: jax.Array, mu: jax.Array, sigma: jax.Array) -> jax.Array:
+    """LHS of Eq. 8: mass of N(0,1) in (-x - 2*mu/sigma, x)."""
+    return norm.cdf(x) - norm.cdf(-x - 2.0 * mu / sigma)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters",))
+def solve_x(
+    mu: jax.Array, sigma: jax.Array, rate: jax.Array, num_iters: int = 64
+) -> jax.Array:
+    """Solve Eq. 8 for ``x`` by bisection.
+
+    ``_pruned_fraction`` is monotonically increasing in ``x`` (both CDF terms
+    move mass into the interval), zero at ``x = -mu/sigma`` (empty interval)
+    and -> 1 as x -> inf, so bisection on ``[-mu/sigma, hi]`` always brackets.
+    """
+    mu = jnp.asarray(mu, jnp.float32)
+    sigma = jnp.asarray(sigma, jnp.float32)
+    rate = jnp.clip(jnp.asarray(rate, jnp.float32), 0.0, 1.0 - 1e-6)
+
+    lo = -mu / sigma  # T = 0: nothing pruned
+    hi = jnp.maximum(-mu / sigma, 0.0) + 16.0  # phi saturates far before 16 sigma
+
+    def body(_, bounds):
+        lo, hi = bounds
+        mid = 0.5 * (lo + hi)
+        frac = _pruned_fraction(mid, mu, sigma)
+        too_low = frac < rate
+        return (jnp.where(too_low, mid, lo), jnp.where(too_low, hi, mid))
+
+    lo, hi = jax.lax.fori_loop(0, num_iters, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+def threshold_for_rate(stats: MatrixStats, rate: float | jax.Array) -> jax.Array:
+    """Eq. 7: ``T = sigma * x + mu`` with ``x`` from :func:`solve_x`.
+
+    ``rate == 0`` maps to ``T == 0`` (no factor satisfies ``|v| < 0``), i.e.
+    pruning disabled, matching the paper's baseline ("pruning rate as 0, so
+    that no latent factors are eliminated").
+    """
+    x = solve_x(stats.mu, stats.sigma, rate)
+    t = stats.sigma * x + stats.mu
+    return jnp.maximum(t, 0.0)
+
+
+def thresholds_from_matrices(
+    p_matrix: jax.Array, q_matrix: jax.Array, rate: float | jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-matrix thresholds (T_p, T_q) measured once after the first epoch."""
+    t_p = threshold_for_rate(measure_stats(p_matrix), rate)
+    t_q = threshold_for_rate(measure_stats(q_matrix), rate)
+    return t_p, t_q
+
+
+def empirical_pruned_fraction(matrix: jax.Array, threshold: jax.Array) -> jax.Array:
+    """Measured fraction of insignificant factors — validates Eq. 8's fit."""
+    return jnp.mean((jnp.abs(matrix) < threshold).astype(jnp.float32))

@@ -1,0 +1,307 @@
+"""DP-MF training driver — the paper's overall procedure (Figs. 6 & 10).
+
+Schedule:
+  epoch 1   : standard (unpruned) training — thresholds don't exist yet
+  after ep 1: measure (mu, sigma) of P and Q  -> T_p, T_q   (§4.2, once)
+              rearrange latent axis by joint sparsity        (§4.3, once)
+  epoch 2.. : dynamically pruned training                    (§4.4, per batch)
+
+The dense baseline is the same driver with ``pruning_rate = 0`` (thresholds
+collapse to 0 and every mask is all-ones — one code path, as in the paper's
+"runtime of the conventional training process is measured by setting the
+pruning rate as 0").
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt_lib
+from repro.core import mf, rearrange, threshold
+from repro.data import loader
+from repro.data.ratings import RatingsDataset, build_user_history
+from repro.optim.optimizers import RowOptimizer
+from repro.optim.schedules import twin_learners_mask
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    k: int = 50
+    epochs: int = 15
+    batch_size: int = 4096
+    lr: float = 0.05
+    lam: float = 0.02
+    pruning_rate: float = 0.0          # 0 disables pruning (dense baseline)
+    optimizer: str = "adagrad"         # LibMF's default, as in the paper
+    strategy: str = "standard"         # standard | twin  (paper §5.3)
+    init_method: str = "normal"        # normal | uniform (paper §5.3)
+    variant: str = "funk"              # funk | bias | svdpp
+    use_fused_kernel: bool = False     # Pallas path (interpret mode on CPU)
+    seed: int = 0
+    eval_batch_size: int = 8192
+    max_hist: int = 32                 # svd++ implicit history length
+    rearrange: bool = True             # Alg. 1; False = ablation (§Repro)
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every_epochs: int = 0   # 0 = only final
+    keep_checkpoints: int = 3
+
+
+@dataclasses.dataclass
+class EpochRecord:
+    epoch: int
+    wall_time_s: float
+    train_abs_err: float
+    test_mae: float
+    work_fraction: float   # mean k_eff / k — the work-proportional cost
+    t_p: float
+    t_q: float
+
+
+class DPMFTrainer:
+    """End-to-end trainer implementing the paper + checkpoint/restart."""
+
+    def __init__(
+        self,
+        config: TrainConfig,
+        train_ds: RatingsDataset,
+        test_ds: Optional[RatingsDataset] = None,
+    ):
+        self.config = config
+        self.train_ds = train_ds
+        self.test_ds = test_ds
+        self.opt = RowOptimizer(name=config.optimizer)
+        self.hist = (
+            build_user_history(train_ds, config.max_hist)
+            if config.variant == "svdpp"
+            else None
+        )
+
+        rng = jax.random.PRNGKey(config.seed)
+        self.params = mf.init_params(
+            rng,
+            train_ds.num_users,
+            train_ds.num_items,
+            config.k,
+            variant=config.variant,
+            init_method=config.init_method,
+            global_mean=train_ds.global_mean,
+        )
+        self.opt_state = mf.init_opt_state(self.params, self.opt)
+        self.t_p = jnp.float32(0.0)
+        self.t_q = jnp.float32(0.0)
+        self.perm: Optional[jax.Array] = None
+        self.epoch = 0
+        self.history: List[EpochRecord] = []
+        self._ckpt = (
+            ckpt_lib.AsyncCheckpointer(
+                config.checkpoint_dir, keep=config.keep_checkpoints
+            )
+            if config.checkpoint_dir
+            else None
+        )
+
+    # -- checkpoint/restart ------------------------------------------------
+    def _state_tree(self) -> Dict[str, Any]:
+        return {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "t_p": self.t_p,
+            "t_q": self.t_q,
+            "perm": self.perm if self.perm is not None else jnp.arange(
+                self.config.k, dtype=jnp.int32
+            ),
+        }
+
+    def save(self, step: int) -> None:
+        if self._ckpt is None:
+            return
+        self._ckpt.save(
+            step,
+            self._state_tree(),
+            metadata={
+                "epoch": self.epoch,
+                "seed": self.config.seed,
+                "pruning_rate": self.config.pruning_rate,
+            },
+        )
+
+    def maybe_restore(self) -> bool:
+        if self.config.checkpoint_dir is None:
+            return False
+        if ckpt_lib.latest_step(self.config.checkpoint_dir) is None:
+            return False
+        tree, meta = ckpt_lib.restore(self.config.checkpoint_dir, self._state_tree())
+        self.params = tree["params"]
+        self.opt_state = tree["opt_state"]
+        self.t_p = jnp.asarray(tree["t_p"], jnp.float32)
+        self.t_q = jnp.asarray(tree["t_q"], jnp.float32)
+        self.perm = tree["perm"]
+        self.epoch = int(meta["epoch"])
+        return True
+
+    # -- the paper's one-time calibration (after epoch 1) -------------------
+    def calibrate(self) -> None:
+        cfg = self.config
+        if cfg.pruning_rate <= 0.0:
+            return
+        self.t_p, self.t_q = threshold.thresholds_from_matrices(
+            self.params.p, self.params.q, cfg.pruning_rate
+        )
+        if not cfg.rearrange:  # ablation: prune without Algorithm 1
+            self.perm = jnp.arange(cfg.k, dtype=jnp.int32)
+            return
+        result = rearrange.rearrangement(
+            self.params.p, self.params.q, self.t_p, self.t_q
+        )
+        self.perm = result.perm
+        new_p, new_q = rearrange.apply_perm(self.params.p, self.params.q, self.perm)
+        self.params = self.params._replace(p=new_p, q=new_q)
+        if self.params.implicit is not None:
+            self.params = self.params._replace(
+                implicit=jnp.take(self.params.implicit, self.perm, axis=1)
+            )
+        # Keep optimizer accumulators aligned with the permuted latent axis.
+        def permute_state(state):
+            return {
+                key: (
+                    jnp.take(value, self.perm, axis=1)
+                    if getattr(value, "ndim", 0) == 2
+                    and value.shape[1] == self.config.k
+                    else value
+                )
+                for key, value in state.items()
+            }
+
+        self.opt_state = self.opt_state._replace(
+            p=permute_state(self.opt_state.p),
+            q=permute_state(self.opt_state.q),
+            implicit=(
+                None
+                if self.opt_state.implicit is None
+                else permute_state(self.opt_state.implicit)
+            ),
+        )
+
+    # -- epochs --------------------------------------------------------------
+    def run_epoch(self) -> EpochRecord:
+        cfg = self.config
+        pruning_active = cfg.pruning_rate > 0.0 and self.epoch >= 1
+        t_p = self.t_p if pruning_active else jnp.float32(0.0)
+        t_q = self.t_q if pruning_active else jnp.float32(0.0)
+        dim_mask = (
+            twin_learners_mask(cfg.k, self.epoch)
+            if cfg.strategy == "twin"
+            else jnp.ones((cfg.k,), jnp.float32)
+        )
+        lr = jnp.float32(cfg.lr)
+
+        abs_err_sum = 0.0
+        work_sum = 0.0
+        steps = 0
+        start = time.perf_counter()
+        for batch_np in loader.iterate_batches(
+            self.train_ds,
+            cfg.batch_size,
+            seed=cfg.seed,
+            epoch=self.epoch,
+            hist=self.hist,
+        ):
+            batch = {key: jnp.asarray(value) for key, value in batch_np.items()}
+            self.params, self.opt_state, metrics = mf.train_step(
+                self.params,
+                self.opt_state,
+                batch,
+                t_p,
+                t_q,
+                lr,
+                dim_mask,
+                opt=self.opt,
+                lam=cfg.lam,
+                use_fused_kernel=cfg.use_fused_kernel,
+            )
+            abs_err_sum += float(metrics["abs_err"])
+            work_sum += float(metrics["work_fraction"])
+            steps += 1
+        jax.block_until_ready(self.params.p)
+        wall = time.perf_counter() - start
+
+        test_mae = self.evaluate(t_p, t_q) if self.test_ds is not None else float("nan")
+        record = EpochRecord(
+            epoch=self.epoch,
+            wall_time_s=wall,
+            train_abs_err=abs_err_sum / max(steps, 1),
+            test_mae=test_mae,
+            work_fraction=work_sum / max(steps, 1),
+            t_p=float(t_p),
+            t_q=float(t_q),
+        )
+        self.history.append(record)
+
+        if self.epoch == 0:
+            self.calibrate()  # paper: once, right after the first epoch
+        self.epoch += 1
+        if (
+            self._ckpt is not None
+            and cfg.checkpoint_every_epochs
+            and self.epoch % cfg.checkpoint_every_epochs == 0
+        ):
+            self.save(self.epoch)
+        return record
+
+    def run(self) -> List[EpochRecord]:
+        start_epoch = self.epoch
+        for _ in range(start_epoch, self.config.epochs):
+            self.run_epoch()
+        if self._ckpt is not None:
+            self.save(self.epoch)
+            self._ckpt.wait()
+        return self.history
+
+    def evaluate(self, t_p=None, t_q=None) -> float:
+        """Test MAE (Eq. 12) with the current pruning thresholds."""
+        if self.test_ds is None:
+            return float("nan")
+        t_p = self.t_p if t_p is None else t_p
+        t_q = self.t_q if t_q is None else t_q
+        total, count = 0.0, 0.0
+        hist = self.hist
+        for batch_np in loader.iterate_batches(
+            self.test_ds,
+            self.config.eval_batch_size,
+            shuffle=False,
+            drop_remainder=False,
+            hist=hist,
+        ):
+            batch = {key: jnp.asarray(value) for key, value in batch_np.items()}
+            s, c = mf.eval_mae(self.params, batch, t_p, t_q)
+            total += float(s)
+            count += float(c)
+        return total / max(count, 1.0)
+
+    # -- summary metrics matching the paper's Eqs. 12-14 ---------------------
+    def total_train_time(self) -> float:
+        return sum(r.wall_time_s for r in self.history)
+
+    def mean_work_fraction(self) -> float:
+        pruned = [r.work_fraction for r in self.history if r.epoch >= 1]
+        return float(np.mean(pruned)) if pruned else 1.0
+
+
+def percentage_mae(mae_accelerated: float, mae_original: float) -> float:
+    """Eq. 13."""
+    return (mae_accelerated - mae_original) / mae_original * 100.0
+
+
+def work_speedup(history: List[EpochRecord]) -> float:
+    """Work-proportional speedup: dense MACs / executed MACs over the whole
+    run (epoch 1 is always dense, as in the paper)."""
+    total = len(history)
+    if total == 0:
+        return 1.0
+    executed = sum(r.work_fraction for r in history)
+    return total / max(executed, 1e-9)

@@ -1,0 +1,9 @@
+from repro.data.loader import iterate_batches, num_steps  # noqa: F401
+from repro.data.ratings import (  # noqa: F401
+    RatingsDataset,
+    build_user_history,
+    load_csv,
+    paper_dataset,
+    synthetic_ratings,
+    train_test_split,
+)

@@ -1,0 +1,59 @@
+"""Deterministic, resumable batch iteration.
+
+Shuffle order is a pure function of (seed, epoch), so a job restored from a
+checkpoint at (epoch, step) replays the identical data order — the property
+fault-tolerant restarts depend on (tests/test_checkpoint.py exercises it).
+Batches are fixed-shape (pad-with-weight for eval, drop-remainder for train)
+so a single compiled step serves the whole epoch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.data.ratings import RatingsDataset
+
+
+def epoch_permutation(n: int, seed: int, epoch: int) -> np.ndarray:
+    rng = np.random.default_rng(np.random.SeedSequence([seed, epoch]))
+    return rng.permutation(n)
+
+
+def iterate_batches(
+    ds: RatingsDataset,
+    batch_size: int,
+    *,
+    seed: int = 0,
+    epoch: int = 0,
+    shuffle: bool = True,
+    drop_remainder: bool = True,
+    start_step: int = 0,
+    hist: Optional[np.ndarray] = None,
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Yield fixed-shape batches; resume mid-epoch with ``start_step``."""
+    n = len(ds)
+    order = epoch_permutation(n, seed, epoch) if shuffle else np.arange(n)
+    num_full = n // batch_size
+    steps = num_full if drop_remainder else -(-n // batch_size)
+    for step in range(start_step, steps):
+        idx = order[step * batch_size : (step + 1) * batch_size]
+        weight = np.ones(batch_size, np.float32)
+        if idx.shape[0] < batch_size:  # padded tail (eval only)
+            pad = batch_size - idx.shape[0]
+            weight[idx.shape[0]:] = 0.0
+            idx = np.concatenate([idx, np.zeros(pad, idx.dtype)])
+        batch = {
+            "user": ds.user[idx],
+            "item": ds.item[idx],
+            "rating": ds.rating[idx],
+            "weight": weight,
+        }
+        if hist is not None:
+            batch["hist"] = hist[ds.user[idx]]
+        yield batch
+
+
+def num_steps(ds: RatingsDataset, batch_size: int, drop_remainder: bool = True) -> int:
+    n = len(ds)
+    return n // batch_size if drop_remainder else -(-n // batch_size)

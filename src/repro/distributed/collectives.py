@@ -1,0 +1,55 @@
+"""Collective helpers: microbatched gradient accumulation (compute/comm
+overlap) and HLO collective-byte accounting support.
+
+``microbatch_grads`` splits a global batch into ``n_micro`` slices scanned
+sequentially: peak activation memory drops by ~n_micro and, under SPMD, the
+per-microbatch reduce-scatters overlap with the next microbatch's compute —
+the standard overlap trick, expressed in jax.lax rather than NCCL streams.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def microbatch_grads(
+    loss_fn: Callable[[Pytree, Dict[str, jax.Array]], jax.Array],
+    params: Pytree,
+    batch: Dict[str, jax.Array],
+    n_micro: int,
+):
+    """Mean loss + grads accumulated over ``n_micro`` sequential microbatches.
+
+    Every array in ``batch`` is split along axis 0; n_micro must divide the
+    global batch.
+    """
+    if n_micro <= 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, grads
+
+    def reshape(x):
+        b = x.shape[0]
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+    micro = {k: reshape(v) for k, v in batch.items()}
+    zero_grads = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+    def body(carry, mb):
+        loss_acc, grad_acc = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+        grad_acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), grad_acc, grads
+        )
+        return (loss_acc + loss, grad_acc), None
+
+    (loss_sum, grad_sum), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), zero_grads), micro
+    )
+    inv = 1.0 / n_micro
+    return loss_sum * inv, jax.tree_util.tree_map(lambda g: g * inv, grad_sum)

@@ -1,0 +1,284 @@
+"""Sharding rules: how every param/input tensor maps onto the production mesh.
+
+Axes: ``data`` (+ ``pod`` when multi-pod) carry batch/row parallelism (DP);
+``model`` carries tensor/expert parallelism (TP/EP).  Rules are path-based
+functions over param pytrees so they survive structural change (stacked scan
+layers get a leading ``None`` automatically).
+
+MF mapping (the paper's model at scale): user rows over the data axes, item
+rows over ``model`` — a rating batch sharded over data then gathers its item
+rows across ``model``, which is the MF analogue of DP x TP (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def all_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+
+def ns(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def _path_parts(path) -> list:
+    parts = []
+    for entry in path:
+        part = getattr(entry, "key", None)
+        if part is None:
+            part = getattr(entry, "idx", None)
+        if part is None:
+            part = getattr(entry, "name", str(entry))
+        parts.append(str(part))
+    return parts
+
+
+def tree_shardings(params: Pytree, spec_fn, mesh: Mesh) -> Pytree:
+    """Map ``spec_fn(parts, leaf) -> PartitionSpec`` over a pytree."""
+
+    def mk(path, leaf):
+        spec = spec_fn(_path_parts(path), leaf)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(mk, params)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, (tuple, list)) else (entry,)
+    size = 1
+    for name in names:
+        size *= mesh.shape[name]
+    return size
+
+
+def sanitize_shardings(shardings: Pytree, avals: Pytree) -> Pytree:
+    """Downgrade any sharded dim whose size is not divisible by its mesh
+    extent to replicated-along-that-dim.
+
+    Assigned-architecture dimensions are published numbers (49155-entry
+    vocabs, 2,449,029-node graphs) that owe the mesh no divisibility; this
+    keeps every cell lowerable while preserving sharding on the conforming
+    dims.  Applied as the single choke point in the dry-run / launchers.
+    """
+
+    def fix(sh, aval):
+        if not isinstance(sh, NamedSharding):
+            return sh
+        shape = getattr(aval, "shape", ())
+        spec = tuple(sh.spec)
+        if len(spec) < len(shape):
+            spec = spec + (None,) * (len(shape) - len(spec))
+        new_spec = []
+        for dim, entry in zip(shape, spec):
+            extent = _axis_size(sh.mesh, entry)
+            new_spec.append(entry if extent > 1 and dim % extent == 0 else
+                            (entry if extent == 1 else None))
+        return NamedSharding(sh.mesh, P(*new_spec))
+
+    return jax.tree_util.tree_map(fix, shardings, avals)
+
+
+# ---------------------------------------------------------------------------
+# Transformers
+# ---------------------------------------------------------------------------
+
+
+def transformer_spec(parts, leaf) -> P:
+    tp = "model"
+    stacked = parts and parts[0] == "layers"
+    name = parts[-1]
+    parent = parts[-2] if len(parts) >= 2 else ""
+
+    if name == "embed":
+        spec = (tp, None)
+    elif name == "lm_head":
+        spec = (None, tp)
+    elif name in ("wq", "wk", "wv", "wkv_a", "wk_b", "wv_b"):
+        # wkv_a is small (d x (lora+rope)); sharding its output dim would
+        # split the latent that every head needs — keep replicated.
+        spec = (None, None) if name == "wkv_a" else (None, tp)
+    elif name in ("bq", "bk", "bv"):
+        spec = (tp,)
+    elif name == "wo" and parent in ("attn", "mlp", "shared"):
+        spec = (tp, None)
+    elif parent == "moe" and name in ("wg", "wi", "wo"):
+        spec = (tp, None, None)  # EP: experts over model axis
+    elif name in ("wg", "wi"):
+        spec = (None, tp)
+    elif name == "router":
+        spec = (None, None)
+    else:  # norms, scalars, biases of small layers
+        spec = tuple(None for _ in range(getattr(leaf, "ndim", 0)))
+
+    if stacked:
+        spec = (None,) + tuple(spec)
+    return P(*spec)
+
+
+def transformer_param_shardings(params: Pytree, mesh: Mesh) -> Pytree:
+    return tree_shardings(params, transformer_spec, mesh)
+
+
+def lm_batch_shardings(mesh: Mesh):
+    dp = data_axes(mesh)
+    return {"tokens": ns(mesh, dp, None), "labels": ns(mesh, dp, None)}
+
+
+def decode_state_spec_fn(mesh: Mesh, *, shard_seq: bool):
+    """KV caches: batch over data axes normally; for batch=1 long-context
+    cells the *sequence* axis is sharded instead (SP decode).
+
+    When the KV-head count does not divide the model axis (qwen1.5's 20
+    heads on 16-way TP), head sharding would be silently downgraded to
+    replication — a 107 GB/device cache at decode_32k.  In that case the
+    sequence axis is sharded over "model" instead (flash-decoding-style
+    split-S; the softmax reduction turns into a small psum)."""
+    dp = data_axes(mesh)
+    n_model = mesh.shape["model"]
+
+    def spec_fn(parts, leaf):
+        name = parts[-1]
+        ndim = getattr(leaf, "ndim", 0)
+        if name == "length" or ndim == 0:
+            return P()
+        # stacked caches: (L, B, S, KH, hd) for GQA, (L, B, S, lora) for MLA;
+        # per-layer ('first') caches lack the leading L.
+        stacked = "first_caches" not in parts
+        lead = (None,) if stacked else ()
+        body_ndim = ndim - len(lead)
+        if body_ndim == 4:  # (B, S, KH, hd)
+            kv_heads = leaf.shape[-2]
+            heads_ok = kv_heads % n_model == 0
+            if heads_ok:
+                spec = (
+                    (None, dp, "model", None)
+                    if shard_seq
+                    else (dp, None, "model", None)
+                )
+            else:  # split-S decode: sequence over model (and dp when batch=1)
+                seq_axes = (dp + ("model",)) if shard_seq else ("model",)
+                spec = (
+                    (None, seq_axes, None, None)
+                    if shard_seq
+                    else (dp, seq_axes, None, None)
+                )
+        elif body_ndim == 3:  # (B, S, lora/rope) — MLA latent, no head axis
+            spec = (None, dp, None) if shard_seq else (dp, None, None)
+        else:
+            spec = tuple(None for _ in range(body_ndim))
+        return P(*(lead + tuple(spec)))
+
+    return spec_fn
+
+
+# ---------------------------------------------------------------------------
+# MF (the paper's model)
+# ---------------------------------------------------------------------------
+
+
+def mf_spec_fn(mesh: Mesh):
+    dp = data_axes(mesh)
+
+    def spec_fn(parts, leaf):
+        name = parts[-1]
+        ndim = getattr(leaf, "ndim", 0)
+        if name in ("p", "user_bias") or (parts and parts[0] in ("p", "user_bias")):
+            return P(dp, None) if ndim == 2 else P(dp)
+        if name in ("q", "item_bias", "implicit") or (
+            parts and parts[0] in ("q", "item_bias", "implicit")
+        ):
+            return P("model", None) if ndim == 2 else P("model")
+        return P(*(None,) * ndim)
+
+    return spec_fn
+
+
+def mf_batch_shardings(mesh: Mesh, has_hist: bool = False):
+    dp = data_axes(mesh)
+    out = {
+        "user": ns(mesh, dp),
+        "item": ns(mesh, dp),
+        "rating": ns(mesh, dp),
+    }
+    if has_hist:
+        out["hist"] = ns(mesh, dp, None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+
+def gnn_spec_fn(mesh: Mesh):
+    def spec_fn(parts, leaf):
+        return P(*(None,) * getattr(leaf, "ndim", 0))  # GAT weights are tiny
+
+    return spec_fn
+
+
+def gnn_batch_shardings(mesh: Mesh):
+    flat = all_axes(mesh)
+    dp = data_axes(mesh)
+    return {
+        "features": ns(mesh, dp, None),   # nodes over data axes
+        "edges": ns(mesh, flat, None),    # edges over the whole device grid
+        "edge_mask": ns(mesh, flat),
+        "labels": ns(mesh, dp),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+
+_REPLICATE_BELOW_ROWS = 8192  # small tables are cheaper replicated
+
+
+def recsys_spec_fn(mesh: Mesh):
+    flat = all_axes(mesh)
+
+    def spec_fn(parts, leaf):
+        name_chain = "/".join(parts)
+        ndim = getattr(leaf, "ndim", 0)
+        is_table = any(
+            key in name_chain for key in ("tables", "item_embed", "v", "w")
+        ) and ndim in (1, 2)
+        if "tables" in parts or parts[-1] in ("item_embed", "v"):
+            if leaf.shape[0] >= _REPLICATE_BELOW_ROWS:
+                return P(flat, None) if ndim == 2 else P(flat)
+            return P(*(None,) * ndim)
+        if parts[-1] == "w" and ndim == 1 and leaf.shape[0] >= _REPLICATE_BELOW_ROWS:
+            return P(flat)  # FM linear term over the same rows as `v`
+        del is_table
+        return P(*(None,) * ndim)  # MLPs / norms / blocks replicated
+
+    return spec_fn
+
+
+def recsys_batch_shardings(mesh: Mesh, batch: dict):
+    dp = data_axes(mesh)
+
+    def spec(name, arr):
+        nd = getattr(arr, "ndim", 0)
+        if nd == 0:
+            return ns(mesh)
+        return ns(mesh, dp, *([None] * (nd - 1)))
+
+    return {name: spec(name, arr) for name, arr in batch.items()}

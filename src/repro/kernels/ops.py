@@ -1,0 +1,152 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to block multiples, interpret-mode selection (the container
+is CPU-only; TPU is the target), and instrumentation of tile-level skipped
+work.  All wrappers are shape-polymorphic at the Python level and fixed-shape
+under jit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ranks import effective_ranks
+from repro.kernels import ref
+from repro.kernels.fused_mf_sgd import fused_mf_sgd_padded
+from repro.kernels.pruned_matmul import pruned_matmul_padded
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, multiple: int, axis: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def pruned_matmul(
+    p: jax.Array,
+    q: jax.Array,
+    t_p: jax.Array | float,
+    t_q: jax.Array | float,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """All-pairs early-stopped product ``(m, k) x (n, k) -> (m, n)``.
+
+    Ranks are derived from the current factor values (dynamic pruning).  With
+    ``use_kernel=False`` falls back to the XLA masked formulation — same
+    numerics, no block skipping (used on meshes where the kernel is not the
+    bottleneck and for the dry-run's SPMD partitioning).
+    """
+    r_u = effective_ranks(p, t_p)
+    r_i = effective_ranks(q, t_q)
+    if not use_kernel:
+        return ref.pruned_matmul_ref(p, q, r_u, r_i, out_dtype=out_dtype)
+
+    if interpret is None:
+        interpret = _default_interpret()
+    m, n = p.shape[0], q.shape[0]
+    pp = _pad_to(_pad_to(p, block_m, 0), block_k, 1)
+    qp = _pad_to(_pad_to(q, block_n, 0), block_k, 1)
+    rup = _pad_to(r_u[:, None].astype(jnp.int32), block_m, 0)
+    rip = _pad_to(r_i[:, None].astype(jnp.int32), block_n, 0)
+    out = pruned_matmul_padded(
+        pp,
+        qp,
+        rup,
+        rip,
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def fused_mf_sgd(
+    p_rows: jax.Array,
+    q_rows: jax.Array,
+    ratings: jax.Array,
+    t_p: jax.Array | float,
+    t_q: jax.Array | float,
+    *,
+    lr: float,
+    lam: float,
+    block_b: int = 256,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+):
+    """Fused Alg. 2 + Alg. 3 over a batch of gathered rows.
+
+    Returns ``(new_p_rows, new_q_rows, err)`` with ``err`` shaped (B,).
+    """
+    t_p = jnp.asarray(t_p, jnp.float32)
+    t_q = jnp.asarray(t_q, jnp.float32)
+    if not use_kernel:
+        return ref.fused_mf_sgd_ref(
+            p_rows, q_rows, ratings, t_p, t_q, lr=lr, lam=lam
+        )
+    if interpret is None:
+        interpret = _default_interpret()
+    b = p_rows.shape[0]
+    pp = _pad_to(p_rows, block_b, 0)
+    qp = _pad_to(q_rows, block_b, 0)
+    rp = _pad_to(ratings[:, None].astype(jnp.float32), block_b, 0)
+    new_p, new_q, err = fused_mf_sgd_padded(
+        pp,
+        qp,
+        rp,
+        t_p.reshape(1, 1),
+        t_q.reshape(1, 1),
+        lr=lr,
+        lam=lam,
+        block_b=block_b,
+        interpret=interpret,
+    )
+    return new_p[:b], new_q[:b], err[:b, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "k"))
+def tile_block_stats(
+    r_u: jax.Array,
+    r_i: jax.Array,
+    k: int,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+):
+    """Instrumentation: fraction of K-blocks the kernel executes vs dense.
+
+    Deterministic from the ranks (the kernel's ``pl.when`` bound), so it can
+    be computed without instrumenting the kernel itself.  Also returns the
+    element-exact work fraction (the paper's per-element early stop) to show
+    how much the tile quantization gives back.
+    """
+    rup = _pad_to(r_u.astype(jnp.int32), block_m, 0)
+    rip = _pad_to(r_i.astype(jnp.int32), block_n, 0)
+    tu = jnp.max(rup.reshape(-1, block_m), axis=1)  # per-M-tile max rank
+    ti = jnp.max(rip.reshape(-1, block_n), axis=1)  # per-N-tile max rank
+    bound = jnp.minimum(tu[:, None], ti[None, :]).astype(jnp.float32)
+    nk = -(-k // block_k)
+    blocks = jnp.ceil(bound / block_k)
+    tile_fraction = jnp.mean(blocks) / nk
+    elem_fraction = jnp.mean(
+        jnp.minimum(r_u[:, None], r_i[None, :]).astype(jnp.float32)
+    ) / float(k)
+    return tile_fraction, elem_fraction

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module touches
+no jax device state; the dry-run sets the 512-placeholder-device XLA flag
+before jax initializes, and only then calls these.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when ``multi_pod``."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """Tiny mesh with the same axis names for CI-scale SPMD tests (needs >= 8
+    host devices via --xla_force_host_platform_device_count)."""
+    shape = (2, 2, 2) if multi_pod else (2, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,73 @@
+"""Serving launcher: batched top-k recommendation from a trained DP-MF
+checkpoint, through the dynamically-pruned scoring path.
+
+    PYTHONPATH=src python -m repro.launch.serve --ckpt /tmp/dpmf_ckpt \
+        --users 0 1 2 --topk 10
+
+Serving is the paper's "prediction" stage: one pruned (B, k) x (n, k) product
+over the item catalog (the Pallas kernel on TPU; interpret mode here).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt_lib
+from repro.core import mf
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--ckpt", required=True)
+    parser.add_argument("--users", type=int, nargs="+", default=[0])
+    parser.add_argument("--topk", type=int, default=10)
+    parser.add_argument("--batched-requests", type=int, default=0,
+                        help="simulate N random-user requests and report latency")
+    parser.add_argument("--no-kernel", action="store_true")
+    args = parser.parse_args()
+
+    step = ckpt_lib.latest_step(args.ckpt)
+    if step is None:
+        raise SystemExit(f"no checkpoint under {args.ckpt}")
+    with np.load(f"{args.ckpt}/step_{step:012d}/arrays.npz") as data:
+        p = jnp.asarray(data["params__p"])
+        q = jnp.asarray(data["params__q"])
+        t_p = jnp.asarray(data["t_p"])
+        t_q = jnp.asarray(data["t_q"])
+    params = mf.MFParams(p=p, q=q, user_bias=None, item_bias=None,
+                         global_mean=None, implicit=None)
+
+    def recommend(user_ids):
+        scores = mf.predict_all_items(
+            params, jnp.asarray(user_ids, jnp.int32), t_p, t_q,
+            use_kernel=not args.no_kernel,
+        )
+        top = np.asarray(jnp.argsort(-scores, axis=1)[:, : args.topk])
+        return top, np.asarray(scores)
+
+    top, scores = recommend(np.asarray(args.users))
+    out = {
+        str(u): [
+            {"item": int(i), "score": round(float(scores[row, i]), 4)}
+            for i in top[row]
+        ]
+        for row, u in enumerate(args.users)
+    }
+    print(json.dumps(out, indent=2))
+
+    if args.batched_requests:
+        rng = np.random.default_rng(0)
+        users = rng.integers(0, p.shape[0], args.batched_requests)
+        start = time.perf_counter()
+        recommend(users)
+        dt = time.perf_counter() - start
+        print(f"batched: {args.batched_requests} requests in {dt:.3f}s "
+              f"({args.batched_requests / dt:.1f} req/s)")
+
+
+if __name__ == "__main__":
+    main()

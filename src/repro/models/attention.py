@@ -1,0 +1,375 @@
+"""Attention: GQA (with optional qk-norm / biases), MLA, KV caches, and a
+memory-chunked causal attention usable at 32k prefill without materializing
+the full (S, S) score matrix per head.
+
+Chunked attention scans over query blocks; each block materializes only a
+(chunk, S) score slice (rematerialized in the backward pass), which is the
+structural property FlashAttention provides on real hardware — compute stays
+O(S^2), live memory O(chunk * S).  Decode attends one query against the
+cache: O(S) compute, which is why the 500k long-context *decode* cells are
+runnable with full attention (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense, rms_norm
+
+NEG_INF = -2.0e38
+
+
+class KVCache(NamedTuple):
+    """Decode-time cache.  For GQA: k/v are (B, S, KH, hd).  For MLA the
+    compressed cache is (B, S, kv_lora) + (B, S, rope_dim) — MLA's point is
+    exactly that the cache holds the low-rank latent, not full K/V."""
+
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array  # () int32 — tokens currently valid
+
+
+def _grouped_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B, Sq, H, hd), k: (B, Skv, KH, hd) -> (B, H, Sq, Skv) with GQA
+    head grouping (H == KH * group)."""
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    group = h // kh
+    qg = q.reshape(b, sq, kh, group, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k)
+    return scores.reshape(b, h, sq, k.shape[1])
+
+
+def _grouped_combine(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs: (B, H, Sq, Skv), v: (B, Skv, KH, hd) -> (B, Sq, H, hd)."""
+    b, h, sq, skv = probs.shape
+    kh = v.shape[2]
+    group = h // kh
+    pg = probs.reshape(b, kh, group, sq, skv)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", pg, v)
+    return out.reshape(b, sq, h, v.shape[3])
+
+
+def causal_attention(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, S, KH, hd)
+    v: jax.Array,  # (B, S, KH, hd)
+    *,
+    chunk_size: int = 1024,
+    softmax_scale: Optional[float] = None,
+    softmax_dtype=jnp.float32,
+) -> jax.Array:
+    """Memory-chunked causal self-attention (training / prefill).
+
+    ``softmax_dtype=bf16`` (§Perf memory iteration) halves the byte traffic
+    of the score/mask/softmax chain — the dominant HBM term of dense-LM
+    training; jax.nn.softmax subtracts the row max, so bf16 stays stable at
+    these context lengths (max |logit error| ~= 2^-8 * logit).
+    """
+    b, s, h, hd = q.shape
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    chunk = min(chunk_size, s)
+    if s % chunk != 0:  # fall back to one chunk for ragged smoke shapes
+        chunk = s
+    n_chunks = s // chunk
+
+    q = q * scale
+
+    # Python loop (not lax.scan): chunk count is small and static, each chunk
+    # is rematerialized in the backward pass, and an unrolled loop keeps
+    # cost_analysis exact (while-loop bodies are counted once, not per trip —
+    # see DESIGN.md §5 / roofline notes).
+    neg = jnp.asarray(jnp.finfo(softmax_dtype).min, softmax_dtype)
+
+    @jax.checkpoint
+    def chunk_out(q_blk, idx):
+        scores = _grouped_scores(q_blk, k).astype(softmax_dtype)  # (B,H,chunk,S)
+        qpos = idx * chunk + jnp.arange(chunk)[:, None]
+        kpos = jnp.arange(s)[None, :]
+        scores = jnp.where(kpos <= qpos, scores, neg)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return _grouped_combine(probs, v)  # (B, chunk, H, hd)
+
+    outs = [
+        chunk_out(q[:, i * chunk : (i + 1) * chunk], i) for i in range(n_chunks)
+    ]
+    return jnp.concatenate(outs, axis=1).reshape(b, s, h, v.shape[-1])
+
+
+def decode_attention(
+    q: jax.Array,      # (B, 1, H, hd)
+    cache_k: jax.Array,  # (B, S, KH, hd)
+    cache_v: jax.Array,  # (B, S, KH, hd)
+    length: jax.Array,   # () or (B,) valid length
+    *,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    hd = q.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    scores = _grouped_scores(q * scale, cache_k).astype(jnp.float32)  # (B,H,1,S)
+    valid = jnp.arange(cache_k.shape[1])[None, :] < jnp.reshape(length, (-1, 1))
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cache_v.dtype)
+    return _grouped_combine(probs, cache_v)  # (B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA block (gemma / qwen families)
+# ---------------------------------------------------------------------------
+
+
+def init_gqa_params(
+    rng,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    *,
+    qkv_bias: bool = False,
+    qk_norm: bool = False,
+    dtype=jnp.float32,
+) -> Dict[str, jax.Array]:
+    ks = jax.random.split(rng, 4)
+    scale = d_model ** -0.5
+    params = {
+        "wq": scale * jax.random.normal(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": scale * jax.random.normal(ks[1], (d_model, n_kv_heads * head_dim), dtype),
+        "wv": scale * jax.random.normal(ks[2], (d_model, n_kv_heads * head_dim), dtype),
+        "wo": (n_heads * head_dim) ** -0.5
+        * jax.random.normal(ks[3], (n_heads * head_dim, d_model), dtype),
+    }
+    if qkv_bias:
+        params["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        params["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        params["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    if qk_norm:
+        params["q_norm"] = jnp.zeros((head_dim,), dtype)
+        params["k_norm"] = jnp.zeros((head_dim,), dtype)
+    return params
+
+
+def gqa_qkv(
+    x: jax.Array,
+    params: Dict[str, jax.Array],
+    positions: jax.Array,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    norm_eps: float = 1e-6,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    q = dense(x, params["wq"], params.get("bq")).reshape(b, s, n_heads, head_dim)
+    k = dense(x, params["wk"], params.get("bk")).reshape(b, s, n_kv_heads, head_dim)
+    v = dense(x, params["wv"], params.get("bv")).reshape(b, s, n_kv_heads, head_dim)
+    if "q_norm" in params:  # qwen3-style per-head RMS qk-norm, pre-RoPE
+        q = rms_norm(q, params["q_norm"], norm_eps)
+        k = rms_norm(k, params["k_norm"], norm_eps)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def gqa_self_attention(
+    x: jax.Array,
+    params: Dict[str, jax.Array],
+    positions: jax.Array,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float = 10000.0,
+    norm_eps: float = 1e-6,
+    chunk_size: int = 1024,
+    softmax_dtype=jnp.float32,
+) -> jax.Array:
+    q, k, v = gqa_qkv(
+        x,
+        params,
+        positions,
+        n_heads=n_heads,
+        n_kv_heads=n_kv_heads,
+        head_dim=head_dim,
+        rope_theta=rope_theta,
+        norm_eps=norm_eps,
+    )
+    out = causal_attention(
+        q, k, v, chunk_size=chunk_size, softmax_dtype=softmax_dtype
+    )
+    return dense(out.reshape(x.shape[0], x.shape[1], -1), params["wo"])
+
+
+def gqa_decode_attention(
+    x: jax.Array,  # (B, 1, d)
+    params: Dict[str, jax.Array],
+    cache: KVCache,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float = 10000.0,
+    norm_eps: float = 1e-6,
+) -> Tuple[jax.Array, KVCache]:
+    positions = jnp.reshape(cache.length, (1, 1)).astype(jnp.int32) * jnp.ones(
+        (x.shape[0], 1), jnp.int32
+    )
+    q, k, v = gqa_qkv(
+        x,
+        params,
+        positions,
+        n_heads=n_heads,
+        n_kv_heads=n_kv_heads,
+        head_dim=head_dim,
+        rope_theta=rope_theta,
+        norm_eps=norm_eps,
+    )
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+    out = decode_attention(q, new_k, new_v, cache.length + 1)
+    new_cache = KVCache(k=new_k, v=new_v, length=cache.length + 1)
+    return dense(out.reshape(x.shape[0], 1, -1), params["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank compressed KV with decoupled RoPE
+# ---------------------------------------------------------------------------
+
+
+class MLAConfig(NamedTuple):
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+def init_mla_params(
+    rng, d_model: int, n_heads: int, cfg: MLAConfig, *, dtype=jnp.float32
+) -> Dict[str, jax.Array]:
+    ks = jax.random.split(rng, 5)
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    scale = d_model ** -0.5
+    return {
+        # queries are full-rank in V2-Lite (q_lora_rank = None)
+        "wq": scale * jax.random.normal(ks[0], (d_model, n_heads * qk_head), dtype),
+        # joint down-projection: [c_kv ; k_rope]
+        "wkv_a": scale
+        * jax.random.normal(
+            ks[1], (d_model, cfg.kv_lora_rank + cfg.qk_rope_head_dim), dtype
+        ),
+        "kv_a_norm": jnp.zeros((cfg.kv_lora_rank,), dtype),
+        # up-projections from the latent: k_nope and v per head
+        "wk_b": cfg.kv_lora_rank ** -0.5
+        * jax.random.normal(
+            ks[2], (cfg.kv_lora_rank, n_heads * cfg.qk_nope_head_dim), dtype
+        ),
+        "wv_b": cfg.kv_lora_rank ** -0.5
+        * jax.random.normal(
+            ks[3], (cfg.kv_lora_rank, n_heads * cfg.v_head_dim), dtype
+        ),
+        "wo": (n_heads * cfg.v_head_dim) ** -0.5
+        * jax.random.normal(ks[4], (n_heads * cfg.v_head_dim, d_model), dtype),
+    }
+
+
+def mla_self_attention(
+    x: jax.Array,
+    params: Dict[str, jax.Array],
+    positions: jax.Array,
+    cfg: MLAConfig,
+    *,
+    n_heads: int,
+    rope_theta: float = 10000.0,
+    norm_eps: float = 1e-6,
+    chunk_size: int = 1024,
+    softmax_dtype=jnp.float32,
+) -> jax.Array:
+    """Prefill/training form: latent is expanded to per-head K/V (compute-
+    optimal when Sq == Skv; the compressed cache matters only for decode)."""
+    b, s, _ = x.shape
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    q = dense(x, params["wq"]).reshape(b, s, n_heads, qk_head)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    kv = dense(x, params["wkv_a"])
+    c_kv, k_rope = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, params["kv_a_norm"], norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, rope_theta)  # MQA-style
+
+    k_nope = dense(c_kv, params["wk_b"]).reshape(
+        b, s, n_heads, cfg.qk_nope_head_dim
+    )
+    v = dense(c_kv, params["wv_b"]).reshape(b, s, n_heads, cfg.v_head_dim)
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, n_heads, cfg.qk_rope_head_dim))],
+        axis=-1,
+    )
+    out = causal_attention(
+        q_full, k_full, v, chunk_size=chunk_size,
+        softmax_scale=qk_head ** -0.5, softmax_dtype=softmax_dtype,
+    )
+    return dense(out.reshape(b, s, -1), params["wo"])
+
+
+def mla_decode_attention(
+    x: jax.Array,  # (B, 1, d)
+    params: Dict[str, jax.Array],
+    cache: KVCache,  # k := c_kv (B, S, lora), v := k_rope (B, S, rope)
+    cfg: MLAConfig,
+    *,
+    n_heads: int,
+    rope_theta: float = 10000.0,
+    norm_eps: float = 1e-6,
+) -> Tuple[jax.Array, KVCache]:
+    """Absorbed-matmul decode: queries are mapped *into* the latent space so
+    attention runs against the compressed cache directly — the whole point of
+    MLA (cache is kv_lora + rope wide instead of 2 * H * hd)."""
+    b = x.shape[0]
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    positions = jnp.reshape(cache.length, (1, 1)).astype(jnp.int32) * jnp.ones(
+        (b, 1), jnp.int32
+    )
+
+    q = dense(x, params["wq"]).reshape(b, 1, n_heads, qk_head)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    kv = dense(x, params["wkv_a"])
+    c_kv_new, k_rope_new = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    c_kv_new = rms_norm(c_kv_new, params["kv_a_norm"], norm_eps)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], positions, rope_theta)[
+        :, :, 0, :
+    ]
+
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, c_kv_new.astype(cache.k.dtype), cache.length, axis=1
+    )
+    krope = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, k_rope_new.astype(cache.v.dtype), cache.length, axis=1
+    )
+    length = cache.length + 1
+
+    # Absorb W_UK into the query: q_lat[h] = q_nope[h] @ W_UK[h]^T
+    wk_b = params["wk_b"].reshape(cfg.kv_lora_rank, n_heads, cfg.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope, wk_b)  # (B,1,H,lora)
+
+    scale = qk_head ** -0.5
+    scores = (
+        jnp.einsum("bqhl,bsl->bhqs", q_lat, ckv)
+        + jnp.einsum("bqhd,bsd->bhqs", q_rope, krope)
+    ).astype(jnp.float32) * scale
+    valid = jnp.arange(ckv.shape[1])[None, :] < jnp.reshape(length, (-1, 1))
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(ckv.dtype)
+
+    ctx_lat = jnp.einsum("bhqs,bsl->bqhl", probs, ckv)  # latent context
+    wv_b = params["wv_b"].reshape(cfg.kv_lora_rank, n_heads, cfg.v_head_dim)
+    ctx = jnp.einsum("bqhl,lhv->bqhv", ctx_lat, wv_b)  # absorb W_UV
+    out = dense(ctx.reshape(b, 1, -1), params["wo"])
+    return out, KVCache(k=ckv, v=krope, length=length)

@@ -1,0 +1,139 @@
+"""Graph attention network (GAT, Velickovic et al. 2018) for the gat-cora arch.
+
+JAX has no sparse SpMM beyond BCOO, so message passing is built from the
+edge-index primitive set — gather by src, SDDMM-style edge scores,
+segment-softmax over incoming edges, scatter-sum to dst — exactly the
+GE-SpMM/FeatGraph regime the kernel taxonomy describes.  The same forward
+serves full-batch (cora / ogbn-products shapes), sampled minibatches
+(fanout subgraphs from data/graphs.py) and block-diagonal molecule batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str
+    d_feat: int
+    n_classes: int
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    negative_slope: float = 0.2
+    dtype: Any = jnp.float32
+
+    def layer_dims(self):
+        """[(d_in, heads, d_out, concat?)] per layer; last layer averages."""
+        dims = []
+        d_in = self.d_feat
+        for layer in range(self.n_layers):
+            last = layer == self.n_layers - 1
+            d_out = self.n_classes if last else self.d_hidden
+            heads = 1 if last and self.n_layers > 1 else self.n_heads
+            dims.append((d_in, heads, d_out, not last))
+            d_in = heads * d_out if not last else d_out
+        return dims
+
+
+def init_params(rng, cfg: GATConfig) -> Params:
+    layers = []
+    for d_in, heads, d_out, _ in cfg.layer_dims():
+        rng, kw, ka, kb = jax.random.split(rng, 4)
+        scale = (2.0 / (d_in + heads * d_out)) ** 0.5
+        layers.append(
+            {
+                "w": scale * jax.random.normal(kw, (d_in, heads * d_out), cfg.dtype),
+                "a_src": 0.1 * jax.random.normal(ka, (heads, d_out), cfg.dtype),
+                "a_dst": 0.1 * jax.random.normal(kb, (heads, d_out), cfg.dtype),
+                "bias": jnp.zeros((heads * d_out,), cfg.dtype),
+            }
+        )
+    return {"layers": layers}
+
+
+def _segment_softmax(
+    scores: jax.Array, segment_ids: jax.Array, num_segments: int
+) -> jax.Array:
+    """Numerically-stable softmax over edges grouped by destination node."""
+    smax = jax.ops.segment_max(scores, segment_ids, num_segments=num_segments)
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)  # empty segments
+    ex = jnp.exp(scores - smax[segment_ids])
+    denom = jax.ops.segment_sum(ex, segment_ids, num_segments=num_segments)
+    return ex / (denom[segment_ids] + 1e-9)
+
+
+def gat_layer(
+    x: jax.Array,          # (N, d_in)
+    edges: jax.Array,      # (E, 2) [src, dst]; messages flow src -> dst
+    layer: Params,
+    *,
+    heads: int,
+    d_out: int,
+    concat: bool,
+    negative_slope: float,
+    edge_mask: jax.Array | None = None,  # (E,) 1/0 for padded edges
+) -> jax.Array:
+    n = x.shape[0]
+    src, dst = edges[:, 0], edges[:, 1]
+    h = jnp.einsum("nd,df->nf", x, layer["w"]).reshape(n, heads, d_out)
+
+    e_src = jnp.sum(h * layer["a_src"][None], axis=-1)  # (N, H)
+    e_dst = jnp.sum(h * layer["a_dst"][None], axis=-1)
+    scores = jax.nn.leaky_relu(e_src[src] + e_dst[dst], negative_slope)  # (E, H)
+    if edge_mask is not None:
+        scores = jnp.where(edge_mask[:, None] > 0, scores, -1e30)
+
+    alpha = _segment_softmax(scores, dst, n)  # (E, H)
+    if edge_mask is not None:
+        alpha = alpha * edge_mask[:, None]
+    msgs = alpha[..., None] * h[src]  # (E, H, d_out)
+    out = jax.ops.segment_sum(msgs, dst, num_segments=n)  # (N, H, d_out)
+
+    if concat:
+        return jax.nn.elu(out.reshape(n, heads * d_out) + layer["bias"])
+    return jnp.mean(out, axis=1) + layer["bias"]
+
+
+def forward(
+    params: Params,
+    x: jax.Array,
+    edges: jax.Array,
+    cfg: GATConfig,
+    edge_mask: jax.Array | None = None,
+) -> jax.Array:
+    for layer, (d_in, heads, d_out, concat) in zip(
+        params["layers"], cfg.layer_dims()
+    ):
+        x = gat_layer(
+            x,
+            edges,
+            layer,
+            heads=heads,
+            d_out=d_out,
+            concat=concat,
+            negative_slope=cfg.negative_slope,
+            edge_mask=edge_mask,
+        )
+    return x  # (N, n_classes) logits
+
+
+def loss_fn(
+    params: Params, batch: Dict[str, jax.Array], cfg: GATConfig
+) -> jax.Array:
+    """Masked node-classification cross entropy (labels < 0 ignored)."""
+    logits = forward(
+        params, batch["features"], batch["edges"], cfg, batch.get("edge_mask")
+    ).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)

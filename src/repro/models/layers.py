@@ -1,0 +1,111 @@
+"""Shared neural building blocks (norms, gated MLPs, RoPE, embeddings).
+
+Everything is a pure function over explicit param pytrees — no module
+framework — so params stay transparent to pjit partitioning and to the
+checkpoint layer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(
+        dtype
+    )
+
+
+def rms_norm_lean(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Memory-lean RMSNorm (§Perf): the variance is accumulated in f32 via the
+    dot-accumulator (no f32 materialization of the (B, S, D) stream), and the
+    normalize/scale multiplies stay in the residual dtype.  Halves the
+    norm-chain HBM traffic at bf16; numerics differ from :func:`rms_norm` only
+    by bf16 rounding of the elementwise products."""
+    d = x.shape[-1]
+    var = jnp.einsum(
+        "...d,...d->...", x, x, preferred_element_type=jnp.float32
+    ) / d
+    inv = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return x * inv * (1.0 + scale).astype(x.dtype)
+
+
+def layer_norm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-6
+) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def gated_mlp(
+    x: jax.Array, params: Dict[str, jax.Array], activation: str = "swiglu"
+) -> jax.Array:
+    """SwiGLU / GeGLU feed-forward: act(x W_g) * (x W_i) W_o."""
+    gate = dense(x, params["wg"])
+    up = dense(x, params["wi"])
+    if activation == "swiglu":
+        act = jax.nn.silu(gate)
+    elif activation == "geglu":
+        act = jax.nn.gelu(gate, approximate=True)
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return dense(act * up, params["wo"])
+
+
+def mlp(x: jax.Array, params: Dict[str, jax.Array], activation: str = "relu") -> jax.Array:
+    """Plain 2-layer MLP (recsys towers)."""
+    h = dense(x, params["wi"], params.get("bi"))
+    h = jax.nn.relu(h) if activation == "relu" else jax.nn.gelu(h)
+    return dense(h, params["wo"], params.get("bo"))
+
+
+def rope_frequencies(
+    head_dim: int, max_pos: int, theta: float = 10000.0
+) -> jax.Array:
+    """(max_pos, head_dim // 2) complex-free cos/sin table, computed lazily."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    pos = jnp.arange(max_pos, dtype=jnp.float32)
+    return jnp.outer(pos, inv)  # (max_pos, head_dim/2)
+
+
+def apply_rope(
+    x: jax.Array,        # (..., seq, heads, head_dim)
+    positions: jax.Array,  # (..., seq) int32 absolute positions
+    theta: float = 10000.0,
+) -> jax.Array:
+    head_dim = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    return jnp.take(table, ids, axis=0)
+
+
+def init_dense(rng, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.float32):
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    params = {"w": scale * jax.random.normal(rng, (d_in, d_out), dtype)}
+    if bias:
+        params["b"] = jnp.zeros((d_out,), dtype)
+    return params

@@ -1,0 +1,500 @@
+"""RecSys architectures: FM, DLRM (MLPerf config), SASRec, BST.
+
+These are the archs where the paper's technique is live (DESIGN.md §4): every
+latent interaction — FM's pairwise term, DLRM's dot-interaction block,
+SASRec/BST retrieval scoring — runs through the dynamic-pruning machinery
+(thresholds + effective ranks), with rate 0 recovering the dense model
+bit-for-bit.
+
+JAX has no native EmbeddingBag; ``embedding_bag`` below builds it from
+``jnp.take`` + ``jax.ops.segment_sum`` (the multi-hot path) — part of the
+system, per the kernel taxonomy's RecSys notes.  Single-valued categorical
+fields use the plain-gather fast path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ranks import effective_ranks, rank_mask
+from repro.kernels import ops as kops
+from repro.models.layers import dense
+
+Params = Dict[str, Any]
+
+# Criteo-1TB per-field cardinalities as used by the MLPerf DLRM benchmark.
+MLPERF_CRITEO_VOCABS: Tuple[int, ...] = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+
+def embedding_bag(
+    table: jax.Array,        # (V, d)
+    values: jax.Array,       # (nnz,) flat ids
+    segment_ids: jax.Array,  # (nnz,) bag index per id
+    num_bags: int,
+    *,
+    combiner: str = "sum",
+    weights: Optional[jax.Array] = None,
+) -> jax.Array:
+    """torch.nn.EmbeddingBag equivalent: ragged gather + segment reduce."""
+    rows = jnp.take(table, values, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if combiner == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+    if combiner == "mean":
+        sums = jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+        counts = jax.ops.segment_sum(
+            jnp.ones_like(values, jnp.float32), segment_ids, num_segments=num_bags
+        )
+        return sums / jnp.maximum(counts, 1.0)[:, None]
+    if combiner == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments=num_bags)
+    raise ValueError(f"unknown combiner {combiner!r}")
+
+
+def _mask_by_rank(rows: jax.Array, threshold) -> jax.Array:
+    """Zero each row's suffix from its first insignificant factor (Alg. 2)."""
+    r = effective_ranks(rows, threshold)
+    return rows * rank_mask(r, rows.shape[-1], rows.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FM — Rendle ICDM'10, O(nk) sum-square trick; pruning is first-class here.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    name: str = "fm"
+    n_fields: int = 39
+    embed_dim: int = 10
+    vocab_per_field: int = 1_000_000
+    dtype: Any = jnp.float32
+
+    @property
+    def total_vocab(self) -> int:
+        return self.n_fields * self.vocab_per_field
+
+    def field_offsets(self) -> np.ndarray:
+        return (np.arange(self.n_fields) * self.vocab_per_field).astype(np.int32)
+
+
+def init_fm_params(rng, cfg: FMConfig) -> Params:
+    kv, kw = jax.random.split(rng)
+    return {
+        "w0": jnp.zeros((), cfg.dtype),
+        "w": jnp.zeros((cfg.total_vocab,), cfg.dtype),
+        "v": 0.01 * jax.random.normal(kv, (cfg.total_vocab, cfg.embed_dim), cfg.dtype),
+    }
+
+
+def fm_forward(
+    params: Params,
+    ids: jax.Array,  # (B, F) per-field local ids
+    cfg: FMConfig,
+    t_v: jax.Array | float = 0.0,
+) -> jax.Array:
+    """Logit per example.  With ``t_v > 0`` every pairwise term <v_i, v_j> is
+    truncated at min(rank_i, rank_j): masking each row by its own rank makes
+    the sum-square identity compute exactly the paper's early-stopped sum."""
+    offsets = jnp.asarray(cfg.field_offsets())
+    flat = ids + offsets[None, :]
+    rows = jnp.take(params["v"], flat.reshape(-1), axis=0)  # (B*F, k)
+    rows = _mask_by_rank(rows, t_v)
+    rows = rows.reshape(ids.shape[0], cfg.n_fields, cfg.embed_dim)
+
+    s = jnp.sum(rows, axis=1)             # (B, k)
+    ss = jnp.sum(rows * rows, axis=1)     # (B, k)
+    pairwise = 0.5 * jnp.sum(s * s - ss, axis=-1)
+    linear = jnp.sum(jnp.take(params["w"], flat.reshape(-1)).reshape(ids.shape), axis=1)
+    return (params["w0"] + linear + pairwise).astype(jnp.float32)
+
+
+def fm_loss(params: Params, batch: Dict[str, jax.Array], cfg: FMConfig, t_v=0.0):
+    logits = fm_forward(params, batch["ids"], cfg, t_v)
+    labels = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def fm_retrieval(
+    params: Params,
+    user_ids: jax.Array,   # (B, F-1) context fields
+    cand_ids: jax.Array,   # (C,) candidate ids of the item field (field F-1)
+    cfg: FMConfig,
+    t_v: jax.Array | float = 0.0,
+    *,
+    use_kernel: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Score B contexts against C candidate items (retrieval_cand shape).
+
+    FM decomposes: score(u, c) = const(u) + w_c + <s_u, v_c> with
+    s_u = sum of context-field factors — so candidate scoring is one
+    (B, k) x (C, k) pruned matmul over the million-row candidate slab.
+    """
+    offsets = jnp.asarray(cfg.field_offsets())
+    flat_u = user_ids + offsets[None, : user_ids.shape[1]]
+    rows_u = jnp.take(params["v"], flat_u.reshape(-1), axis=0)
+    rows_u = _mask_by_rank(rows_u, t_v).reshape(
+        user_ids.shape[0], user_ids.shape[1], cfg.embed_dim
+    )
+    s_u = jnp.sum(rows_u, axis=1)  # (B, k)
+    ss_u = jnp.sum(rows_u * rows_u, axis=1)
+    const_u = (
+        0.5 * jnp.sum(s_u * s_u - ss_u, axis=-1)
+        + jnp.sum(jnp.take(params["w"], flat_u.reshape(-1)).reshape(user_ids.shape), axis=1)
+        + params["w0"]
+    )
+
+    flat_c = cand_ids + offsets[user_ids.shape[1]]
+    v_c = jnp.take(params["v"], flat_c, axis=0)  # (C, k)
+    if use_kernel:
+        cross = kops.pruned_matmul(s_u, v_c, 0.0, t_v, interpret=interpret)
+    else:
+        cross = jnp.einsum("bk,ck->bc", s_u, _mask_by_rank(v_c, t_v))
+    w_c = jnp.take(params["w"], flat_c)
+    return (const_u[:, None] + cross + w_c[None, :]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# DLRM — MLPerf config; dot interaction optionally pruned.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    embed_dim: int = 128
+    vocab_sizes: Tuple[int, ...] = MLPERF_CRITEO_VOCABS
+    bot_mlp: Tuple[int, ...] = (512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def n_interact(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+
+def _init_mlp(rng, dims: Sequence[int], dtype) -> list:
+    layers = []
+    for d_in, d_out in zip(dims[:-1], dims[1:]):
+        rng, kw = jax.random.split(rng)
+        scale = (2.0 / (d_in + d_out)) ** 0.5
+        layers.append(
+            {
+                "w": scale * jax.random.normal(kw, (d_in, d_out), dtype),
+                "b": jnp.zeros((d_out,), dtype),
+            }
+        )
+    return layers
+
+
+def _run_mlp(x: jax.Array, layers: list, *, final_act: bool = False) -> jax.Array:
+    for idx, layer in enumerate(layers):
+        x = dense(x, layer["w"], layer["b"])
+        if idx < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_dlrm_params(rng, cfg: DLRMConfig) -> Params:
+    kb, kt, ke = jax.random.split(rng, 3)
+    tables = []
+    for idx, vocab in enumerate(cfg.vocab_sizes):
+        key = jax.random.fold_in(ke, idx)
+        tables.append(
+            (vocab ** -0.5)
+            * jax.random.normal(key, (vocab, cfg.embed_dim), cfg.dtype)
+        )
+    top_in = cfg.bot_mlp[-1] + cfg.n_interact
+    return {
+        "tables": tables,
+        "bot": _init_mlp(kb, (cfg.n_dense,) + cfg.bot_mlp, cfg.dtype),
+        "top": _init_mlp(kt, (top_in,) + cfg.top_mlp, cfg.dtype),
+    }
+
+
+def dlrm_forward(
+    params: Params,
+    dense_feats: jax.Array,  # (B, 13)
+    sparse_ids: jax.Array,   # (B, 26)
+    cfg: DLRMConfig,
+    t_v: jax.Array | float = 0.0,
+) -> jax.Array:
+    b = dense_feats.shape[0]
+    d_vec = _run_mlp(dense_feats, params["bot"], final_act=True)  # (B, 128)
+    emb = jnp.stack(
+        [
+            jnp.take(table, sparse_ids[:, idx], axis=0)
+            for idx, table in enumerate(params["tables"])
+        ],
+        axis=1,
+    )  # (B, 26, d)
+    # Paper technique: prune embedding factor suffixes; the bottom-MLP vector
+    # is not a factor-table row and stays dense (DESIGN.md §4).
+    emb = _mask_by_rank(emb.reshape(-1, cfg.embed_dim), t_v).reshape(emb.shape)
+    z = jnp.concatenate([d_vec[:, None, :], emb], axis=1)  # (B, 27, d)
+    inter = jnp.einsum("bfd,bgd->bfg", z, z)
+    iu, ju = jnp.triu_indices(z.shape[1], k=1)
+    flat = inter[:, iu, ju]  # (B, 351)
+    top_in = jnp.concatenate([d_vec, flat.astype(d_vec.dtype)], axis=-1)
+    return _run_mlp(top_in, params["top"])[:, 0].astype(jnp.float32)
+
+
+def dlrm_loss(params, batch, cfg: DLRMConfig, t_v=0.0):
+    logits = dlrm_forward(params, batch["dense"], batch["sparse"], cfg, t_v)
+    labels = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def dlrm_retrieval(
+    params: Params,
+    dense_feats: jax.Array,   # (1, 13) one user context
+    sparse_ids: jax.Array,    # (1, 26) user's categorical ids
+    cand_ids: jax.Array,      # (C,) candidates for the item field (field 0)
+    cfg: DLRMConfig,
+    t_v: jax.Array | float = 0.0,
+) -> jax.Array:
+    """Score one context against C candidate items by swapping field 0."""
+    c = cand_ids.shape[0]
+    dense_rep = jnp.broadcast_to(dense_feats, (c, cfg.n_dense))
+    sparse_rep = jnp.broadcast_to(sparse_ids, (c, cfg.n_sparse))
+    sparse_rep = sparse_rep.at[:, 0].set(cand_ids)
+    return dlrm_forward(params, dense_rep, sparse_rep, cfg, t_v)
+
+
+# ---------------------------------------------------------------------------
+# SASRec — self-attentive sequential recommendation.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    dropout: float = 0.0
+    dtype: Any = jnp.float32
+
+
+def init_sasrec_params(rng, cfg: SASRecConfig) -> Params:
+    ke, kp, kb = jax.random.split(rng, 3)
+    blocks = []
+    d = cfg.embed_dim
+    for idx in range(cfg.n_blocks):
+        key = jax.random.fold_in(kb, idx)
+        kq, kk, kv, ko, k1, k2 = jax.random.split(key, 6)
+        s = d ** -0.5
+        blocks.append(
+            {
+                "wq": s * jax.random.normal(kq, (d, d), cfg.dtype),
+                "wk": s * jax.random.normal(kk, (d, d), cfg.dtype),
+                "wv": s * jax.random.normal(kv, (d, d), cfg.dtype),
+                "wo": s * jax.random.normal(ko, (d, d), cfg.dtype),
+                "ffn_w1": s * jax.random.normal(k1, (d, d), cfg.dtype),
+                "ffn_b1": jnp.zeros((d,), cfg.dtype),
+                "ffn_w2": s * jax.random.normal(k2, (d, d), cfg.dtype),
+                "ffn_b2": jnp.zeros((d,), cfg.dtype),
+                "ln1": jnp.ones((d,), cfg.dtype),
+                "ln1_b": jnp.zeros((d,), cfg.dtype),
+                "ln2": jnp.ones((d,), cfg.dtype),
+                "ln2_b": jnp.zeros((d,), cfg.dtype),
+            }
+        )
+    return {
+        # row 0 is the padding item
+        "item_embed": 0.01
+        * jax.random.normal(ke, (cfg.n_items + 1, d), cfg.dtype),
+        "pos_embed": 0.01 * jax.random.normal(kp, (cfg.seq_len, d), cfg.dtype),
+        "blocks": blocks,
+        "ln_f": jnp.ones((d,), cfg.dtype),
+        "ln_f_b": jnp.zeros((d,), cfg.dtype),
+    }
+
+
+def _ln(x, scale, bias, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def sasrec_encode(params: Params, seq: jax.Array, cfg: SASRecConfig) -> jax.Array:
+    """seq (B, S) item ids (0 = pad) -> hidden states (B, S, d)."""
+    b, s = seq.shape
+    x = jnp.take(params["item_embed"], seq, axis=0) * (cfg.embed_dim ** 0.5)
+    x = x + params["pos_embed"][None, :s]
+    pad = (seq == 0)
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    attn_mask = causal[None] & ~pad[:, None, :]  # (B, S, S)
+
+    for blk in params["blocks"]:
+        h = _ln(x, blk["ln1"], blk["ln1_b"])
+        q = dense(h, blk["wq"]).reshape(b, s, cfg.n_heads, -1)
+        k = dense(h, blk["wk"]).reshape(b, s, cfg.n_heads, -1)
+        v = dense(h, blk["wv"]).reshape(b, s, cfg.n_heads, -1)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (q.shape[-1] ** 0.5)
+        scores = jnp.where(attn_mask[:, None], scores.astype(jnp.float32), -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        att = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, -1)
+        x = x + dense(att, blk["wo"])
+        h = _ln(x, blk["ln2"], blk["ln2_b"])
+        f = jax.nn.relu(dense(h, blk["ffn_w1"], blk["ffn_b1"]))
+        x = x + dense(f, blk["ffn_w2"], blk["ffn_b2"])
+    x = _ln(x, params["ln_f"], params["ln_f_b"])
+    return x * (~pad)[..., None]
+
+
+def sasrec_loss(params: Params, batch: Dict[str, jax.Array], cfg: SASRecConfig):
+    """BCE over (positive, sampled-negative) next items, as in the paper."""
+    h = sasrec_encode(params, batch["seq"], cfg)  # (B, S, d)
+    pos = jnp.take(params["item_embed"], batch["pos"], axis=0)
+    neg = jnp.take(params["item_embed"], batch["neg"], axis=0)
+    pos_logit = jnp.sum(h * pos, axis=-1)
+    neg_logit = jnp.sum(h * neg, axis=-1)
+    mask = (batch["pos"] > 0).astype(jnp.float32)
+
+    def bce(logit, label):
+        return jnp.maximum(logit, 0) - logit * label + jnp.log1p(
+            jnp.exp(-jnp.abs(logit))
+        )
+
+    per_tok = bce(pos_logit, 1.0) + bce(neg_logit, 0.0)
+    return jnp.sum(per_tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def sasrec_retrieval(
+    params: Params,
+    seq: jax.Array,  # (B, S)
+    cfg: SASRecConfig,
+    t_v: jax.Array | float = 0.0,
+    *,
+    use_kernel: bool = True,
+    cand_ids: Optional[jax.Array] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Final-state retrieval scores against all (or C candidate) items —
+    the latent dot product where the paper's pruning applies."""
+    h = sasrec_encode(params, seq, cfg)[:, -1]  # (B, d)
+    table = params["item_embed"]
+    if cand_ids is not None:
+        table = jnp.take(table, cand_ids, axis=0)
+    if use_kernel:
+        return kops.pruned_matmul(h, table, 0.0, t_v, interpret=interpret)
+    return jnp.einsum("bd,cd->bc", h, _mask_by_rank(table, t_v))
+
+
+# ---------------------------------------------------------------------------
+# BST — Behavior Sequence Transformer (Alibaba).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    n_items: int = 1_000_000
+    embed_dim: int = 32
+    seq_len: int = 20            # history; the target item is appended
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp_dims: Tuple[int, ...] = (1024, 512, 256)
+    n_profile: int = 16          # dense user-profile features
+    dtype: Any = jnp.float32
+
+
+def init_bst_params(rng, cfg: BSTConfig) -> Params:
+    ke, kp, kb, km = jax.random.split(rng, 4)
+    d = cfg.embed_dim
+    blocks = []
+    for idx in range(cfg.n_blocks):
+        key = jax.random.fold_in(kb, idx)
+        kq, kk, kv, ko, k1, k2 = jax.random.split(key, 6)
+        s = d ** -0.5
+        blocks.append(
+            {
+                "wq": s * jax.random.normal(kq, (d, d), cfg.dtype),
+                "wk": s * jax.random.normal(kk, (d, d), cfg.dtype),
+                "wv": s * jax.random.normal(kv, (d, d), cfg.dtype),
+                "wo": s * jax.random.normal(ko, (d, d), cfg.dtype),
+                "ffn_w1": s * jax.random.normal(k1, (d, 4 * d), cfg.dtype),
+                "ffn_b1": jnp.zeros((4 * d,), cfg.dtype),
+                "ffn_w2": (4 * d) ** -0.5 * jax.random.normal(k2, (4 * d, d), cfg.dtype),
+                "ffn_b2": jnp.zeros((d,), cfg.dtype),
+                "ln1": jnp.ones((d,), cfg.dtype),
+                "ln1_b": jnp.zeros((d,), cfg.dtype),
+                "ln2": jnp.ones((d,), cfg.dtype),
+                "ln2_b": jnp.zeros((d,), cfg.dtype),
+            }
+        )
+    total_seq = cfg.seq_len + 1
+    mlp_in = total_seq * d + cfg.n_profile
+    return {
+        "item_embed": 0.01 * jax.random.normal(ke, (cfg.n_items + 1, d), cfg.dtype),
+        "pos_embed": 0.01 * jax.random.normal(kp, (total_seq, d), cfg.dtype),
+        "blocks": blocks,
+        "mlp": _init_mlp(km, (mlp_in,) + cfg.mlp_dims + (1,), cfg.dtype),
+    }
+
+
+def bst_forward(
+    params: Params,
+    hist: jax.Array,     # (B, S) history item ids (0 = pad)
+    target: jax.Array,   # (B,) target item id
+    profile: jax.Array,  # (B, n_profile) dense user features
+    cfg: BSTConfig,
+) -> jax.Array:
+    b = hist.shape[0]
+    seq = jnp.concatenate([hist, target[:, None]], axis=1)  # (B, S+1)
+    s = seq.shape[1]
+    x = jnp.take(params["item_embed"], seq, axis=0) + params["pos_embed"][None, :s]
+    pad = (seq == 0)
+    attn_mask = ~pad[:, None, :]  # bidirectional over the (hist, target) set
+
+    hd = cfg.embed_dim // cfg.n_heads
+    for blk in params["blocks"]:
+        h = _ln(x, blk["ln1"], blk["ln1_b"])
+        q = dense(h, blk["wq"]).reshape(b, s, cfg.n_heads, hd)
+        k = dense(h, blk["wk"]).reshape(b, s, cfg.n_heads, hd)
+        v = dense(h, blk["wv"]).reshape(b, s, cfg.n_heads, hd)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd ** 0.5)
+        scores = jnp.where(attn_mask[:, None], scores.astype(jnp.float32), -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        att = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, -1)
+        x = x + dense(att, blk["wo"])
+        h = _ln(x, blk["ln2"], blk["ln2_b"])
+        f = jax.nn.relu(dense(h, blk["ffn_w1"], blk["ffn_b1"]))
+        x = x + dense(f, blk["ffn_w2"], blk["ffn_b2"])
+
+    flat = x.reshape(b, -1)
+    mlp_in = jnp.concatenate([flat, profile.astype(flat.dtype)], axis=-1)
+    return _run_mlp(mlp_in, params["mlp"])[:, 0].astype(jnp.float32)
+
+
+def bst_loss(params, batch, cfg: BSTConfig):
+    logits = bst_forward(
+        params, batch["hist"], batch["target"], batch["profile"], cfg
+    )
+    labels = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )

@@ -1,0 +1,428 @@
+"""Decoder-only transformer family covering the assigned LM architectures:
+gemma-7b / qwen1.5-4b (GQA, biases) / qwen3-4b (qk-norm) — dense — and
+deepseek-v2-lite (MLA + shared/routed MoE) / granite-moe (MoE) — sparse.
+
+The layer stack is ``lax.scan`` over stacked per-layer params with
+``jax.checkpoint`` (remat): compile time stays O(1) in depth (one layer is
+compiled once) and live activation memory is one layer deep — both required
+for the 512-device dry-run on a CPU host.  Heterogeneous leading layers
+(DeepSeek's dense layer 0) sit outside the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.attention import KVCache, MLAConfig
+from repro.models.layers import dense, gated_mlp, rms_norm, rms_norm_lean
+from repro.models.moe import MoEConfig, init_moe_params, moe_ffn
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    activation: str = "swiglu"        # swiglu | geglu
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    embed_scale: bool = False         # gemma multiplies embeddings by sqrt(d)
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    first_dense_layers: int = 0       # leading dense-FFN layers (deepseek: 1)
+    first_dense_ff: int = 0
+    attn_chunk: int = 1024
+    unroll: bool = False              # python-loop layers (exact cost_analysis)
+    moe_shard_map: bool = False       # replicated-dispatch EP (§Perf iter 1)
+    attn_softmax_dtype: str = "f32"   # "bf16" halves score-chain bytes (§Perf)
+    remat_policy: str = "full"        # "dots" saves matmul outputs (§Perf)
+    mem_lean: bool = False            # lean norms + bf16 CE (§Perf memory iter)
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def _softmax_dtype(self):
+        return jnp.float32 if self.attn_softmax_dtype == "f32" else jnp.bfloat16
+
+    @property
+    def scan_layers(self) -> int:
+        return self.n_layers - self.first_dense_layers
+
+    def param_count(self) -> int:
+        """Total parameters (embedding included) — used for MODEL_FLOPS."""
+        d, hd = self.d_model, self.head_dim
+        att = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        if self.mla is not None:
+            m = self.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            att = (
+                d * self.n_heads * qk
+                + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                + m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                + self.n_heads * m.v_head_dim * d
+            )
+        if self.moe is not None:
+            ffn = self.moe.num_experts * 3 * d * self.moe.d_ff + d * self.moe.num_experts
+            ffn += self.moe.num_shared * 3 * d * self.moe.d_ff
+        else:
+            ffn = 3 * d * self.d_ff
+        dense_extra = (
+            self.first_dense_layers * (att + 3 * d * self.first_dense_ff)
+            if self.first_dense_layers
+            else 0
+        )
+        body = self.scan_layers * (att + ffn) + dense_extra
+        embed = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return body + embed
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE counts top_k + shared experts)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        all_experts = self.scan_layers * self.moe.num_experts * 3 * d * self.moe.d_ff
+        active = self.scan_layers * self.moe.top_k * 3 * d * self.moe.d_ff
+        return full - all_experts + active
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(rng, cfg: TransformerConfig, *, dense_ff: Optional[int] = None) -> Params:
+    ka, kf = jax.random.split(rng)
+    if cfg.mla is not None:
+        a = attn.init_mla_params(ka, cfg.d_model, cfg.n_heads, cfg.mla, dtype=cfg.dtype)
+    else:
+        a = attn.init_gqa_params(
+            ka,
+            cfg.d_model,
+            cfg.n_heads,
+            cfg.n_kv_heads,
+            cfg.head_dim,
+            qkv_bias=cfg.qkv_bias,
+            qk_norm=cfg.qk_norm,
+            dtype=cfg.dtype,
+        )
+    layer: Params = {
+        "attn": a,
+        "norm1": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "norm2": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    if cfg.moe is not None and dense_ff is None:
+        layer["moe"] = init_moe_params(
+            kf, cfg.d_model, cfg.moe, activation=cfg.activation, dtype=cfg.dtype
+        )
+    else:
+        ff = dense_ff or cfg.d_ff
+        kg, ki, ko = jax.random.split(kf, 3)
+        s_in, s_out = cfg.d_model ** -0.5, ff ** -0.5
+        layer["mlp"] = {
+            "wg": s_in * jax.random.normal(kg, (cfg.d_model, ff), cfg.dtype),
+            "wi": s_in * jax.random.normal(ki, (cfg.d_model, ff), cfg.dtype),
+            "wo": s_out * jax.random.normal(ko, (ff, cfg.d_model), cfg.dtype),
+        }
+    return layer
+
+
+def init_params(rng, cfg: TransformerConfig) -> Params:
+    ke, kl, kh = jax.random.split(rng, 3)
+    params: Params = {
+        "embed": cfg.d_model ** -0.5
+        * jax.random.normal(ke, (cfg.vocab_size, cfg.d_model), cfg.dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = cfg.d_model ** -0.5 * jax.random.normal(
+            kh, (cfg.d_model, cfg.vocab_size), cfg.dtype
+        )
+    if cfg.first_dense_layers:
+        keys = jax.random.split(kl, cfg.first_dense_layers + 1)
+        params["first"] = [
+            _init_layer(keys[idx], cfg, dense_ff=cfg.first_dense_ff or cfg.d_ff)
+            for idx in range(cfg.first_dense_layers)
+        ]
+        kl = keys[-1]
+    # Stacked scan layers: init one rng per layer, stack leaves on axis 0.
+    layer_keys = jax.random.split(kl, cfg.scan_layers)
+    layers = [_init_layer(key, cfg) for key in layer_keys]
+    params["layers"] = jax.tree_util.tree_map(
+        lambda *leaves: jnp.stack(leaves), *layers
+    )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _block(
+    x: jax.Array,
+    layer: Params,
+    positions: jax.Array,
+    cfg: TransformerConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Pre-norm block.  Returns (output, moe_aux)."""
+    norm = rms_norm_lean if cfg.mem_lean else rms_norm
+    h = norm(x, layer["norm1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a = attn.mla_self_attention(
+            h,
+            layer["attn"],
+            positions,
+            cfg.mla,
+            n_heads=cfg.n_heads,
+            rope_theta=cfg.rope_theta,
+            norm_eps=cfg.norm_eps,
+            chunk_size=cfg.attn_chunk,
+            softmax_dtype=cfg._softmax_dtype,
+        )
+    else:
+        a = attn.gqa_self_attention(
+            h,
+            layer["attn"],
+            positions,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta,
+            norm_eps=cfg.norm_eps,
+            chunk_size=cfg.attn_chunk,
+            softmax_dtype=cfg._softmax_dtype,
+        )
+    x = x + a
+    h = norm(x, layer["norm2"], cfg.norm_eps)
+    if "moe" in layer:
+        b, s, d = h.shape
+        out, aux = moe_ffn(
+            h.reshape(b * s, d), layer["moe"], cfg.moe,
+            activation=cfg.activation, use_shard_map=cfg.moe_shard_map,
+        )
+        return x + out.reshape(b, s, d), aux
+    return x + gated_mlp(h, layer["mlp"], cfg.activation), jnp.float32(0.0)
+
+
+def forward(
+    params: Params, tokens: jax.Array, cfg: TransformerConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> (logits (B, S, V) f32, moe_aux ())."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+
+    aux_total = jnp.float32(0.0)
+    for layer in params.get("first", []):
+        x, aux = _block(x, layer, positions, cfg)
+        aux_total += aux
+
+    policy = (
+        None
+        if cfg.remat_policy == "full"
+        else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    )
+    if cfg.unroll:
+        # Same math as the scan below, python-unrolled (each layer remat'd):
+        # used by the dry-run calibration variants so cost_analysis counts
+        # every layer (while bodies are costed once).
+        block = jax.checkpoint(
+            lambda x, lyr: _block(x, lyr, positions, cfg), policy=policy
+        )
+        for idx in range(cfg.scan_layers):
+            layer = jax.tree_util.tree_map(lambda a: a[idx], params["layers"])
+            x, aux = block(x, layer)
+            aux_total += aux
+    else:
+
+        def body(carry, layer):
+            x, aux_total = carry
+            x, aux = _block(x, layer, positions, cfg)
+            return (x, aux_total + aux), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            jax.checkpoint(body, policy=policy), (x, aux_total), params["layers"]
+        )
+    norm = rms_norm_lean if cfg.mem_lean else rms_norm
+    x = norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    out_dtype = x.dtype if cfg.mem_lean else jnp.float32
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype)).astype(out_dtype)
+    return logits, aux_total
+
+
+def lm_loss(
+    params: Params, batch: Dict[str, jax.Array], cfg: TransformerConfig
+) -> jax.Array:
+    """Next-token cross entropy; labels < 0 are masked.
+
+    With ``mem_lean`` the (B, S, V) logit chain stays in the residual dtype
+    and only the reductions (row max, exp-sum, nll) accumulate in f32 —
+    removing the two largest f32 buffers of the entry computation (§Perf).
+    """
+    logits, aux = forward(params, batch["tokens"], cfg)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    if cfg.mem_lean:
+        row_max = jnp.max(logits, axis=-1, keepdims=True)
+        shifted = logits - row_max  # residual dtype
+        sumexp = jnp.sum(jnp.exp(shifted), axis=-1, dtype=jnp.float32)
+        logz = jnp.log(sumexp) + row_max[..., 0].astype(jnp.float32)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[
+            ..., 0
+        ].astype(jnp.float32)
+    else:
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0) + aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+class DecodeState(NamedTuple):
+    caches: Any          # stacked KVCache over scan layers
+    first_caches: Any    # tuple of per-layer KVCache for leading dense layers
+
+
+def init_decode_state(
+    cfg: TransformerConfig, batch: int, max_len: int, *, length: int = 0
+) -> DecodeState:
+    if cfg.mla is not None:
+        kshape = (batch, max_len, cfg.mla.kv_lora_rank)
+        vshape = (batch, max_len, cfg.mla.qk_rope_head_dim)
+    else:
+        kshape = vshape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+
+    def one(shape_prefix=()):
+        return KVCache(
+            k=jnp.zeros(shape_prefix + kshape, cfg.dtype),
+            v=jnp.zeros(shape_prefix + vshape, cfg.dtype),
+            length=jnp.asarray(length, jnp.int32),
+        )
+
+    stacked = KVCache(
+        k=jnp.zeros((cfg.scan_layers,) + kshape, cfg.dtype),
+        v=jnp.zeros((cfg.scan_layers,) + vshape, cfg.dtype),
+        length=jnp.asarray(length, jnp.int32),
+    )
+    first = tuple(one() for _ in range(cfg.first_dense_layers))
+    return DecodeState(caches=stacked, first_caches=first)
+
+
+def _decode_block(
+    x: jax.Array, layer: Params, cache: KVCache, cfg: TransformerConfig
+) -> Tuple[jax.Array, KVCache]:
+    norm = rms_norm_lean if cfg.mem_lean else rms_norm
+    h = norm(x, layer["norm1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, new_cache = attn.mla_decode_attention(
+            h,
+            layer["attn"],
+            cache,
+            cfg.mla,
+            n_heads=cfg.n_heads,
+            rope_theta=cfg.rope_theta,
+            norm_eps=cfg.norm_eps,
+        )
+    else:
+        a, new_cache = attn.gqa_decode_attention(
+            h,
+            layer["attn"],
+            cache,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta,
+            norm_eps=cfg.norm_eps,
+        )
+    x = x + a
+    h = norm(x, layer["norm2"], cfg.norm_eps)
+    if "moe" in layer:
+        b, s, d = h.shape
+        out, _ = moe_ffn(
+            h.reshape(b * s, d), layer["moe"], cfg.moe,
+            activation=cfg.activation, use_shard_map=cfg.moe_shard_map,
+        )
+        return x + out.reshape(b, s, d), new_cache
+    return x + gated_mlp(h, layer["mlp"], cfg.activation), new_cache
+
+
+def decode_step(
+    params: Params,
+    tokens: jax.Array,  # (B, 1)
+    state: DecodeState,
+    cfg: TransformerConfig,
+) -> Tuple[jax.Array, DecodeState]:
+    """One decode step: (B, 1) token -> (B, V) logits + updated caches."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    new_first = []
+    for layer, cache in zip(params.get("first", []), state.first_caches):
+        x, new_cache = _decode_block(x, layer, cache, cfg)
+        new_first.append(new_cache)
+
+    if cfg.unroll:
+        new_ks, new_vs = [], []
+        for idx in range(cfg.scan_layers):
+            layer = jax.tree_util.tree_map(lambda a: a[idx], params["layers"])
+            cache = KVCache(
+                k=state.caches.k[idx], v=state.caches.v[idx],
+                length=state.caches.length,
+            )
+            x, new_cache = _decode_block(x, layer, cache, cfg)
+            new_ks.append(new_cache.k)
+            new_vs.append(new_cache.v)
+        ks, vs = jnp.stack(new_ks), jnp.stack(new_vs)
+    else:
+
+        def body(x, inputs):
+            layer, k, v = inputs
+            cache = KVCache(k=k, v=v, length=state.caches.length)
+            x, new_cache = _decode_block(x, layer, cache, cfg)
+            return x, (new_cache.k, new_cache.v)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], state.caches.k, state.caches.v)
+        )
+    x = (rms_norm_lean if cfg.mem_lean else rms_norm)(
+        x, params["final_norm"], cfg.norm_eps
+    )
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype)).astype(jnp.float32)
+    new_state = DecodeState(
+        caches=KVCache(k=ks, v=vs, length=state.caches.length + 1),
+        first_caches=tuple(new_first),
+    )
+    return logits[:, 0], new_state
+
+
+def prefill(
+    params: Params, tokens: jax.Array, cfg: TransformerConfig
+) -> jax.Array:
+    """Prefill forward (logits only; cache fill elided in the dry-run cell —
+    the compute/memory-dominant part is the forward itself)."""
+    logits, _ = forward(params, tokens, cfg)
+    return logits[:, -1]

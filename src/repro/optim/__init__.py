@@ -1,0 +1,2 @@
+from repro.optim.optimizers import Adam, RowOptimizer, Sgd  # noqa: F401
+from repro.optim.schedules import constant, cosine, twin_learners_mask  # noqa: F401

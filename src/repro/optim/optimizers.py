@@ -1,0 +1,199 @@
+"""Optimizers.
+
+Two families:
+
+* **Row optimizers** — the MF/embedding path.  State lives alongside the
+  (rows, k) table; updates touch only gathered rows and are scattered back
+  with duplicate-safe ``.at[].add``.  All of them accept the paper's pruning
+  ``mask`` so Algorithm 3's truncated update composes with any optimizer
+  (paper §5.3 shows the method is optimizer-agnostic; we implement SGD,
+  Adagrad — LibMF's default — AdaDelta and Adam).
+* **Dense optimizers** — pytree-wide Adam/SGD for the non-MF architectures
+  (transformers, GNN, recsys MLPs).
+
+All functions are jit-safe and shard-transparent: they are elementwise or
+gather/scatter ops, so SPMD partitioning propagates table shardings into the
+optimizer state untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Row optimizers (embedding tables / factor matrices)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RowOptimizer:
+    """Interface: ``init(param) -> state``;  ``apply_rows`` returns updates."""
+
+    name: str = "sgd"
+    eps: float = 1e-8
+    rho: float = 0.95     # adadelta decay
+    beta1: float = 0.9    # adam
+    beta2: float = 0.999  # adam
+
+    def init(self, param: jax.Array) -> Dict[str, jax.Array]:
+        zeros = lambda: jnp.zeros_like(param)  # noqa: E731
+        if self.name == "sgd":
+            return {}
+        if self.name == "adagrad":
+            return {"acc": zeros()}
+        if self.name == "adadelta":
+            return {"eg2": zeros(), "edx2": zeros()}
+        if self.name == "adam":
+            return {"m": zeros(), "v": zeros(), "t": jnp.zeros((), jnp.int32)}
+        raise ValueError(f"unknown row optimizer {self.name!r}")
+
+    def apply_rows(
+        self,
+        param: jax.Array,
+        state: Dict[str, jax.Array],
+        idx: jax.Array,        # (B,) row indices (duplicates allowed)
+        grad_rows: jax.Array,  # (B, k) gradient of the gathered rows
+        mask: jax.Array,       # (B, k) 0/1 pruning mask (Alg. 3); 1s = update
+        lr: float | jax.Array,
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        g = grad_rows.astype(jnp.float32) * mask
+        if self.name == "sgd":
+            return param.at[idx].add((-lr * g).astype(param.dtype)), state
+
+        if self.name == "adagrad":
+            acc_rows = state["acc"][idx] + g * g
+            delta = -lr * g / jnp.sqrt(acc_rows + self.eps) * mask
+            return (
+                param.at[idx].add(delta.astype(param.dtype)),
+                {"acc": state["acc"].at[idx].add(g * g)},
+            )
+
+        if self.name == "adadelta":
+            eg2_rows = self.rho * state["eg2"][idx] + (1 - self.rho) * g * g
+            dx = (
+                -jnp.sqrt(state["edx2"][idx] + self.eps)
+                / jnp.sqrt(eg2_rows + self.eps)
+                * g
+            ) * mask
+            edx2_rows = self.rho * state["edx2"][idx] + (1 - self.rho) * dx * dx
+            # EMA state is written back per-row (set, not add): duplicates in a
+            # batch collapse to the last occurrence, matching sequential SGD up
+            # to batch reordering.
+            return (
+                param.at[idx].add(dx.astype(param.dtype)),
+                {
+                    "eg2": state["eg2"].at[idx].set(eg2_rows),
+                    "edx2": state["edx2"].at[idx].set(edx2_rows),
+                },
+            )
+
+        if self.name == "adam":
+            t = state["t"] + 1
+            m_rows = self.beta1 * state["m"][idx] + (1 - self.beta1) * g
+            v_rows = self.beta2 * state["v"][idx] + (1 - self.beta2) * g * g
+            mhat = m_rows / (1 - self.beta1 ** t.astype(jnp.float32))
+            vhat = v_rows / (1 - self.beta2 ** t.astype(jnp.float32))
+            delta = -lr * mhat / (jnp.sqrt(vhat) + self.eps) * mask
+            return (
+                param.at[idx].add(delta.astype(param.dtype)),
+                {
+                    "m": state["m"].at[idx].set(m_rows),
+                    "v": state["v"].at[idx].set(v_rows),
+                    "t": t,
+                },
+            )
+        raise ValueError(f"unknown row optimizer {self.name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Dense optimizers (full-model pytrees)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params: Pytree) -> Pytree:
+        zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {
+            "m": zeros,
+            "v": jax.tree_util.tree_map(jnp.zeros_like, zeros),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def apply(self, params: Pytree, state: Pytree, grads: Pytree, lr_scale=1.0):
+        t = state["t"] + 1
+        tf = t.astype(jnp.float32)
+        b1c = 1 - self.beta1 ** tf
+        b2c = 1 - self.beta2 ** tf
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = self.beta1 * m + (1 - self.beta1) * g
+            v = self.beta2 * v + (1 - self.beta2) * g * g
+            step = self.lr * lr_scale * (m / b1c) / (jnp.sqrt(v / b2c) + self.eps)
+            if self.weight_decay:
+                step = step + self.lr * lr_scale * self.weight_decay * p.astype(
+                    jnp.float32
+                )
+            return (p.astype(jnp.float32) - step).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "t": t}
+
+
+@dataclasses.dataclass(frozen=True)
+class Sgd:
+    lr: float = 1e-2
+    momentum: float = 0.0
+
+    def init(self, params: Pytree) -> Pytree:
+        if self.momentum == 0.0:
+            return {}
+        return {
+            "mom": jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params
+            )
+        }
+
+    def apply(self, params: Pytree, state: Pytree, grads: Pytree, lr_scale=1.0):
+        if self.momentum == 0.0:
+            new_p = jax.tree_util.tree_map(
+                lambda p, g: (p - self.lr * lr_scale * g.astype(p.dtype)).astype(
+                    p.dtype
+                ),
+                params,
+                grads,
+            )
+            return new_p, state
+
+        def upd(p, g, m):
+            m = self.momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - self.lr * lr_scale * m).astype(p.dtype), m
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["mom"])
+        out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        return (
+            treedef.unflatten([o[0] for o in out]),
+            {"mom": treedef.unflatten([o[1] for o in out])},
+        )

@@ -1,0 +1,39 @@
+"""Learning-rate schedules and optimization strategies.
+
+Includes the *twin-learners* strategy (Chin et al., PAKDD'15) evaluated in the
+paper's §5.3: a subset of latent dimensions is frozen during the first epoch
+so that, under adaptive optimizers, their accumulators stay empty and they
+later train with an effectively fresh (large) learning rate — escaping the
+"learning rate only changes dramatically in the first few epochs" problem.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: lr
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0, floor: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = floor + (lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def twin_learners_mask(k: int, epoch: int, twin_fraction: float = 0.5, dtype=jnp.float32):
+    """Per-dimension update mask for the twin-learners strategy.
+
+    Epoch 1 (``epoch == 0``): the trailing ``twin_fraction`` of latent dims is
+    frozen.  All later epochs: everything trains.  Composes multiplicatively
+    with the pruning mask from Algorithm 3.
+    """
+    if epoch > 0:
+        return jnp.ones((k,), dtype)
+    cut = int(round(k * (1.0 - twin_fraction)))
+    return (jnp.arange(k) < cut).astype(dtype)

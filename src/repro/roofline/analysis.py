@@ -1,0 +1,183 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch, mesh), all in seconds (EXPERIMENTS.md §Roofline):
+
+    compute    = HLO_FLOPs      / (chips * peak bf16 FLOP/s)
+    memory     = HLO_bytes      / (chips * HBM bandwidth)
+    collective = coll_bytes     / (chips * ICI link bandwidth)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``.  Collective bytes
+are NOT in cost_analysis: they are parsed from the partitioned HLO text by
+summing the shaped-buffer sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute result (result bytes ==
+bytes crossing links per participating device for AG/AR; a documented
+approximation for the rest).
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+from typing import Dict, Optional
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g. "f32[256,1024]{1,0}" — dtype + dims (layout suffix optional)
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9\[\],{}\. ]+?)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-buffer bytes per collective kind over the HLO module.
+
+    ``-done`` ops are skipped (their ``-start`` twin already counted).  Bytes
+    are per participating device (HLO is SPMD: one program, every device runs
+    it), which is the right numerator for a per-chip link-bandwidth roofline.
+    """
+    per_kind: Counter = Counter()
+    counts: Counter = Counter()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        if f"{m.group(2)}-done(" in line:
+            continue
+        kind = m.group(2)
+        result_part = line.split("=", 1)[0] if "=" not in line else line
+        # result shape sits between '=' and the op name
+        eq = line.find("=")
+        op_pos = line.find(kind, eq)
+        result_part = line[eq + 1 : op_pos]
+        size = _shape_bytes(result_part)
+        per_kind[kind] += size
+        counts[kind] += 1
+    out = {f"{kind}_bytes": float(per_kind.get(kind, 0)) for kind in _COLLECTIVE_KINDS}
+    out.update(
+        {f"{kind}_count": int(counts.get(kind, 0)) for kind in _COLLECTIVE_KINDS}
+    )
+    out["total_bytes"] = float(sum(per_kind.values()))
+    return out
+
+
+def op_histogram(hlo_text: str) -> Dict[str, int]:
+    """Histogram of interesting op kinds (fusion/reshape/gather/etc.) — the
+    'profile' available without hardware; used by the §Perf iterations."""
+    kinds = (
+        "fusion", "convolution", "dot", "gather", "scatter", "reshape",
+        "transpose", "sort", "while", "custom-call",
+    ) + _COLLECTIVE_KINDS
+    hist: Counter = Counter()
+    op_re = re.compile(r"=\s*(?:[a-z0-9\[\],{}\(\) ]+?)\s*([a-z][a-z0-9-]*)\(")
+    for line in hlo_text.splitlines():
+        m = op_re.search(line)
+        if m and m.group(1) in kinds:
+            hist[m.group(1)] += 1
+    return dict(hist)
+
+
+def roofline_terms(
+    flops: float,
+    bytes_accessed: float,
+    coll_bytes: float,
+    chips: int,
+    *,
+    model_flops: Optional[float] = None,
+) -> Dict[str, float]:
+    compute_s = flops / (chips * hw.PEAK_BF16_FLOPS)
+    memory_s = bytes_accessed / (chips * hw.HBM_BANDWIDTH)
+    collective_s = coll_bytes / (chips * hw.ICI_LINK_BANDWIDTH)
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    out = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": max(compute_s, memory_s, collective_s),
+    }
+    if model_flops:
+        out["model_flops"] = model_flops
+        out["useful_flop_fraction"] = model_flops / max(flops, 1.0)
+        # roofline fraction: time the useful math would take at peak, over the
+        # time the dominant term actually costs.
+        out["roofline_fraction"] = (
+            model_flops / (chips * hw.PEAK_BF16_FLOPS)
+        ) / max(out["bound_s"], 1e-30)
+    return out
+
+
+def extrapolate_depth(
+    calib1: Dict, calib2: Dict, scan_layers: int
+) -> Dict[str, float]:
+    """Exact per-step cost from two unrolled depth variants.
+
+    XLA costs while-loop bodies once per program, so a scanned L-layer stack
+    under-reports.  With homogeneous layers, cost(depth d, unrolled)
+    = entry + d * body, hence from depth-1 and depth-2 compiles:
+
+        body  = c2 - c1
+        entry = 2*c1 - c2
+        total(L) = entry + L * body
+
+    Applied to flops, bytes_accessed, and every collective-byte counter.
+    """
+
+    def get(rec, *keys):
+        node = rec
+        for key in keys:
+            node = node.get(key, 0.0) if isinstance(node, dict) else 0.0
+        return float(node or 0.0)
+
+    out: Dict[str, float] = {}
+    for field, keys in (
+        ("flops", ("cost", "flops")),
+        ("bytes_accessed", ("cost", "bytes_accessed")),
+        ("collective_bytes", ("collectives", "total_bytes")),
+    ):
+        c1 = get(calib1, *keys)
+        c2 = get(calib2, *keys)
+        body = c2 - c1
+        entry = 2 * c1 - c2
+        out[field] = max(entry + scan_layers * body, 0.0)
+    return out
+
+
+def lm_model_flops(param_count: int, active_param_count: int, tokens: int,
+                   kind: str) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D for forward-only (N = active
+    params for MoE)."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active_param_count * tokens

@@ -1,0 +1,8 @@
+"""Hardware model: TPU v5e, per chip (the target platform)."""
+
+PEAK_BF16_FLOPS = 197e12      # FLOP/s
+HBM_BANDWIDTH = 819e9         # bytes/s
+ICI_LINK_BANDWIDTH = 50e9     # bytes/s per link
+
+CHIPS_SINGLE_POD = 256        # 16 x 16
+CHIPS_MULTI_POD = 512         # 2 x 16 x 16

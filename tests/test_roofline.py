@@ -1,0 +1,79 @@
+"""Unit tests for the roofline machinery: HLO collective parsing, depth
+extrapolation, and term classification."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline import analysis, hw
+
+
+HLO_SAMPLE = """
+HloModule test
+fused_computation {
+  p0 = f32[256,1024]{1,0} parameter(0)
+}
+ENTRY main {
+  %x = f32[256,1024]{1,0} parameter(0)
+  %ar = f32[256,1024]{1,0} all-reduce(%x), replica_groups={{0,1}}, to_apply=%add
+  %ag = bf16[512,64]{1,0} all-gather(%y), dimensions={0}
+  %rs = f32[128,8]{1,0} reduce-scatter(%z), dimensions={0}
+  %aa = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-to-all(%a, %b)
+  %cp = u8[1000]{0} collective-permute(%c), source_target_pairs={{0,1}}
+  %ard = f32[4,4]{1,0} all-reduce-done(%ars)
+  %ars = f32[4,4]{1,0} all-reduce-start(%x2)
+  %dot1 = f32[8,8]{1,0} dot(%m, %n), lhs_contracting_dims={1}
+}
+"""
+
+
+def test_collective_bytes_parser():
+    out = analysis.collective_bytes(HLO_SAMPLE)
+    assert out["all-reduce_bytes"] == 256 * 1024 * 4 + 4 * 4 * 4  # ar + ar-start
+    assert out["all-gather_bytes"] == 512 * 64 * 2
+    assert out["reduce-scatter_bytes"] == 128 * 8 * 4
+    assert out["all-to-all_bytes"] == 2 * 16 * 16 * 4  # tuple result
+    assert out["collective-permute_bytes"] == 1000
+    assert out["all-reduce_count"] == 2  # -done excluded, -start counted once
+    assert out["total_bytes"] == sum(
+        out[f"{k}_bytes"] for k in (
+            "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute",
+        )
+    )
+
+
+def test_op_histogram():
+    hist = analysis.op_histogram(HLO_SAMPLE)
+    assert hist.get("dot") == 1
+    assert hist.get("all-gather") == 1
+
+
+def test_extrapolate_depth_exact():
+    """entry=5, body=3 -> c1=8, c2=11; total(L=10) must be 35."""
+    c1 = {"cost": {"flops": 8.0, "bytes_accessed": 80.0},
+          "collectives": {"total_bytes": 800.0}}
+    c2 = {"cost": {"flops": 11.0, "bytes_accessed": 110.0},
+          "collectives": {"total_bytes": 1100.0}}
+    out = analysis.extrapolate_depth(c1, c2, 10)
+    assert out["flops"] == 5 + 10 * 3
+    assert out["bytes_accessed"] == 50 + 10 * 30
+    assert out["collective_bytes"] == 500 + 10 * 300
+
+
+def test_roofline_terms_classification():
+    chips = 256
+    # memory-bound: tiny flops, huge bytes
+    t = analysis.roofline_terms(1e12, 1e15, 1e10, chips, model_flops=5e11)
+    assert t["dominant"] == "memory"
+    assert 0 < t["roofline_fraction"] <= 1.0
+    assert abs(t["compute_s"] - 1e12 / (chips * hw.PEAK_BF16_FLOPS)) < 1e-12
+    # collective-bound
+    t2 = analysis.roofline_terms(1e12, 1e12, 1e15, chips)
+    assert t2["dominant"] == "collective"
+
+
+def test_shape_bytes_dtypes():
+    assert analysis._shape_bytes("f32[10,10]") == 400
+    assert analysis._shape_bytes("bf16[8]") == 16
+    assert analysis._shape_bytes("pred[64]") == 64
+    assert analysis._shape_bytes("(f32[2,2], s8[4])") == 16 + 4
+    assert analysis._shape_bytes("f32[]") == 4  # scalar

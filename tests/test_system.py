@@ -1,0 +1,124 @@
+"""End-to-end behaviour tests for the paper's system (DP-MF trainer)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import DPMFTrainer, TrainConfig, percentage_mae, work_speedup
+from repro.data import paper_dataset, synthetic_ratings, train_test_split
+
+
+@pytest.fixture(scope="module")
+def movielens_small():
+    ds = synthetic_ratings(400, 600, 20000, seed=0)
+    return train_test_split(ds, 0.2, seed=0)
+
+
+def _run(train_ds, test_ds, **overrides):
+    defaults = dict(k=24, epochs=5, batch_size=2048, pruning_rate=0.0,
+                    optimizer="adagrad", seed=0)
+    defaults.update(overrides)
+    trainer = DPMFTrainer(TrainConfig(**defaults), train_ds, test_ds)
+    trainer.run()
+    return trainer
+
+
+def test_dense_training_learns(movielens_small):
+    train_ds, test_ds = movielens_small
+    trainer = _run(train_ds, test_ds)
+    maes = [r.test_mae for r in trainer.history]
+    assert maes[-1] < maes[0], maes
+    assert all(np.isfinite(m) for m in maes)
+    # rate 0 => thresholds stay 0 and no work is ever skipped
+    assert trainer.history[-1].t_p == 0.0
+    assert trainer.mean_work_fraction() == 1.0
+
+
+def test_pruned_training_full_pipeline(movielens_small):
+    """The paper's claims, end to end: pruning reduces executed work
+    (speedup > 1), costs bounded extra error, thresholds match Eq. 7/8."""
+    train_ds, test_ds = movielens_small
+    dense = _run(train_ds, test_ds, epochs=8)
+    pruned = _run(train_ds, test_ds, epochs=8, pruning_rate=0.3)
+
+    # work really skipped from epoch 2 on
+    assert pruned.mean_work_fraction() < 0.95
+    assert work_speedup(pruned.history) > 1.05
+    # thresholds were calibrated once, after epoch 1
+    assert pruned.history[0].t_p == 0.0
+    assert pruned.history[1].t_p > 0.0
+    assert all(
+        r.t_p == pruned.history[1].t_p for r in pruned.history[1:]
+    ), "threshold must be determined once (paper §4.2)"
+    # rearrangement happened
+    assert pruned.perm is not None
+    assert sorted(np.asarray(pruned.perm).tolist()) == list(range(24))
+
+    # Bounded error increase.  The paper's <=20% P_MAE regime needs the LibMF
+    # protocol (non-negative init, convergence-level epochs) — covered by
+    # benchmarks/bench_paper_figures.fig11; this quick test uses zero-mean
+    # init at 8 epochs where truncation costs more.
+    pmae = percentage_mae(pruned.history[-1].test_mae, dense.history[-1].test_mae)
+    assert pmae < 100.0, f"error blow-up: {pmae}%"
+
+
+def test_pruned_equals_dense_at_rate_zero(movielens_small):
+    """rate=0 shares the code path and must give bit-identical history."""
+    train_ds, test_ds = movielens_small
+    a = _run(train_ds, test_ds, epochs=3)
+    b = _run(train_ds, test_ds, epochs=3, pruning_rate=0.0)
+    np.testing.assert_allclose(
+        np.asarray(a.params.p), np.asarray(b.params.p), rtol=0, atol=0
+    )
+
+
+@pytest.mark.parametrize("optimizer", ["sgd", "adagrad", "adadelta", "adam"])
+def test_optimizer_agnostic(movielens_small, optimizer):
+    """Paper §5.3: the method applies across optimizers."""
+    train_ds, test_ds = movielens_small
+    # plain minibatch SGD accumulates duplicate-row updates additively; a
+    # smaller lr keeps it stable at batch 2048 (the paper steps per rating)
+    lr = {"sgd": 0.005, "adagrad": 0.05, "adadelta": 1.0, "adam": 0.005}[optimizer]
+    trainer = _run(train_ds, test_ds, epochs=4, pruning_rate=0.3,
+                   optimizer=optimizer, lr=lr)
+    assert np.isfinite(trainer.history[-1].test_mae)
+    assert trainer.mean_work_fraction() < 1.0
+
+
+@pytest.mark.parametrize("variant", ["bias", "svdpp"])
+def test_variant_agnostic(movielens_small, variant):
+    """BiasSVD and SVD++ share the training process (paper §2.1)."""
+    train_ds, test_ds = movielens_small
+    trainer = _run(train_ds, test_ds, epochs=4, pruning_rate=0.3, variant=variant)
+    maes = [r.test_mae for r in trainer.history]
+    assert all(np.isfinite(m) for m in maes)
+    assert maes[-1] < maes[0] * 1.5
+
+
+@pytest.mark.parametrize("overrides", [
+    dict(strategy="twin"),
+    dict(init_method="uniform"),
+    dict(lr=0.15),
+])
+def test_hyperparameter_agnostic(movielens_small, overrides):
+    """Paper §5.3: twin learners / uniform init / other learning rates."""
+    train_ds, test_ds = movielens_small
+    trainer = _run(train_ds, test_ds, epochs=4, pruning_rate=0.3, **overrides)
+    assert np.isfinite(trainer.history[-1].test_mae)
+
+
+def test_fused_kernel_training_path(movielens_small):
+    """FunkSVD+SGD routed through the fused Pallas kernel (interpret mode)
+    trains to a comparable MAE as the XLA path."""
+    train_ds, test_ds = movielens_small
+    xla = _run(train_ds, test_ds, epochs=3, pruning_rate=0.3, lr=0.005,
+               optimizer="sgd", use_fused_kernel=False)
+    pal = _run(train_ds, test_ds, epochs=3, pruning_rate=0.3, lr=0.005,
+               optimizer="sgd", use_fused_kernel=True)
+    assert abs(xla.history[-1].test_mae - pal.history[-1].test_mae) < 0.05
+
+
+def test_paper_dataset_shapes():
+    ds = paper_dataset("movielens100k", scale=0.1)
+    assert ds.num_users == 94 and ds.num_items == 168
+    ds = paper_dataset("jester", scale=0.01)
+    assert ds.rating_min == -10.0 and ds.rating_max == 10.0
