@@ -15,15 +15,22 @@ def main() -> None:
     parser.add_argument("--full", action="store_true",
                         help="paper-scale datasets/epochs (slow)")
     parser.add_argument("--only", default=None,
-                        help="comma-separated subset: figures,kernels,roofline")
+                        help="comma-separated subset: "
+                             "figures,kernels,roofline,serving")
     args = parser.parse_args()
 
-    from benchmarks import bench_kernels, bench_paper_figures, bench_roofline
+    from benchmarks import (
+        bench_kernels,
+        bench_paper_figures,
+        bench_roofline,
+        bench_serving,
+    )
 
     suites = {
         "figures": bench_paper_figures.run,
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,
+        "serving": bench_serving.run,
     }
     selected = (
         {s.strip() for s in args.only.split(",")} if args.only else set(suites)

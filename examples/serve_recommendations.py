@@ -1,17 +1,16 @@
-"""Serving example: train briefly, checkpoint, then serve batched top-k
-recommendation requests through the dynamically-pruned scoring path (the
-Pallas pruned-matmul kernel, interpret mode on CPU).
+"""Serving example: train briefly, then serve batched top-k recommendation
+requests through the serving engine (streaming pruned top-k — the (B, n)
+score matrix is never materialized).
 
     PYTHONPATH=src python examples/serve_recommendations.py
 """
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DPMFTrainer, TrainConfig
-from repro.core.mf import predict_all_items
 from repro.data import paper_dataset, train_test_split
+from repro.serving import MicroBatcher, ServingEngine
 
 ds = paper_dataset("movielens100k", seed=0, scale=0.3)
 train_ds, test_ds = train_test_split(ds, 0.2, seed=0)
@@ -22,24 +21,27 @@ trainer = DPMFTrainer(
 trainer.run()
 print(f"trained: test MAE {trainer.history[-1].test_mae:.4f}")
 
-users = jnp.asarray([3, 14, 15], jnp.int32)
-scores = predict_all_items(
-    trainer.params, users, trainer.t_p, trainer.t_q, use_kernel=True
-)
-top = np.asarray(jnp.argsort(-scores, axis=1)[:, :5])
-for row, user in enumerate(np.asarray(users)):
-    recs = ", ".join(
-        f"item {item} ({float(scores[row, item]):.2f})" for item in top[row]
-    )
-    print(f"user {user}: {recs}")
+# Load once: per-item ranks, masked factors, and tile layout are precomputed
+# here, not per request.
+engine = ServingEngine(trainer.params, trainer.t_p, trainer.t_q)
 
-# batched-request latency (XLA masked path — the production CPU fallback)
+for user, recs in zip([3, 14, 15], engine.recommend([3, 14, 15], topk=5)):
+    line = ", ".join(f"item {r['item']} ({r['score']:.2f})" for r in recs)
+    print(f"user {user}: {line}")
+
+# micro-batched single-user traffic: tickets collapse into one engine batch
+batcher = MicroBatcher(engine, topk=5)
+tickets = [batcher.submit(u) for u in (3, 14, 15, 3)]
+results = batcher.drain()
+assert np.array_equal(results[tickets[0]][1], results[tickets[3]][1])
+print(f"micro-batched {len(tickets)} tickets in one flush")
+
+# batched-request latency through the streaming scoring path
 rng = np.random.default_rng(0)
-batch_users = jnp.asarray(rng.integers(0, ds.num_users, 256), jnp.int32)
+batch_users = rng.integers(0, ds.num_users, 256)
+engine.topk(batch_users, topk=10)  # warm the jit cache
 start = time.perf_counter()
-predict_all_items(
-    trainer.params, batch_users, trainer.t_p, trainer.t_q, use_kernel=False
-).block_until_ready()
+engine.topk(batch_users, topk=10)
 dt = time.perf_counter() - start
-print(f"256 catalog-scoring requests in {dt * 1e3:.1f} ms "
-      f"({256 / dt:.0f} req/s on 1 CPU core)")
+print(f"256 top-10 requests in {dt * 1e3:.1f} ms "
+      f"({256 / dt:.0f} req/s on 1 CPU core, no (B, n) score matrix)")

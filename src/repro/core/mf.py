@@ -370,8 +370,14 @@ def train_step_shard_map(
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro.distributed import mesh_compat
+
+    mesh = mesh_compat.resolve_mesh(mesh)
     if mesh is None:
-        mesh = jax.sharding.get_abstract_mesh()
+        raise ValueError(
+            "train_step_shard_map needs a mesh: pass mesh= or enter a "
+            "mesh_compat.use_mesh(...) context"
+        )
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     n_dp = 1
     for a in dp:
@@ -483,7 +489,7 @@ def train_step_shard_map(
     acc_p_in = opt_state.p.get("acc") if adagrad else params.p
     acc_q_in = opt_state.q.get("acc") if adagrad else params.q
 
-    new_p, new_q, acc_p, acc_q, abs_err, work = jax.shard_map(
+    new_p, new_q, acc_p, acc_q, abs_err, work = mesh_compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(

@@ -1,0 +1,130 @@
+"""Version-compat shims for jax's moving mesh / shard_map API surface.
+
+The mesh entry points this repo relies on were renamed or relocated across
+jax releases:
+
+* ``jax.sharding.get_abstract_mesh`` / ``jax.sharding.set_mesh`` exist only
+  on newer jax; older releases express the ambient mesh through the classic
+  ``with mesh:`` context (``thread_resources.env.physical_mesh``).
+* ``jax.shard_map`` (kwarg ``check_vma``) replaced
+  ``jax.experimental.shard_map.shard_map`` (kwarg ``check_rep``).
+* On jax < 0.5 lowering a shard_map against an ``AbstractMesh`` under jit is
+  miscompiled by the partitioner ("sharding-remover" RET_CHECK), so abstract
+  meshes are resolved to the ambient *concrete* mesh before use.
+
+Every mesh-context / shard_map call site in this repo goes through this
+module; feature probing (never version string parsing) keeps it working on
+both sides of each rename.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Optional
+
+import jax
+
+try:  # public since 0.4.x
+    from jax.sharding import AbstractMesh as _AbstractMesh
+except ImportError:  # pragma: no cover - ancient jax
+    _AbstractMesh = ()
+
+
+def _nonempty(mesh) -> bool:
+    return mesh is not None and bool(getattr(mesh, "axis_names", ()))
+
+
+def _ambient_concrete_mesh():
+    """The mesh installed by the classic ``with mesh:`` context, if any."""
+    try:
+        from jax._src import mesh as _mesh_lib
+
+        physical = _mesh_lib.thread_resources.env.physical_mesh
+    except Exception:  # pragma: no cover - internals moved
+        return None
+    return physical if _nonempty(physical) and not physical.empty else None
+
+
+def get_abstract_mesh():
+    """Ambient mesh or ``None``.
+
+    Returns whatever the running jax considers "the mesh in scope": the
+    abstract mesh from ``jax.sharding.set_mesh`` on new jax, or the concrete
+    mesh from a ``with mesh:`` / :func:`use_mesh` context on old jax.  An
+    empty/unset mesh normalizes to ``None`` so callers can fall back.
+    """
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        mesh = getter()
+        if _nonempty(mesh):
+            return mesh
+    return _ambient_concrete_mesh()
+
+
+def resolve_mesh(mesh=None):
+    """Normalize a caller-supplied mesh (or None) to something lowerable.
+
+    ``None`` resolves to the ambient mesh.  On jax without native
+    ``jax.shard_map`` an ``AbstractMesh`` is swapped for the ambient concrete
+    mesh with the same axis names (abstract lowering is broken there); when
+    no matching concrete mesh is in scope the abstract mesh is returned
+    unchanged and jax reports its own error.
+    """
+    if mesh is None:
+        return get_abstract_mesh()
+    if not hasattr(jax, "shard_map") and isinstance(mesh, _AbstractMesh):
+        ambient = _ambient_concrete_mesh()
+        if ambient is not None and tuple(ambient.axis_names) == tuple(
+            mesh.axis_names
+        ):
+            return ambient
+    return mesh
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Cross-version ``jax.sharding.set_mesh``: installs ``mesh`` as the
+    ambient mesh for the dynamic extent of the block."""
+    setter = getattr(jax.sharding, "set_mesh", None) or getattr(
+        jax.sharding, "use_mesh", None
+    )
+    if setter is not None:
+        with setter(mesh):
+            yield mesh
+    else:  # classic thread_resources context
+        with mesh:
+            yield mesh
+
+
+def shard_map(
+    f: Callable[..., Any],
+    *,
+    mesh=None,
+    in_specs,
+    out_specs,
+    check_vma: bool = True,
+):
+    """Cross-version ``jax.shard_map`` (new) / ``shard_map`` (experimental).
+
+    ``check_vma`` maps onto the old API's ``check_rep``.  The mesh is passed
+    through :func:`resolve_mesh` first, so callers may hand in ``None`` (use
+    ambient), a concrete ``Mesh``, or an ``AbstractMesh``.
+    """
+    mesh = resolve_mesh(mesh)
+    native = getattr(jax, "shard_map", None)
+    if native is not None:
+        try:
+            return native(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=check_vma,
+            )
+        except TypeError:  # jax that renamed the kwarg but not the module
+            return native(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_vma,
+            )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

@@ -8,5 +8,6 @@ oracles (``ref.py``).
 from repro.kernels.ops import (  # noqa: F401
     fused_mf_sgd,
     pruned_matmul,
+    pruned_topk,
     tile_block_stats,
 )

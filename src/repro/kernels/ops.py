@@ -12,10 +12,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.ranks import effective_ranks
+from repro.core.ranks import effective_ranks, rank_mask
 from repro.kernels import ref
 from repro.kernels.fused_mf_sgd import fused_mf_sgd_padded
 from repro.kernels.pruned_matmul import pruned_matmul_padded
+from repro.kernels.pruned_topk import pruned_topk_padded
 
 
 def _default_interpret() -> bool:
@@ -76,6 +77,149 @@ def pruned_matmul(
         interpret=interpret,
     )
     return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("topk",))
+def stream_topk_tiles(pm, q_tiles, b_tiles, offs, *, topk):
+    """Streaming XLA top-k over pre-tiled item factors: scan item tiles,
+    folding each (m, block_n) score tile into a running (m, topk) buffer
+    with ``lax.top_k`` over the concatenation.
+
+    ``pm`` is the rank-masked user block (m, k); ``q_tiles`` the rank-masked
+    item factors (tiles, block_n, k); ``b_tiles`` per-item additive biases
+    with ``-inf`` on padding rows (so they can never be selected); ``offs``
+    each tile's first global item index.  Peak live memory is
+    O(m * (topk + block_n)) — the (m, n) score matrix is never materialized.
+    Concatenating the running buffer FIRST makes ``lax.top_k``'s
+    lowest-index tie preference resolve toward earlier item tiles, matching
+    the stable dense argsort oracle.  Shared by :func:`pruned_topk`
+    (``use_kernel=False``) and the serving engine's local + sharded paths —
+    the tie-order subtlety lives in exactly one place.
+    """
+    m = pm.shape[0]
+    block_n = q_tiles.shape[1]
+
+    def merge(carry, tile):
+        run_s, run_i = carry
+        qt, bt, off = tile
+        s = pm @ qt.T + bt[None, :]
+        gidx = off + jnp.arange(block_n, dtype=jnp.int32)
+        cand_s = jnp.concatenate([run_s, s], axis=1)
+        cand_i = jnp.concatenate(
+            [run_i, jnp.broadcast_to(gidx, (m, block_n))], axis=1
+        )
+        new_s, sel = jax.lax.top_k(cand_s, topk)
+        return (new_s, jnp.take_along_axis(cand_i, sel, axis=1)), None
+
+    init = (
+        jnp.full((m, topk), -jnp.inf, jnp.float32),
+        jnp.zeros((m, topk), jnp.int32),
+    )
+    (scores, idx), _ = jax.lax.scan(merge, init, (q_tiles, b_tiles, offs))
+    return scores, idx
+
+
+def tile_catalog(qm, bias, block_n: int):
+    """Pad + reshape rank-masked item factors into the streaming layout:
+    ``(tiles, block_n, k)`` factors, ``(tiles, block_n)`` biases with -inf
+    on padding rows, ``(tiles,)`` global offsets."""
+    n, k = qm.shape
+    pad = (-n) % block_n
+    qm_p = jnp.pad(qm, ((0, pad), (0, 0)))
+    bias_p = jnp.pad(bias, (0, pad), constant_values=-jnp.inf)
+    tiles = (n + pad) // block_n
+    return (
+        qm_p.reshape(tiles, block_n, k),
+        bias_p.reshape(tiles, block_n),
+        jnp.arange(tiles, dtype=jnp.int32) * block_n,
+    )
+
+
+def _pruned_topk_scan(p, q, r_u, r_i, item_bias, *, topk, block_n):
+    k = p.shape[1]
+    pm = p.astype(jnp.float32) * rank_mask(r_u, k)
+    qm = q.astype(jnp.float32) * rank_mask(r_i, k)
+    q_tiles, b_tiles, offs = tile_catalog(
+        qm, item_bias.astype(jnp.float32), block_n
+    )
+    return stream_topk_tiles(pm, q_tiles, b_tiles, offs, topk=topk)
+
+
+def pad_catalog_for_topk_kernel(
+    q, r_i, item_bias, *, block_n: int = 256, block_k: int = 128
+):
+    """Item-side operands of ``pruned_topk_padded``: raw factors, ranks, and
+    biases padded to the kernel's block multiples.  The single definition of
+    the kernel's catalog-layout contract — the serving engine precomputes
+    this once at load time and :func:`pruned_topk` builds it per call."""
+    n = q.shape[0]
+    bias = item_bias if item_bias is not None else jnp.zeros((n,), jnp.float32)
+    return (
+        _pad_to(_pad_to(q, block_n, 0), block_k, 1),
+        _pad_to(r_i[:, None].astype(jnp.int32), block_n, 0),
+        _pad_to(bias.astype(jnp.float32)[:, None], block_n, 0),
+    )
+
+
+def pad_users_for_topk_kernel(p, r_u, *, block_m: int = 128, block_k: int = 128):
+    """User-side operands of ``pruned_topk_padded`` (see above)."""
+    return (
+        _pad_to(_pad_to(p, block_m, 0), block_k, 1),
+        _pad_to(r_u[:, None].astype(jnp.int32), block_m, 0),
+    )
+
+
+def pruned_topk(
+    p: jax.Array,
+    q: jax.Array,
+    t_p: jax.Array | float,
+    t_q: jax.Array | float,
+    topk: int,
+    *,
+    item_bias: jax.Array | None = None,
+    block_m: int = 128,
+    block_n: int = 256,
+    block_k: int = 128,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k pruned scores per user row: ``(m, k) x (n, k) -> 2 x (m, topk)``.
+
+    The serving hot path.  Returns ``(scores, item_indices)`` identical to
+    scoring everything and argsorting (``ref.pruned_topk_ref``) but without
+    materializing the (m, n) score matrix: the Pallas kernel keeps a running
+    top-k in VMEM across item tiles; ``use_kernel=False`` selects the
+    streaming ``lax.top_k``-merge formulation (the production CPU path).
+    """
+    n = q.shape[0]
+    if not 0 < topk <= n:
+        raise ValueError(f"topk must be in [1, {n}], got {topk}")
+    r_u = effective_ranks(p, t_p)
+    r_i = effective_ranks(q, t_q)
+
+    if not use_kernel:
+        bias = item_bias if item_bias is not None else jnp.zeros((n,), jnp.float32)
+        return _pruned_topk_scan(
+            p, q, r_u, r_i, bias, topk=topk, block_n=block_n
+        )
+
+    if interpret is None:
+        interpret = _default_interpret()
+    m = p.shape[0]
+    pp, rup = pad_users_for_topk_kernel(p, r_u, block_m=block_m, block_k=block_k)
+    qp, rip, biasp = pad_catalog_for_topk_kernel(
+        q, r_i, item_bias, block_n=block_n, block_k=block_k
+    )
+    scores, idx = pruned_topk_padded(
+        pp, qp, rup, rip, biasp,
+        topk=topk,
+        n_items=n,
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return scores[:m, :topk], idx[:m, :topk]
 
 
 def fused_mf_sgd(

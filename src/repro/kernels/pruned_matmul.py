@@ -111,11 +111,13 @@ def pruned_matmul_padded(
     grid = (m // block_m, n // block_n, k // block_k)
 
     kernel = functools.partial(_kernel, block_k=block_k)
-    scratch = (
-        [_VMEM((block_m, block_n), jnp.float32)]
-        if _VMEM is not None
-        else [pl.BlockSpec.__class__]  # unreachable: pltpu always importable
-    )
+    if _VMEM is None:
+        raise RuntimeError(
+            "jax.experimental.pallas.tpu is unavailable on this jax install; "
+            "pruned_matmul_padded needs a pltpu.VMEM accumulator. Use the XLA "
+            "reference path instead (kernels.ops.pruned_matmul(use_kernel=False))."
+        )
+    scratch = [_VMEM((block_m, block_n), jnp.float32)]
     params = _compiler_params()
     kwargs = {"compiler_params": params} if params is not None else {}
 

@@ -37,6 +37,30 @@ def pruned_matmul_ref(
     return jnp.dot(pm, qm.T, preferred_element_type=jnp.float32).astype(out_dtype)
 
 
+def pruned_topk_ref(
+    p: jax.Array,    # (m, k)
+    q: jax.Array,    # (n, k)
+    r_u: jax.Array,  # (m,) int32
+    r_i: jax.Array,  # (n,) int32
+    topk: int,
+    *,
+    item_bias: jax.Array | None = None,  # (n,) folded in before ranking
+):
+    """Serving oracle: dense pruned scores, full argsort, take top-k.
+
+    Deliberately materializes the (m, n) score matrix — this is the
+    score-everything-then-argsort baseline the serving engine replaces; the
+    engine's streaming paths must return identical (scores, indices).
+    Stable argsort resolves score ties toward the lower item index, matching
+    the streaming merges (earlier tiles win ties).
+    """
+    scores = pruned_matmul_ref(p, q, r_u, r_i)
+    if item_bias is not None:
+        scores = scores + item_bias[None, :].astype(jnp.float32)
+    order = jnp.argsort(-scores, axis=1)[:, :topk].astype(jnp.int32)
+    return jnp.take_along_axis(scores, order, axis=1), order
+
+
 def pruned_pair_dot_ref(
     p_rows: jax.Array,  # (b, k)
     q_rows: jax.Array,  # (b, k)

@@ -1,11 +1,14 @@
 """Serving launcher: batched top-k recommendation from a trained DP-MF
-checkpoint, through the dynamically-pruned scoring path.
+checkpoint through the serving engine (``repro.serving``).
 
     PYTHONPATH=src python -m repro.launch.serve --ckpt /tmp/dpmf_ckpt \
         --users 0 1 2 --topk 10
 
-Serving is the paper's "prediction" stage: one pruned (B, k) x (n, k) product
-over the item catalog (the Pallas kernel on TPU; interpret mode here).
+The engine restores the FULL ``MFParams`` (biases and SVD++ implicit factors
+included — not just ``p``/``q``), precomputes the per-item ranks and tiled
+factor layout once at load, and answers requests through the streaming
+pruned top-k path (Pallas kernel on TPU, ``lax.top_k``-merge scan on CPU)
+without ever materializing the (B, n) score matrix.
 """
 from __future__ import annotations
 
@@ -13,11 +16,9 @@ import argparse
 import json
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro import checkpoint as ckpt_lib
-from repro.core import mf
+from repro.serving import ServingEngine, load_mf_checkpoint
 
 
 def main() -> None:
@@ -27,43 +28,47 @@ def main() -> None:
     parser.add_argument("--topk", type=int, default=10)
     parser.add_argument("--batched-requests", type=int, default=0,
                         help="simulate N random-user requests and report latency")
-    parser.add_argument("--no-kernel", action="store_true")
+    parser.add_argument("--max-batch", type=int, default=256,
+                        help="micro-batch bucket cap")
+    parser.add_argument("--use-kernel", action="store_true",
+                        help="force the Pallas kernel path (default: TPU only)")
+    parser.add_argument("--history", default=None,
+                        help="(.npy) padded per-user item-history matrix for "
+                             "SVD++ checkpoints (see data.build_user_history)")
     args = parser.parse_args()
 
-    step = ckpt_lib.latest_step(args.ckpt)
-    if step is None:
-        raise SystemExit(f"no checkpoint under {args.ckpt}")
-    with np.load(f"{args.ckpt}/step_{step:012d}/arrays.npz") as data:
-        p = jnp.asarray(data["params__p"])
-        q = jnp.asarray(data["params__q"])
-        t_p = jnp.asarray(data["t_p"])
-        t_q = jnp.asarray(data["t_q"])
-    params = mf.MFParams(p=p, q=q, user_bias=None, item_bias=None,
-                         global_mean=None, implicit=None)
+    params, t_p, t_q, _, meta = load_mf_checkpoint(args.ckpt)
+    user_history = None if args.history is None else np.load(args.history)
+    if params.implicit is not None and user_history is None:
+        print("# warning: SVD++ checkpoint served without --history — "
+              "implicit factors contribute nothing (user vectors fall back "
+              "to p alone)")
+    engine = ServingEngine(
+        params, t_p, t_q,
+        max_batch=args.max_batch,
+        use_kernel=True if args.use_kernel else None,
+        user_history=user_history,
+        allow_missing_history=True,
+    )
+    variant = (
+        "svdpp" if params.implicit is not None
+        else "bias" if params.user_bias is not None
+        else "funk"
+    )
+    print(f"# loaded step {meta.get('step')} variant={variant} "
+          f"({engine.num_users} users x {engine.n_items} items, k={engine.k})")
 
-    def recommend(user_ids):
-        scores = mf.predict_all_items(
-            params, jnp.asarray(user_ids, jnp.int32), t_p, t_q,
-            use_kernel=not args.no_kernel,
-        )
-        top = np.asarray(jnp.argsort(-scores, axis=1)[:, : args.topk])
-        return top, np.asarray(scores)
-
-    top, scores = recommend(np.asarray(args.users))
-    out = {
-        str(u): [
-            {"item": int(i), "score": round(float(scores[row, i]), 4)}
-            for i in top[row]
-        ]
-        for row, u in enumerate(args.users)
-    }
-    print(json.dumps(out, indent=2))
+    recs = engine.recommend(args.users, topk=args.topk)
+    print(json.dumps({str(u): r for u, r in zip(args.users, recs)}, indent=2))
 
     if args.batched_requests:
         rng = np.random.default_rng(0)
-        users = rng.integers(0, p.shape[0], args.batched_requests)
+        users = rng.integers(0, engine.num_users, args.batched_requests)
+        # warm every bucket the request mix hits (incl. the tail chunk's), so
+        # no compile lands inside the timed region
+        engine.topk(users, args.topk)
         start = time.perf_counter()
-        recommend(users)
+        engine.topk(users, args.topk)
         dt = time.perf_counter() - start
         print(f"batched: {args.batched_requests} requests in {dt:.3f}s "
               f"({args.batched_requests / dt:.1f} req/s)")

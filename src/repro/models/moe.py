@@ -67,7 +67,9 @@ def moe_ffn(
     dispatch EP formulation (moe_ffn_shard_map) when an ambient mesh with a
     "model" axis is set; otherwise falls back to the XLA-SPMD path."""
     if use_shard_map:
-        am = jax.sharding.get_abstract_mesh()
+        from repro.distributed import mesh_compat
+
+        am = mesh_compat.get_abstract_mesh()
         if (
             am is not None
             and "model" in getattr(am, "axis_names", ())
@@ -173,8 +175,14 @@ def moe_ffn_shard_map(
 ) -> Tuple[jax.Array, jax.Array]:
     from jax.sharding import PartitionSpec as P
 
+    from repro.distributed import mesh_compat
+
+    mesh = mesh_compat.resolve_mesh(mesh)
     if mesh is None:
-        mesh = jax.sharding.get_abstract_mesh()
+        raise ValueError(
+            "moe_ffn_shard_map needs a mesh: pass mesh= or enter a "
+            "mesh_compat.use_mesh(...) context"
+        )
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     n_model = mesh.shape["model"]
     e_loc = cfg.num_experts // n_model
@@ -236,7 +244,7 @@ def moe_ffn_shard_map(
         out = jax.lax.psum(out_loc, "model").astype(x_blk.dtype)
         return out, aux[None]
 
-    out, aux = jax.shard_map(
+    out, aux = mesh_compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(

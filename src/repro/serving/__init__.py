@@ -1,0 +1,10 @@
+"""Serving: batched, pruned top-k recommendation from trained checkpoints."""
+from repro.serving.batching import (  # noqa: F401
+    LRUCache,
+    MicroBatcher,
+    bucket_size,
+)
+from repro.serving.engine import (  # noqa: F401
+    ServingEngine,
+    load_mf_checkpoint,
+)

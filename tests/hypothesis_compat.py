@@ -1,0 +1,40 @@
+"""Soft dependency on ``hypothesis`` for the property-test modules.
+
+The container image does not always ship hypothesis, and a bare
+``from hypothesis import ...`` fails the whole module at *collection* time,
+taking every non-property test in the module down with it.  Importing
+``given``/``settings``/``st`` from here instead degrades gracefully: with
+hypothesis installed the real objects are re-exported; without it the
+``@given`` tests are marked skipped and everything else in the module still
+collects and runs.
+
+Pin the real dependency via requirements.txt for CI runs.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies`` so module-level strategy
+        expressions (``st.floats(...)``, ``@st.composite``, ...) evaluate."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed (see requirements.txt)"
+        )(fn)
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

@@ -1,0 +1,323 @@
+"""Serving engine: streaming top-k parity with the dense oracle, full
+checkpoint round-trips (biases/implicit included), micro-batching, and the
+catalog-sharded merge."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import mf
+from repro.core.ranks import effective_ranks
+from repro.core.trainer import DPMFTrainer, TrainConfig
+from repro.data import synthetic_ratings, train_test_split
+from repro.kernels import ops, ref
+from repro.serving import (
+    LRUCache,
+    MicroBatcher,
+    ServingEngine,
+    bucket_size,
+    load_mf_checkpoint,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _random_factors(m, n, k, seed=0):
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.normal(0, 0.1, (m, k)).astype(np.float32))
+    q = jnp.asarray(rng.normal(0, 0.1, (n, k)).astype(np.float32))
+    return p, q
+
+
+# ---------------------------------------------------------------------------
+# kernel / streaming top-k vs the dense argsort oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t", [0.0, 0.05])
+@pytest.mark.parametrize("with_bias", [False, True])
+def test_streaming_topk_matches_oracle(t, with_bias):
+    p, q = _random_factors(40, 900, 24)
+    bias = (
+        jnp.asarray(np.random.default_rng(3).normal(0, 0.3, (900,)),
+                    dtype=jnp.float32)
+        if with_bias else None
+    )
+    r_u, r_i = effective_ranks(p, t), effective_ranks(q, t)
+    want_s, want_i = ref.pruned_topk_ref(p, q, r_u, r_i, 11, item_bias=bias)
+    got_s, got_i = ops.pruned_topk(
+        p, q, t, t, 11, item_bias=bias, use_kernel=False, block_n=128
+    )
+    assert np.array_equal(np.asarray(want_i), np.asarray(got_i))
+    np.testing.assert_allclose(
+        np.asarray(want_s), np.asarray(got_s), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("t", [0.0, 0.05])
+def test_pallas_topk_kernel_matches_oracle(t):
+    p, q = _random_factors(40, 700, 24, seed=1)
+    r_u, r_i = effective_ranks(p, t), effective_ranks(q, t)
+    want_s, want_i = ref.pruned_topk_ref(p, q, r_u, r_i, 9)
+    got_s, got_i = ops.pruned_topk(
+        p, q, t, t, 9, use_kernel=True, interpret=True
+    )
+    assert np.array_equal(np.asarray(want_i), np.asarray(got_i))
+    np.testing.assert_allclose(
+        np.asarray(want_s), np.asarray(got_s), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_topk_validates_k():
+    p, q = _random_factors(4, 16, 8)
+    with pytest.raises(ValueError):
+        ops.pruned_topk(p, q, 0.0, 0.0, 17, use_kernel=False)
+    with pytest.raises(ValueError):
+        ops.pruned_topk(p, q, 0.0, 0.0, 0, use_kernel=False)
+
+
+# ---------------------------------------------------------------------------
+# engine vs predict_all_items (the retired serve path) across variants
+# ---------------------------------------------------------------------------
+
+
+def _dense_oracle(params, users, t_p, t_q, topk, hist=None):
+    scores = mf.predict_all_items(
+        params, users, t_p, t_q, use_kernel=False, hist=hist
+    )
+    idx = jnp.argsort(-scores, axis=1)[:, :topk].astype(jnp.int32)
+    return np.asarray(jnp.take_along_axis(scores, idx, axis=1)), np.asarray(idx)
+
+
+@pytest.mark.parametrize("variant", ["funk", "bias", "svdpp"])
+def test_engine_matches_dense_serve_path(variant):
+    m, n, k = 80, 1200, 16
+    rng = np.random.default_rng(4)
+    params = mf.init_params(
+        jax.random.PRNGKey(0), m, n, k, variant=variant, global_mean=3.1
+    )
+    hist = (
+        rng.integers(0, n, (m, 6)).astype(np.int32)
+        if variant == "svdpp" else None
+    )
+    t = 0.04
+    engine = ServingEngine(
+        params, t, t, use_kernel=False, max_batch=32, block_n=256,
+        user_history=hist,
+    )
+    users = rng.integers(0, m, 41).astype(np.int32)  # odd size: pad + chunk
+    got_s, got_i = engine.topk(users, 7)
+    want_s, want_i = _dense_oracle(
+        params, jnp.asarray(users), t, t, 7,
+        hist=None if hist is None else jnp.asarray(hist[users]),
+    )
+    assert np.array_equal(want_i, got_i)
+    np.testing.assert_allclose(want_s, got_s, rtol=1e-5, atol=1e-5)
+
+
+def test_engine_kernel_path_matches_stream_path():
+    params = mf.init_params(jax.random.PRNGKey(6), 40, 600, 16,
+                            variant="bias", global_mean=3.0)
+    stream = ServingEngine(params, 0.04, 0.04, use_kernel=False, block_n=128)
+    kernel = ServingEngine(params, 0.04, 0.04, use_kernel=True,
+                           interpret=True, max_batch=16)
+    users = np.arange(13, dtype=np.int32)
+    want_s, want_i = stream.topk(users, 6)
+    got_s, got_i = kernel.topk(users, 6)
+    assert np.array_equal(want_i, got_i)
+    np.testing.assert_allclose(want_s, got_s, rtol=1e-5, atol=1e-5)
+
+
+def test_engine_svdpp_missing_history_falls_back_to_p():
+    """allow_missing_history serves SVD++ checkpoints from p alone (empty
+    histories hit only the implicit table's zero padding row)."""
+    params = mf.init_params(jax.random.PRNGKey(7), 20, 300, 8,
+                            variant="svdpp", global_mean=3.0)
+    with pytest.raises(ValueError):
+        ServingEngine(params, 0.0, 0.0, use_kernel=False, block_n=64)
+    engine = ServingEngine(params, 0.0, 0.0, use_kernel=False, block_n=64,
+                           allow_missing_history=True)
+    users = np.arange(5, dtype=np.int32)
+    got_s, got_i = engine.topk(users, 4)
+    want_s, want_i = _dense_oracle(
+        params, jnp.asarray(users), 0.0, 0.0, 4, hist=None
+    )
+    assert np.array_equal(want_i, got_i)
+    np.testing.assert_allclose(want_s, got_s, rtol=1e-5, atol=1e-5)
+
+
+def test_engine_hot_user_cache_consistent():
+    m, n, k = 30, 400, 8
+    rng = np.random.default_rng(5)
+    params = mf.init_params(jax.random.PRNGKey(1), m, n, k, variant="svdpp",
+                            global_mean=3.0)
+    hist = rng.integers(0, n, (m, 4)).astype(np.int32)
+    engine = ServingEngine(params, 0.02, 0.02, use_kernel=False,
+                           block_n=128, user_history=hist, cache_size=8)
+    cold_s, cold_i = engine.topk([3, 5, 3], 5)
+    assert engine.vector_cache.misses > 0
+    warm_s, warm_i = engine.topk([3, 5, 3], 5)
+    assert engine.vector_cache.hits > 0
+    assert np.array_equal(cold_i, warm_i)
+    np.testing.assert_allclose(cold_s, warm_s, rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip: biases and implicit factors survive serving restore
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_full_params(tmp_path):
+    """BiasSVD checkpoints must serve with biases — the old loader dropped
+    everything but p/q and silently served wrong scores."""
+    ds = synthetic_ratings(60, 90, 2000, seed=0)
+    train_ds, test_ds = train_test_split(ds, 0.2, seed=0)
+    cfg = TrainConfig(
+        k=8, epochs=2, batch_size=512, pruning_rate=0.3, variant="bias",
+        checkpoint_dir=str(tmp_path / "ckpt"),
+    )
+    trainer = DPMFTrainer(cfg, train_ds, test_ds)
+    trainer.run()
+
+    params, t_p, t_q, perm, meta = load_mf_checkpoint(str(tmp_path / "ckpt"))
+    assert params.user_bias is not None and params.item_bias is not None
+    assert params.global_mean is not None
+    np.testing.assert_array_equal(np.asarray(params.p),
+                                  np.asarray(trainer.params.p))
+    np.testing.assert_array_equal(np.asarray(params.user_bias),
+                                  np.asarray(trainer.params.user_bias))
+    assert float(t_p) == float(trainer.t_p)
+    assert perm is not None
+
+    engine = ServingEngine.from_checkpoint(
+        str(tmp_path / "ckpt"), use_kernel=False, block_n=64
+    )
+    users = np.asarray([0, 7, 13], np.int32)
+    got_s, got_i = engine.topk(users, 5)
+    want_s, want_i = _dense_oracle(
+        trainer.params, jnp.asarray(users), trainer.t_p, trainer.t_q, 5
+    )
+    assert np.array_equal(want_i, got_i)
+    np.testing.assert_allclose(want_s, got_s, rtol=1e-5, atol=1e-5)
+
+
+def test_checkpoint_roundtrip_svdpp_implicit(tmp_path):
+    from repro import checkpoint as ckpt_lib
+
+    params = mf.init_params(jax.random.PRNGKey(2), 20, 30, 8, variant="svdpp",
+                            global_mean=2.5)
+    tree = {
+        "params": params,
+        "t_p": jnp.float32(0.03),
+        "t_q": jnp.float32(0.04),
+        "perm": jnp.arange(8, dtype=jnp.int32),
+    }
+    ckpt_lib.save(str(tmp_path / "ck"), 7, tree)
+    loaded, t_p, t_q, perm, meta = load_mf_checkpoint(str(tmp_path / "ck"))
+    assert loaded.implicit is not None
+    np.testing.assert_array_equal(np.asarray(loaded.implicit),
+                                  np.asarray(params.implicit))
+    assert float(t_q) == pytest.approx(0.04)
+    assert meta["step"] == 7
+
+
+# ---------------------------------------------------------------------------
+# micro-batching plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_size_quantizes():
+    assert [bucket_size(i, 8) for i in (1, 2, 3, 5, 8, 11)] == [1, 2, 4, 8, 8, 8]
+    with pytest.raises(ValueError):
+        bucket_size(0, 8)
+
+
+def test_lru_cache_evicts_in_order():
+    cache = LRUCache(2)
+    cache.put(1, "a")
+    cache.put(2, "b")
+    assert cache.get(1) == "a"      # refreshes 1
+    cache.put(3, "c")               # evicts 2
+    assert cache.get(2) is None
+    assert cache.get(1) == "a" and cache.get(3) == "c"
+    assert len(cache) == 2
+
+
+def test_microbatcher_rejects_bad_ids_at_submit():
+    """A bad user id must fail its own submit, not poison queued tickets."""
+    params = mf.init_params(jax.random.PRNGKey(8), 16, 100, 8)
+    engine = ServingEngine(params, 0.0, 0.0, use_kernel=False, block_n=64)
+    batcher = MicroBatcher(engine, topk=3)
+    good = batcher.submit(5)
+    with pytest.raises(ValueError):
+        batcher.submit(999)
+    results = batcher.drain()
+    assert good in results and len(results) == 1
+
+
+def test_microbatcher_fans_out_duplicates():
+    params = mf.init_params(jax.random.PRNGKey(3), 16, 200, 8)
+    engine = ServingEngine(params, 0.0, 0.0, use_kernel=False, block_n=64)
+    batcher = MicroBatcher(engine, topk=4)
+    t1, t2, t3 = batcher.submit(5), batcher.submit(9), batcher.submit(5)
+    results = batcher.drain()
+    assert set(results) == {t1, t2, t3}
+    assert np.array_equal(results[t1][1], results[t3][1])
+    _, want_i = engine.topk([9], 4)
+    assert np.array_equal(results[t2][1], want_i[0])
+    assert batcher.drain() == {}
+
+
+# ---------------------------------------------------------------------------
+# catalog-sharded serving
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_topk_single_device_mesh():
+    """The shard_map path on a trivial 1-way mesh must equal the local path
+    (exercises specs + the cross-shard merge plumbing without subprocess)."""
+    params = mf.init_params(jax.random.PRNGKey(4), 24, 500, 16,
+                            variant="bias", global_mean=3.0)
+    engine = ServingEngine(params, 0.03, 0.03, use_kernel=False, block_n=128)
+    mesh = jax.make_mesh((1,), ("model",))
+    users = np.arange(10, dtype=np.int32)
+    want_s, want_i = engine.topk(users, 6)
+    got_s, got_i = engine.topk_sharded(users, 6, mesh=mesh)
+    assert np.array_equal(want_i, got_i)
+    np.testing.assert_allclose(want_s, got_s, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_sharded_topk_multi_device():
+    """Real 8-way catalog sharding in a subprocess (device count must be set
+    before jax initializes)."""
+    code = """
+        import numpy as np, jax
+        from repro.core import mf
+        from repro.serving import ServingEngine
+        params = mf.init_params(jax.random.PRNGKey(0), 48, 2100, 24,
+                                variant="bias", global_mean=3.0)
+        engine = ServingEngine(params, 0.04, 0.04, use_kernel=False,
+                               block_n=128)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        users = np.arange(17, dtype=np.int32)
+        want_s, want_i = engine.topk(users, 9)
+        got_s, got_i = engine.topk_sharded(users, 9, mesh=mesh)
+        assert np.array_equal(want_i, got_i)
+        np.testing.assert_allclose(want_s, got_s, rtol=1e-5, atol=1e-5)
+        print("SHARDED_TOPK_OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "SHARDED_TOPK_OK" in proc.stdout

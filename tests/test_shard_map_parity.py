@@ -27,6 +27,7 @@ def _run(code: str) -> str:
 def test_moe_shard_map_matches_xla_path():
     out = _run("""
         import jax, jax.numpy as jnp
+        from repro.distributed.mesh_compat import use_mesh
         from repro.models.moe import (MoEConfig, init_moe_params,
                                       moe_ffn_xla, moe_ffn_shard_map)
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
@@ -36,7 +37,7 @@ def test_moe_shard_map_matches_xla_path():
                                  dtype=jnp.float32)
         x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (64, 64))
         ref, _ = moe_ffn_xla(x, params, cfg)
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             got, _ = jax.jit(lambda x, p: moe_ffn_shard_map(
                 x, p, cfg, mesh=mesh.abstract_mesh))(x, params)
         diff = float(jnp.max(jnp.abs(ref - got)))
@@ -48,7 +49,7 @@ def test_moe_shard_map_matches_xla_path():
         def loss_ref(p, x):
             o, _ = moe_ffn_xla(x, p, cfg)
             return jnp.sum(o ** 2)
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             g1 = jax.jit(jax.grad(loss_sm))(params, x)
         g2 = jax.grad(loss_ref)(params, x)
         for key in ("wg", "wi", "wo", "router"):
@@ -64,6 +65,7 @@ def test_mf_owner_compute_bit_exact():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.core import mf
+        from repro.distributed.mesh_compat import use_mesh
         from repro.optim.optimizers import RowOptimizer
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
         m, n, k, B = 16, 8, 12, 16
@@ -84,7 +86,7 @@ def test_mf_owner_compute_bit_exact():
                 ref_p, ref_s, _ = mf.train_step(
                     params, state, batch, jnp.float32(t), jnp.float32(t),
                     jnp.float32(0.05), jnp.ones((k,)), opt=opt, lam=0.02)
-                with jax.sharding.set_mesh(mesh):
+                with use_mesh(mesh):
                     sm_p, sm_s, _ = jax.jit(
                         lambda p, s, b, tp, tq: mf.train_step_shard_map(
                             p, s, b, tp, tq, lr=0.05, lam=0.02,
