@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--full]
 
-Three claims, checked then timed:
+Four claims, checked then timed:
 
 1. **parity** — the engine's streaming top-k (and the Pallas kernel in
    interpret mode at a small shape) returns *identical* (indices, scores) to
@@ -10,11 +10,16 @@ Three claims, checked then timed:
 2. **memory** — the dense path materializes a (B, n) f32 score matrix per
    batch; the engine's peak live scoring buffer is (B, topk + block_n);
 3. **speed** — wall-clock per request batch, dense vs. engine, CSV-emitted
-   via the ``name,us_per_call,derived`` harness contract.
+   via the ``name,us_per_call,derived`` harness contract;
+4. **concurrency** — single-user requests from 32 concurrent clients through
+   the async queue (continuous batching) vs the same requests scored one at
+   a time; byte-identical results, and throughput must be >= 2x sequential.
 """
 from __future__ import annotations
 
 import argparse
+import time
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 import jax
@@ -24,7 +29,7 @@ from benchmarks.common import emit, time_fn
 from repro.core import mf
 from repro.core.ranks import effective_ranks
 from repro.kernels import ops, ref
-from repro.serving import ServingEngine
+from repro.serving import RequestQueue, ServingEngine
 
 
 def dense_oracle(params, users, t_p, t_q, topk):
@@ -93,6 +98,55 @@ def run(*, full: bool = False) -> None:
     emit(f"serve_speedup_b{batch}_n{n}", us_dense / us_engine, "x dense")
     print(f"# engine speedup over dense argsort: "
           f"{us_dense / us_engine:.2f}x")
+
+    # ---- throughput under concurrency (async queue vs sequential) ---------
+    conc, n_req = 32, 256
+    req_users = rng.integers(0, m, n_req)
+    # warm every power-of-two bucket the queue's batches can land in, plus
+    # the sequential path's bucket-1 program
+    for b_ in (1, 2, 4, 8, 16, 32):
+        engine.topk(users_np[:b_], topk)
+
+    seq_results = {}
+    start = time.perf_counter()
+    for u in req_users:
+        seq_results[int(u)] = engine.topk([int(u)], topk)
+    t_seq = time.perf_counter() - start
+
+    queue = RequestQueue(engine, linger_ms=1.0, max_pending=n_req)
+
+    def one_request(u):
+        return queue.submit(int(u), topk, timeout=120).result(timeout=120)
+
+    with ThreadPoolExecutor(max_workers=conc) as pool:
+        list(pool.map(one_request, req_users[:64]))  # warm the queue path
+        start = time.perf_counter()
+        q_results = list(pool.map(one_request, req_users))
+        t_queue = time.perf_counter() - start
+    queue.close()
+
+    for u, (got_s, got_i) in zip(req_users, q_results):
+        want_s, want_i = seq_results[int(u)]
+        assert np.array_equal(got_s, want_s[0]), "queue != sequential scores"
+        assert np.array_equal(got_i, want_i[0]), "queue != sequential items"
+    print(f"# parity OK: queue-fed results byte-identical to sequential "
+          f"({n_req} requests)")
+
+    seq_rps = n_req / t_seq
+    queue_rps = n_req / t_queue
+    speedup = t_seq / t_queue
+    emit(f"serve_sequential_1by1_n{n}", t_seq / n_req * 1e6,
+         f"{seq_rps:.0f} req/s")
+    emit(f"serve_queue_c{conc}_n{n}", t_queue / n_req * 1e6,
+         f"{queue_rps:.0f} req/s")
+    emit(f"serve_queue_speedup_c{conc}_n{n}", speedup, "x sequential")
+    print(f"# async queue at concurrency {conc}: {queue_rps:.0f} req/s vs "
+          f"{seq_rps:.0f} sequential ({speedup:.1f}x; "
+          f"{queue.batches_served} launches, mean batch "
+          f"{queue.requests_served / max(queue.batches_served, 1):.1f})")
+    assert speedup >= 2.0, (
+        f"continuous batching must be >= 2x sequential, got {speedup:.2f}x"
+    )
 
 
 def main() -> None:

@@ -209,6 +209,34 @@ def mf_spec_fn(mesh: Mesh):
     return spec_fn
 
 
+def serving_row_multiple(mesh: Mesh) -> int:
+    """Batch sizes fed to the sharded serving program must be a multiple of
+    the user-axis extent (each data shard takes an equal user slab)."""
+    mult = 1
+    for axis in data_axes(mesh):
+        mult *= mesh.shape[axis]
+    return mult
+
+
+def serving_topk_specs(mesh: Mesh):
+    """(in_specs, out_specs) of the engine's sharded top-k program.
+
+    The 2-D serving layout: user rows (and therefore the per-request
+    user-factor fan-out) split over the data axes, catalog tiles over
+    ``model`` — the serving analogue of the training DP x TP mapping above.
+    On a 1-D item-only mesh the user spec degenerates to replicated, which
+    is exactly the PR-1 layout.  Outputs are (B, topk) rows sharded like the
+    users; the model axis is fully reduced by the in-program all-gather
+    merge, so it does not appear in the out specs.
+    """
+    dp = data_axes(mesh)
+    row = dp if dp else None
+    user_spec = P(row, None)
+    in_specs = (user_spec, P("model", None, None), P("model", None), P("model"))
+    out_specs = (user_spec, user_spec)
+    return in_specs, out_specs
+
+
 def mf_batch_shardings(mesh: Mesh, has_hist: bool = False):
     dp = data_axes(mesh)
     out = {

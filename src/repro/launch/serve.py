@@ -9,6 +9,17 @@ included — not just ``p``/``q``), precomputes the per-item ranks and tiled
 factor layout once at load, and answers requests through the streaming
 pruned top-k path (Pallas kernel on TPU, ``lax.top_k``-merge scan on CPU)
 without ever materializing the (B, n) score matrix.
+
+Traffic modes on top of the one-shot lookup:
+
+* ``--batched-requests N`` — one synchronous N-user batch (PR-1 behaviour);
+* ``--concurrent N --clients C`` — N single-user requests from C client
+  threads through the async request queue (``serving/queue.py``): continuous
+  batching, deadline scheduling, per-request timeout; reports latency
+  percentiles and throughput;
+* ``--http PORT`` — a minimal event-loop server: every connection submits to
+  the queue and blocks on its future, so concurrent HTTP clients coalesce
+  into shared scoring launches.  ``GET /recommend?user=3&topk=10``.
 """
 from __future__ import annotations
 
@@ -18,7 +29,102 @@ import time
 
 import numpy as np
 
-from repro.serving import ServingEngine, load_mf_checkpoint
+from repro.serving import (
+    QueueFullError,
+    RequestTimeout,
+    ServingEngine,
+    load_mf_checkpoint,
+)
+
+
+def run_concurrent(engine: ServingEngine, n_requests: int, clients: int,
+                   topk: int, timeout: float) -> None:
+    """Drive the async queue from ``clients`` submitter threads."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    queue = engine.start(linger_ms=1.0, max_pending=max(1024, n_requests))
+    rng = np.random.default_rng(0)
+    users = rng.integers(0, engine.num_users, n_requests)
+    # warm every power-of-two bucket a batch can land in
+    for b in (1, 2, 4, 8, 16, 32, 64):
+        if b <= min(engine.max_batch, n_requests):
+            engine.topk(users[:b], topk)
+
+    latencies = np.empty(n_requests)
+
+    def client(i_u):
+        i, u = i_u
+        t0 = time.perf_counter()
+        engine.submit(int(u), topk, timeout=timeout).result(timeout=timeout)
+        latencies[i] = time.perf_counter() - t0
+
+    start = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=clients) as pool:
+        list(pool.map(client, enumerate(users)))
+    wall = time.perf_counter() - start
+    engine.stop()
+    p50, p99 = np.percentile(latencies * 1e3, [50, 99])
+    print(f"concurrent: {n_requests} requests, {clients} clients in "
+          f"{wall:.3f}s ({n_requests / wall:.1f} req/s; p50 {p50:.2f} ms, "
+          f"p99 {p99:.2f} ms; {queue.batches_served} launches, "
+          f"mean batch {queue.requests_served / queue.batches_served:.1f})")
+
+
+def run_http(engine: ServingEngine, port: int, topk_default: int,
+             timeout: float) -> None:
+    """Blocking HTTP front end over the async queue (stdlib only)."""
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+    from urllib.parse import parse_qs, urlparse
+
+    engine.start(linger_ms=1.0)
+
+    class Handler(BaseHTTPRequestHandler):
+        def log_message(self, fmt, *args):  # quiet access log
+            pass
+
+        def _reply(self, status: int, payload: dict) -> None:
+            body = json.dumps(payload).encode()
+            self.send_response(status)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def do_GET(self):
+            url = urlparse(self.path)
+            if url.path != "/recommend":
+                return self._reply(404, {"error": "GET /recommend?user=..."})
+            qs = parse_qs(url.query)
+            try:
+                user = int(qs["user"][0])
+                topk = int(qs.get("topk", [topk_default])[0])
+                scores, items = engine.submit(
+                    user, topk, timeout=timeout
+                ).result(timeout=timeout)
+            except (KeyError, ValueError, IndexError) as exc:
+                return self._reply(400, {"error": str(exc)})
+            except QueueFullError as exc:
+                return self._reply(503, {"error": str(exc)})
+            except (RequestTimeout, TimeoutError) as exc:
+                return self._reply(504, {"error": str(exc)})
+            self._reply(200, {
+                "user": user,
+                "items": [
+                    {"item": int(i), "score": round(float(s), 4)}
+                    for i, s in zip(items, scores)
+                ],
+            })
+
+    server = ThreadingHTTPServer(("127.0.0.1", port), Handler)
+    print(f"# serving http://127.0.0.1:{port}/recommend?user=0&topk="
+          f"{topk_default} (Ctrl-C to stop)")
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.server_close()
+        engine.stop()
 
 
 def main() -> None:
@@ -28,6 +134,15 @@ def main() -> None:
     parser.add_argument("--topk", type=int, default=10)
     parser.add_argument("--batched-requests", type=int, default=0,
                         help="simulate N random-user requests and report latency")
+    parser.add_argument("--concurrent", type=int, default=0,
+                        help="simulate N single-user requests through the "
+                             "async queue")
+    parser.add_argument("--clients", type=int, default=32,
+                        help="submitter threads for --concurrent")
+    parser.add_argument("--timeout", type=float, default=30.0,
+                        help="per-request timeout (seconds) for async modes")
+    parser.add_argument("--http", type=int, default=0, metavar="PORT",
+                        help="serve GET /recommend over HTTP on PORT")
     parser.add_argument("--max-batch", type=int, default=256,
                         help="micro-batch bucket cap")
     parser.add_argument("--use-kernel", action="store_true",
@@ -58,6 +173,9 @@ def main() -> None:
     print(f"# loaded step {meta.get('step')} variant={variant} "
           f"({engine.num_users} users x {engine.n_items} items, k={engine.k})")
 
+    if args.http:
+        return run_http(engine, args.http, args.topk, args.timeout)
+
     recs = engine.recommend(args.users, topk=args.topk)
     print(json.dumps({str(u): r for u, r in zip(args.users, recs)}, indent=2))
 
@@ -72,6 +190,10 @@ def main() -> None:
         dt = time.perf_counter() - start
         print(f"batched: {args.batched_requests} requests in {dt:.3f}s "
               f"({args.batched_requests / dt:.1f} req/s)")
+
+    if args.concurrent:
+        run_concurrent(engine, args.concurrent, args.clients, args.topk,
+                       args.timeout)
 
 
 if __name__ == "__main__":

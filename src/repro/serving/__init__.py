@@ -8,3 +8,8 @@ from repro.serving.engine import (  # noqa: F401
     ServingEngine,
     load_mf_checkpoint,
 )
+from repro.serving.queue import (  # noqa: F401
+    QueueFullError,
+    RequestQueue,
+    RequestTimeout,
+)

@@ -15,8 +15,9 @@ both costs:
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
-from typing import Any, Dict, Hashable, List, Optional, Tuple
+from typing import Any, Dict, Hashable, List, Tuple
 
 import numpy as np
 
@@ -32,32 +33,41 @@ def bucket_size(n: int, max_batch: int) -> int:
 
 
 class LRUCache:
-    """Tiny LRU keyed by user id; tracks hits/misses for bench reporting."""
+    """Tiny LRU keyed by user id; tracks hits/misses for bench reporting.
+
+    Thread-safe: the async queue's scheduler thread and direct callers of
+    ``engine.topk`` may hit the same cache concurrently, and an OrderedDict
+    mutated from two threads can corrupt its link list.
+    """
 
     def __init__(self, capacity: int):
         self.capacity = capacity
         self._data: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
     def get(self, key: Hashable):
-        if key in self._data:
-            self._data.move_to_end(key)
-            self.hits += 1
-            return self._data[key]
-        self.misses += 1
-        return None
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self.hits += 1
+                return self._data[key]
+            self.misses += 1
+            return None
 
     def put(self, key: Hashable, value: Any) -> None:
         if self.capacity <= 0:
             return
-        self._data[key] = value
-        self._data.move_to_end(key)
-        while len(self._data) > self.capacity:
-            self._data.popitem(last=False)
+        with self._lock:
+            self._data[key] = value
+            self._data.move_to_end(key)
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
 
     def __len__(self) -> int:
-        return len(self._data)
+        with self._lock:
+            return len(self._data)
 
 
 class MicroBatcher:
@@ -71,6 +81,10 @@ class MicroBatcher:
     """
 
     def __init__(self, engine, *, topk: int = 10):
+        if not 0 < topk <= engine.n_items:
+            raise ValueError(
+                f"topk must be in [1, {engine.n_items}], got {topk}"
+            )
         self.engine = engine
         self.topk = topk
         self._pending: List[Tuple[int, int]] = []  # (ticket, user_id)

@@ -15,9 +15,15 @@ memory-bound pattern GPU-MF studies identify at catalog scale.  The engine:
   the jit cache stays bounded (``serving/batching.py``);
 * **caches hot users** — computed user vectors (the SVD++ history
   aggregation in particular) go through an LRU;
-* **shards the catalog** — ``topk_sharded`` scores per-shard top-k under
-  ``shard_map`` over the "model" mesh axis and cross-merges the shard
-  winners, so one engine spans item tables bigger than one device.
+* **shards both operand axes** — ``topk_sharded`` scores per-shard top-k
+  under ``shard_map`` with item tiles over the "model" mesh axis and user
+  rows over the data axes (2-D when the mesh has both), cross-merging the
+  shard winners, so one engine spans item tables bigger than one device
+  *and* fans request batches out across the user axis;
+* **pipelines requests** — ``submit()`` hands a request to the continuous
+  batching queue (``serving/queue.py``) and returns a future; concurrent
+  callers coalesce into deadline-ordered batches instead of serializing
+  full scoring launches.
 
 Scores returned are full model scores (user/global biases folded back in
 after ranking — per-user constants never change the ranking itself).
@@ -26,6 +32,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 from typing import Optional, Tuple
 
 import jax
@@ -170,6 +177,8 @@ class ServingEngine:
         # once per shard count (not per topk).
         self._shard_layouts = {}
         self._sharded_fns = {}
+        self._queue = None  # async frontend, created by start()/submit()
+        self._queue_lock = threading.Lock()  # guards _queue transitions
 
         # per-user additive constant (never changes ranking; folded back in
         # after top-k so returned scores equal full model scores); host-side
@@ -319,17 +328,18 @@ class ServingEngine:
         """Compiled shard_map scoring program for (mesh, topk).  Built once:
         jit caches by function identity, so rebuilding the closure per
         request would retrace and recompile every call."""
-        from jax.sharding import PartitionSpec as P
-
         from repro.distributed import mesh_compat
+        from repro.distributed.sharding import serving_topk_specs
 
         key = (mesh, topk)
         if key not in self._sharded_fns:
+            in_specs, out_specs = serving_topk_specs(mesh)
+
             def body(pm_blk, qt, bt, off):
                 local_s, local_i = stream_topk_tiles(
                     pm_blk, qt, bt, off, topk=topk
                 )
-                gs = jax.lax.all_gather(local_s, "model")  # (n_model, B, topk)
+                gs = jax.lax.all_gather(local_s, "model")  # (n_model, b, topk)
                 gi = jax.lax.all_gather(local_i, "model")
                 b = pm_blk.shape[0]
                 cand_s = jnp.moveaxis(gs, 0, 1).reshape(b, -1)
@@ -340,10 +350,8 @@ class ServingEngine:
             self._sharded_fns[key] = jax.jit(mesh_compat.shard_map(
                 body,
                 mesh=mesh,
-                in_specs=(
-                    P(), P("model", None, None), P("model", None), P("model"),
-                ),
-                out_specs=(P(), P()),
+                in_specs=in_specs,
+                out_specs=out_specs,
                 check_vma=False,
             ))
         return self._sharded_fns[key]
@@ -351,26 +359,85 @@ class ServingEngine:
     def topk_sharded(
         self, user_ids, topk: int = 10, *, mesh=None
     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Catalog-sharded top-k: item tiles sharded over the mesh's "model"
-        axis, per-shard streaming top-k, one all-gather of the (B, topk)
-        shard winners, replicated cross-shard merge.  Collective traffic is
-        O(B * topk) — independent of catalog size.  Returns ``(scores,
-        indices)`` like :meth:`topk`, and requests go through the same
-        chunk/bucket loop, so batch shapes (and thus compiled programs)
+        """Mesh-sharded top-k, 2-D when the mesh has both axes.
+
+        Item tiles shard over the mesh's "model" axis (PR 1); user rows —
+        and with them the per-request user-factor fan-out — shard over the
+        data axes when present (``distributed.sharding.serving_topk_specs``),
+        so a (2, 4) ``("data", "model")`` mesh scores each user slab against
+        each catalog slice on its own device.  Per shard: streaming top-k,
+        one all-gather of the (b, topk) shard winners over "model", local
+        merge — collective traffic is O(b * topk), independent of catalog
+        size, and the batch axis never leaves its data shard.  Returns
+        ``(scores, indices)`` like :meth:`topk`; requests go through the
+        same chunk/bucket loop, so batch shapes (and thus compiled programs)
         stay bounded."""
         from repro.distributed import mesh_compat
+        from repro.distributed.sharding import serving_row_multiple
 
+        ids = self._validate_request(user_ids, topk)
         mesh = mesh_compat.resolve_mesh(mesh)
         if mesh is None or "model" not in mesh.axis_names:
             raise ValueError("topk_sharded needs a mesh with a 'model' axis")
         layout = self._shard_layout(mesh.shape["model"])
         fn = self._sharded_program(mesh, topk)
+        row_mult = serving_row_multiple(mesh)
 
         def block_fn(pu, k):
-            return fn(self._masked_user_block(pu), *layout)
+            b = pu.shape[0]
+            pad = (-b) % row_mult  # equal user slabs per data shard
+            pm = self._masked_user_block(pu)
+            if pad:
+                pm = jnp.pad(pm, ((0, pad), (0, 0)))
+            scores, idx = fn(pm, *layout)
+            return scores[:b], idx[:b]
 
-        ids = self._validate_request(user_ids, topk)
         return self._run_chunked(ids, topk, block_fn)
+
+    # -- async frontend ------------------------------------------------------
+    def start(self, *, mesh=None, **queue_kwargs):
+        """Start the async request pipeline; returns the
+        :class:`~repro.serving.queue.RequestQueue`.
+
+        With ``mesh`` the queue scores through :meth:`topk_sharded` on that
+        mesh (1-D or 2-D); otherwise through the local :meth:`topk` path.
+        Queue kwargs (``max_batch``, ``max_pending``, ``linger_ms``) pass
+        through.  The queue's single scheduler thread is the only thread
+        that touches the scoring paths, so no engine locking is needed.
+        """
+        with self._queue_lock:
+            return self._start_locked(mesh=mesh, **queue_kwargs)
+
+    def _start_locked(self, *, mesh=None, **queue_kwargs):
+        from repro.serving.queue import RequestQueue
+
+        if self._queue is not None:
+            raise RuntimeError("engine already has a running request queue")
+        score_fn = None
+        if mesh is not None:
+            score_fn = lambda users, k: self.topk_sharded(users, k, mesh=mesh)
+        self._queue = RequestQueue(self, score_fn=score_fn, **queue_kwargs)
+        return self._queue
+
+    def submit(self, user_id: int, topk: int = 10, *, timeout=None):
+        """Async single-user request: returns a ``concurrent.futures.Future``
+        resolving to ``(scores, item_ids)`` — (topk,) rows, byte-identical
+        to the caller's row of :meth:`topk`.  Poll with ``future.done()``,
+        block with ``future.result(timeout)``.  Starts a default queue on
+        first use; call :meth:`start` first to configure it.  Safe from any
+        thread (first-submit races resolve to one shared queue)."""
+        with self._queue_lock:
+            if self._queue is None:
+                self._start_locked()
+            queue = self._queue
+        return queue.submit(user_id, topk, timeout=timeout)
+
+    def stop(self) -> None:
+        """Drain and stop the async pipeline (no-op if never started)."""
+        with self._queue_lock:
+            queue, self._queue = self._queue, None
+        if queue is not None:
+            queue.close()  # outside the lock: close() joins the scheduler
 
     # -- convenience ---------------------------------------------------------
     def recommend(self, user_ids, topk: int = 10):

@@ -1,0 +1,292 @@
+"""Async request pipeline in front of the serving engine.
+
+``MicroBatcher`` (``serving/batching.py``) batches synchronously: the caller
+owns the flush.  Production traffic is concurrent — many callers, none of
+whom should flush anyone else's work — so the queue here is the continuous
+batching loop rtp-llm-style LLM servers run: requests enter from any thread,
+a single scheduler thread repeatedly pops the best batch and scores it while
+new arrivals accumulate behind it, and every caller gets a
+``concurrent.futures.Future`` to poll or block on.
+
+Scheduling policy (deterministic, and what the tests pin down):
+
+* requests are ordered by **(deadline, arrival)**; a batch is formed from the
+  earliest-deadline request's ``topk`` **bucket** (mixing topk values in one
+  launch would change the compiled program shape), taking up to ``max_batch``
+  same-bucket requests in deadline order;
+* within a batch, duplicate user ids are scored once and fanned back out;
+  futures resolve in deadline order;
+* **admission control**: at ``max_pending`` queued requests ``submit`` either
+  raises :class:`QueueFullError` or, with ``block=True``, waits for space —
+  backpressure instead of unbounded memory;
+* **timeouts**: a request whose deadline passes before it is *scheduled*
+  fails with :class:`RequestTimeout`; a request already in a scoring launch
+  completes (the launch is paid for either way);
+* results are byte-identical to calling ``engine.topk([user], topk)``
+  sequentially — batching never changes numerics, only wall-clock.
+
+The scheduler thread is the only thread that touches the engine, so the
+engine itself needs no locking for the async path.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+_INF = float("inf")
+
+
+class QueueFullError(RuntimeError):
+    """Admission control rejected the request: ``max_pending`` reached."""
+
+
+class RequestTimeout(TimeoutError):
+    """The request's deadline passed before a scheduler slot reached it."""
+
+
+@dataclass(order=True)
+class _Pending:
+    deadline: float
+    seq: int
+    topk: int = field(compare=False)
+    user_id: int = field(compare=False)
+    future: Future = field(compare=False)
+
+
+def _fail(fut: Future, exc: Exception) -> None:
+    """set_exception tolerating a future the caller already cancelled —
+    an InvalidStateError here would kill the scheduler thread."""
+    try:
+        fut.set_exception(exc)
+    except Exception:  # noqa: BLE001 - cancelled/raced future: nothing to do
+        pass
+
+
+class RequestQueue:
+    """Continuous-batching scheduler over a :class:`ServingEngine`.
+
+    ``submit(user_id, topk, timeout=...)`` returns a ``Future`` resolving to
+    ``(scores, item_ids)`` — two (topk,) numpy rows, exactly the caller's row
+    of :meth:`ServingEngine.topk`.  ``score_fn(users, topk)`` overrides the
+    scoring callable (e.g. a mesh-bound ``topk_sharded``); it must accept a
+    sorted list of unique user ids and return ``(B, topk)`` arrays.
+
+    ``linger_ms`` trades a bounded scheduling delay for larger batches: the
+    scheduler waits that long (or until ``max_batch`` requests are queued)
+    before popping a batch.  Leave it at 0 for latency-critical paths —
+    continuous batching already coalesces whatever arrives while the previous
+    launch is in flight.
+
+    ``start=False`` skips the scheduler thread; tests (and anyone wanting
+    strict determinism) call :meth:`drain_once` manually.
+    """
+
+    def __init__(
+        self,
+        engine,
+        *,
+        score_fn: Optional[Callable] = None,
+        max_batch: Optional[int] = None,
+        max_pending: int = 4096,
+        linger_ms: float = 0.0,
+        start: bool = True,
+    ):
+        if max_pending <= 0:
+            raise ValueError(f"max_pending must be positive, got {max_pending}")
+        self.engine = engine
+        self._score = score_fn if score_fn is not None else engine.topk
+        self.max_batch = max_batch if max_batch is not None else engine.max_batch
+        self.max_pending = max_pending
+        self.linger_s = linger_ms / 1e3
+        self._cond = threading.Condition()
+        self._heap: List[_Pending] = []
+        self._seq = itertools.count()
+        self._closed = False
+        # bench / observability counters
+        self.requests_served = 0
+        self.batches_served = 0
+        self.expired = 0
+        self.rejected = 0
+        self._thread: Optional[threading.Thread] = None
+        if start:
+            self.start()
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._thread = threading.Thread(
+            target=self._loop, name="serving-scheduler", daemon=True
+        )
+        self._thread.start()
+
+    def close(self, *, cancel_pending: bool = False) -> None:
+        """Stop accepting requests.  Pending work is drained (scored) before
+        the scheduler exits, unless ``cancel_pending`` fails it fast."""
+        with self._cond:
+            self._closed = True
+            if cancel_pending:
+                for req in self._heap:
+                    _fail(
+                        req.future,
+                        RequestTimeout("queue closed before request was scheduled"),
+                    )
+                self._heap.clear()
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        else:
+            while self.drain_once():
+                pass
+
+    def __enter__(self) -> "RequestQueue":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(cancel_pending=exc[0] is not None)
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._heap)
+
+    # -- submission ----------------------------------------------------------
+    def submit(
+        self,
+        user_id: int,
+        topk: int = 10,
+        *,
+        timeout: Optional[float] = None,
+        block: bool = False,
+        block_timeout: Optional[float] = None,
+    ) -> Future:
+        """Enqueue one top-k request; returns its ``Future``.
+
+        Validation happens here so a bad request fails its own submit and can
+        never poison a batch.  ``timeout`` (seconds) bounds time-to-schedule;
+        ``block=True`` waits up to ``block_timeout`` for queue space instead
+        of raising :class:`QueueFullError`.
+        """
+        # engine validation gives the uniform messages for bad ids / topk
+        self.engine._validate_request([user_id], topk)
+        deadline = _INF if timeout is None else time.monotonic() + timeout
+        fut: Future = Future()
+        req = _Pending(deadline, next(self._seq), int(topk), int(user_id), fut)
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("queue is closed")
+            if len(self._heap) >= self.max_pending and block:
+                limit = (
+                    _INF if block_timeout is None
+                    else time.monotonic() + block_timeout
+                )
+                while len(self._heap) >= self.max_pending and not self._closed:
+                    remaining = limit - time.monotonic()
+                    if remaining <= 0 or not self._cond.wait(
+                        None if remaining == _INF else remaining
+                    ):
+                        break
+                if self._closed:
+                    raise RuntimeError("queue is closed")
+            if len(self._heap) >= self.max_pending:
+                self.rejected += 1
+                raise QueueFullError(
+                    f"{self.max_pending} requests already pending"
+                )
+            heapq.heappush(self._heap, req)
+            self._cond.notify_all()
+        return fut
+
+    # -- scheduling ----------------------------------------------------------
+    def _pop_batch(self) -> List[_Pending]:
+        """Pop the next batch under the lock: earliest-deadline request
+        defines the topk bucket; same-bucket requests join in deadline order
+        up to ``max_batch``.  Expired requests fail here, never score."""
+        now = time.monotonic()
+        batch: List[_Pending] = []
+        skipped: List[_Pending] = []
+        dropped = 0
+        bucket: Optional[int] = None
+        while self._heap and len(batch) < self.max_batch:
+            req = heapq.heappop(self._heap)
+            if req.deadline < now:
+                _fail(
+                    req.future,
+                    RequestTimeout(
+                        f"request for user {req.user_id} expired after "
+                        f"waiting in queue"
+                    ),
+                )
+                self.expired += 1
+                dropped += 1
+                continue
+            if bucket is None:
+                bucket = req.topk
+            if req.topk != bucket:
+                skipped.append(req)  # stays PENDING: may be claimed later
+                continue
+            # claim the future: a caller-side cancel() after this point can
+            # no longer race the batch's set_result (RUNNING != cancellable)
+            if not req.future.set_running_or_notify_cancel():
+                dropped += 1
+                continue
+            batch.append(req)
+        for req in skipped:
+            heapq.heappush(self._heap, req)
+        if batch or dropped:
+            self._cond.notify_all()  # space freed: wake blocked submitters
+        return batch
+
+    def _serve(self, batch: List[_Pending]) -> None:
+        topk = batch[0].topk
+        users = sorted({req.user_id for req in batch})
+        try:
+            scores, idx = self._score(users, topk)
+            scores = np.asarray(scores)
+            idx = np.asarray(idx)
+        except Exception as exc:  # noqa: BLE001 - fail the batch, not the loop
+            for req in batch:
+                _fail(req.future, exc)
+            return
+        row = {uid: i for i, uid in enumerate(users)}
+        for req in batch:  # deadline order == batch order
+            r = row[req.user_id]
+            req.future.set_result((scores[r].copy(), idx[r].copy()))
+        self.requests_served += len(batch)
+        self.batches_served += 1
+
+    def drain_once(self) -> int:
+        """Pop and score one batch (no waiting).  Returns requests served.
+        The manual pump for ``start=False`` queues — one call is exactly one
+        scoring launch, so tests can pin batch composition."""
+        with self._cond:
+            batch = self._pop_batch()
+        if not batch:
+            return 0
+        self._serve(batch)
+        return len(batch)
+
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._heap and not self._closed:
+                    self._cond.wait()
+                if self.linger_s > 0 and self._heap and not self._closed:
+                    limit = time.monotonic() + self.linger_s
+                    while len(self._heap) < self.max_batch and not self._closed:
+                        remaining = limit - time.monotonic()
+                        if remaining <= 0:
+                            break
+                        self._cond.wait(remaining)
+                batch = self._pop_batch()
+                if not batch and self._closed and not self._heap:
+                    return
+            if batch:
+                self._serve(batch)

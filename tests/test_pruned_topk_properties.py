@@ -1,0 +1,158 @@
+"""Property tests: `kernels/pruned_topk.py` vs the dense argsort oracle.
+
+Factors (and biases) are drawn on the 1/8 grid, so every pruned dot product
+is a multiple of 1/64 well inside f32's exact-integer range: all scoring
+paths compute the *exact* mathematical score regardless of tile shape or
+summation order.  That makes two strong assertions safe:
+
+* scores match the oracle **bitwise**, not just within a tolerance;
+* score ties (e.g. duplicated item rows) are mathematically exact, so index
+  parity genuinely pins the tie-breaking contract (lower item index wins,
+  the stable-argsort order) across the streaming scan, the Pallas kernel's
+  max-extraction merge, and the oracle.
+
+Hypothesis drives the shape/threshold/duplication space (skipped gracefully
+when hypothesis is absent — see ``hypothesis_compat``); the parametrized
+edge cases below run everywhere and share the same checker, covering the
+corners the issue names: ragged ranks, duplicate scores, ``topk == n``, and
+tiny/odd tile shapes.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core.ranks import effective_ranks
+from repro.kernels import ops, ref
+
+
+def _grid(rng, shape):
+    """f32 values on the 1/8 grid in [-2, 2] — exactly representable."""
+    return (rng.integers(-16, 17, shape) / 8.0).astype(np.float32)
+
+
+def _duplicate_rows(rng, q):
+    """Copy random rows over random rows: exact score ties across items."""
+    n = q.shape[0]
+    count = max(1, n // 2)
+    q = q.copy()
+    q[rng.integers(0, n, count)] = q[rng.integers(0, n, count)]
+    return q
+
+
+def _check_case(p, q, t_p, t_q, topk, bias, *, use_kernel, **blocks):
+    p, q = jnp.asarray(p), jnp.asarray(q)
+    b = None if bias is None else jnp.asarray(bias)
+    r_u, r_i = effective_ranks(p, t_p), effective_ranks(q, t_q)
+    want_s, want_i = ref.pruned_topk_ref(p, q, r_u, r_i, topk, item_bias=b)
+    got_s, got_i = ops.pruned_topk(
+        p, q, t_p, t_q, topk,
+        item_bias=b, use_kernel=use_kernel, interpret=True, **blocks,
+    )
+    assert np.array_equal(np.asarray(want_i), np.asarray(got_i)), (
+        "indices diverged from the dense argsort oracle"
+    )
+    assert np.array_equal(np.asarray(want_s), np.asarray(got_s)), (
+        "scores diverged (grid inputs make exact equality the contract)"
+    )
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: the shape / threshold / tie space
+# ---------------------------------------------------------------------------
+
+_THRESHOLDS = [0.0, 1 / 16, 1 / 8, 3 / 8]  # 0 disables pruning; 3/8 is harsh
+
+
+@st.composite
+def topk_cases(draw):
+    m = draw(st.integers(1, 20))
+    n = draw(st.integers(1, 80))
+    k = draw(st.integers(1, 24))
+    topk = draw(st.integers(1, n))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    p = _grid(rng, (m, k))
+    q = _grid(rng, (n, k))
+    if draw(st.booleans()) and n >= 2:
+        q = _duplicate_rows(rng, q)
+    t_p = draw(st.sampled_from(_THRESHOLDS))
+    t_q = draw(st.sampled_from(_THRESHOLDS))
+    bias = _grid(rng, (n,)) if draw(st.booleans()) else None
+    return p, q, t_p, t_q, topk, bias
+
+
+@given(topk_cases(), st.sampled_from([1, 3, 7, 16, 128]))
+@settings(max_examples=30, deadline=None)
+def test_streaming_topk_property(case, block_n):
+    """Ragged ranks, duplicate scores, k >= n, odd streaming tile widths."""
+    p, q, t_p, t_q, topk, bias = case
+    _check_case(p, q, t_p, t_q, topk, bias, use_kernel=False, block_n=block_n)
+
+
+@given(topk_cases())
+@settings(max_examples=10, deadline=None)
+def test_pallas_kernel_topk_property(case):
+    """Same space through the Pallas kernel (interpret mode) at small/odd
+    block shapes, so tile padding, K-block skipping, and the in-kernel
+    max-extraction merge all see ragged boundaries."""
+    p, q, t_p, t_q, topk, bias = case
+    _check_case(
+        p, q, t_p, t_q, topk, bias,
+        use_kernel=True, block_m=8, block_n=16, block_k=8,
+    )
+
+
+# ---------------------------------------------------------------------------
+# deterministic edge cases (run with or without hypothesis)
+# ---------------------------------------------------------------------------
+
+_EDGE_CASES = [
+    # (m, n, k, topk, t, dup, bias) — named by what they corner
+    pytest.param(1, 1, 1, 1, 0.0, False, False, id="degenerate-1x1x1"),
+    pytest.param(5, 9, 3, 9, 1 / 16, False, True, id="topk-equals-n"),
+    pytest.param(8, 33, 7, 5, 1 / 8, True, True, id="dup-ties-odd-shapes"),
+    pytest.param(16, 130, 24, 17, 3 / 8, True, False, id="harsh-ragged-ranks"),
+    pytest.param(3, 12, 4, 12, 10.0, False, True, id="all-ranks-zero"),
+]
+
+
+@pytest.mark.parametrize("use_kernel", [False, True], ids=["stream", "kernel"])
+@pytest.mark.parametrize("m,n,k,topk,t,dup,bias", _EDGE_CASES)
+def test_topk_edge_cases(m, n, k, topk, t, dup, bias, use_kernel):
+    rng = np.random.default_rng(m * 1000 + n)
+    p = _grid(rng, (m, k))
+    q = _grid(rng, (n, k))
+    if dup and n >= 2:
+        q = _duplicate_rows(rng, q)
+    b = _grid(rng, (n,)) if bias else None
+    blocks = (
+        dict(block_m=8, block_n=16, block_k=8) if use_kernel
+        else dict(block_n=7)
+    )
+    _check_case(p, q, t, t, topk, b, use_kernel=use_kernel, **blocks)
+
+
+def test_topk_out_of_range_raises():
+    """k > n is a request error, not a deep lax.top_k trace failure."""
+    rng = np.random.default_rng(0)
+    p, q = _grid(rng, (4, 8)), _grid(rng, (16, 8))
+    for use_kernel in (False, True):
+        with pytest.raises(ValueError, match="topk"):
+            ops.pruned_topk(p, q, 0.0, 0.0, 17, use_kernel=use_kernel)
+        with pytest.raises(ValueError, match="topk"):
+            ops.pruned_topk(p, q, 0.0, 0.0, 0, use_kernel=use_kernel)
+
+
+def test_total_pruning_serves_bias_order():
+    """Thresholds above every |factor|: all ranks 0, every dot product empty
+    — the top-k must then be exactly the bias ordering (maximal tie stress
+    everywhere bias repeats)."""
+    rng = np.random.default_rng(7)
+    p, q = _grid(rng, (6, 5)), _grid(rng, (40, 5))
+    bias = _grid(rng, (40,))
+    s, i = ops.pruned_topk(
+        p, q, 10.0, 10.0, 40, item_bias=jnp.asarray(bias), use_kernel=False
+    )
+    order = np.argsort(-bias, kind="stable").astype(np.int32)
+    assert np.array_equal(np.asarray(i), np.tile(order, (6, 1)))
+    assert np.array_equal(np.asarray(s), np.tile(bias[order], (6, 1)))

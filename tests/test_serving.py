@@ -237,6 +237,22 @@ def test_bucket_size_quantizes():
         bucket_size(0, 8)
 
 
+def test_bucket_size_power_of_two_boundaries():
+    """Exact powers of two map to themselves; one past a power doubles; the
+    max_batch cap wins even when it is not itself a power of two."""
+    for exp in range(0, 8):
+        n = 1 << exp
+        assert bucket_size(n, 256) == n
+        assert bucket_size(n + 1, 256) == min(2 * n, 256)
+    assert bucket_size(-1 + (1 << 8), 256) == 256
+    # a non-power-of-two cap still bounds the bucket
+    assert bucket_size(5, 6) == 6
+    assert bucket_size(7, 6) == 6
+    assert bucket_size(1, 1) == 1
+    with pytest.raises(ValueError):
+        bucket_size(-3, 8)
+
+
 def test_lru_cache_evicts_in_order():
     cache = LRUCache(2)
     cache.put(1, "a")
@@ -246,6 +262,39 @@ def test_lru_cache_evicts_in_order():
     assert cache.get(2) is None
     assert cache.get(1) == "a" and cache.get(3) == "c"
     assert len(cache) == 2
+
+
+def test_lru_cache_zero_capacity_disabled():
+    """capacity<=0 means 'cache off': puts are dropped, gets miss, and the
+    miss counter still ticks (the engine uses 0 for non-SVD++ variants)."""
+    cache = LRUCache(0)
+    cache.put(1, "a")
+    assert cache.get(1) is None
+    assert len(cache) == 0
+    assert (cache.hits, cache.misses) == (0, 1)
+
+
+def test_lru_cache_update_existing_key_refreshes():
+    """Re-putting a key must update in place (len stays) AND refresh its
+    recency, so it survives the next eviction."""
+    cache = LRUCache(2)
+    cache.put(1, "a")
+    cache.put(2, "b")
+    cache.put(1, "a2")              # update, not insert
+    assert len(cache) == 2
+    cache.put(3, "c")               # evicts 2 (1 was refreshed by the put)
+    assert cache.get(2) is None
+    assert cache.get(1) == "a2"
+
+
+def test_lru_cache_hit_miss_counters_exact():
+    cache = LRUCache(4)
+    assert cache.get(9) is None
+    cache.put(9, "x")
+    assert cache.get(9) == "x"
+    assert cache.get(9) == "x"
+    assert cache.get(10) is None
+    assert (cache.hits, cache.misses) == (2, 2)
 
 
 def test_microbatcher_rejects_bad_ids_at_submit():
@@ -258,6 +307,31 @@ def test_microbatcher_rejects_bad_ids_at_submit():
         batcher.submit(999)
     results = batcher.drain()
     assert good in results and len(results) == 1
+
+
+def test_microbatcher_validates_topk_at_construction():
+    params = mf.init_params(jax.random.PRNGKey(8), 16, 100, 8)
+    engine = ServingEngine(params, 0.0, 0.0, use_kernel=False, block_n=64)
+    with pytest.raises(ValueError, match="topk"):
+        MicroBatcher(engine, topk=101)
+    with pytest.raises(ValueError, match="topk"):
+        MicroBatcher(engine, topk=0)
+    MicroBatcher(engine, topk=100)  # topk == n_items is legal
+
+
+def test_engine_validates_topk_bounds():
+    """topk > n_items (or <= 0) must raise a clear request error up front,
+    never a shape failure deep inside the lax.top_k trace — on every entry
+    point."""
+    params = mf.init_params(jax.random.PRNGKey(9), 12, 64, 8)
+    engine = ServingEngine(params, 0.0, 0.0, use_kernel=False, block_n=32)
+    for bad in (0, -1, 65):
+        with pytest.raises(ValueError, match=r"topk must be in \[1, 64\]"):
+            engine.topk([0], bad)
+        with pytest.raises(ValueError, match=r"topk must be in \[1, 64\]"):
+            engine.topk_sharded([0], bad, mesh=jax.make_mesh((1,), ("model",)))
+    s, i = engine.topk([0], 64)  # the boundary itself works
+    assert s.shape == (1, 64) and i.shape == (1, 64)
 
 
 def test_microbatcher_fans_out_duplicates():
@@ -292,10 +366,34 @@ def test_sharded_topk_single_device_mesh():
     np.testing.assert_allclose(want_s, got_s, rtol=1e-5, atol=1e-5)
 
 
+def test_sharded_topk_2d_mesh_inprocess():
+    """User-axis x item-axis (2-D) sharding parity.  Needs >= 4 local
+    devices — skipped on the default 1-device run, exercised by the CI
+    serving job (XLA_FLAGS=--xla_force_host_platform_device_count=4)."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >= 4 devices (run under the 4-device CI mesh job)")
+    params = mf.init_params(jax.random.PRNGKey(11), 32, 900, 16,
+                            variant="bias", global_mean=3.0)
+    engine = ServingEngine(params, 0.03, 0.03, use_kernel=False, block_n=128)
+    users = np.arange(13, dtype=np.int32)  # odd: exercises row-slab padding
+    want_s, want_i = engine.topk(users, 6)
+    for shape, names in [
+        ((4,), ("model",)),            # 1-D: items only (the PR-1 layout)
+        ((2, 2), ("data", "model")),   # 2-D: users x items
+        ((4, 1), ("data", "model")),   # degenerate: users only
+    ]:
+        mesh = jax.make_mesh(shape, names)
+        got_s, got_i = engine.topk_sharded(users, 6, mesh=mesh)
+        assert np.array_equal(want_i, got_i), (shape, names)
+        np.testing.assert_allclose(want_s, got_s, rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.slow
 def test_sharded_topk_multi_device():
-    """Real 8-way catalog sharding in a subprocess (device count must be set
-    before jax initializes)."""
+    """Real 8-way sharding in a subprocess (device count must be set before
+    jax initializes): the 1-D item-only layout, the 2-D user x item layout,
+    and a single-user request whose batch must be padded to the user-slab
+    multiple — all byte-identical to the local path."""
     code = """
         import numpy as np, jax
         from repro.core import mf
@@ -304,12 +402,20 @@ def test_sharded_topk_multi_device():
                                 variant="bias", global_mean=3.0)
         engine = ServingEngine(params, 0.04, 0.04, use_kernel=False,
                                block_n=128)
-        mesh = jax.make_mesh((2, 4), ("data", "model"))
         users = np.arange(17, dtype=np.int32)
         want_s, want_i = engine.topk(users, 9)
-        got_s, got_i = engine.topk_sharded(users, 9, mesh=mesh)
-        assert np.array_equal(want_i, got_i)
-        np.testing.assert_allclose(want_s, got_s, rtol=1e-5, atol=1e-5)
+        for shape, names in [((8,), ("model",)),
+                             ((2, 4), ("data", "model")),
+                             ((4, 2), ("data", "model"))]:
+            mesh = jax.make_mesh(shape, names)
+            got_s, got_i = engine.topk_sharded(users, 9, mesh=mesh)
+            assert np.array_equal(want_i, got_i), (shape, names)
+            np.testing.assert_allclose(want_s, got_s, rtol=1e-5, atol=1e-5)
+        # bucket 1 < data extent: the engine must pad the user slab
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        one_s, one_i = engine.topk_sharded(users[3:4], 9, mesh=mesh)
+        assert np.array_equal(one_i, want_i[3:4])
+        np.testing.assert_allclose(one_s, want_s[3:4], rtol=1e-5, atol=1e-5)
         print("SHARDED_TOPK_OK")
     """
     env = dict(os.environ)
