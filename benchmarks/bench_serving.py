@@ -25,7 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, reset_records, time_fn, write_json
 from repro.core import mf
 from repro.core.ranks import effective_ranks
 from repro.kernels import ops, ref
@@ -40,6 +40,7 @@ def dense_oracle(params, users, t_p, t_q, topk):
 
 
 def run(*, full: bool = False) -> None:
+    reset_records()
     m, n, k = (20000, 200000, 64) if full else (4096, 40000, 48)
     batch, topk, t = 256, 10, 0.05
     rng = np.random.default_rng(0)
@@ -114,9 +115,13 @@ def run(*, full: bool = False) -> None:
     t_seq = time.perf_counter() - start
 
     queue = RequestQueue(engine, linger_ms=1.0, max_pending=n_req)
+    req_latencies = []
 
     def one_request(u):
-        return queue.submit(int(u), topk, timeout=120).result(timeout=120)
+        t0 = time.perf_counter()
+        result = queue.submit(int(u), topk, timeout=120).result(timeout=120)
+        req_latencies.append(time.perf_counter() - t0)
+        return result
 
     with ThreadPoolExecutor(max_workers=conc) as pool:
         list(pool.map(one_request, req_users[:64]))  # warm the queue path
@@ -147,6 +152,19 @@ def run(*, full: bool = False) -> None:
     assert speedup >= 2.0, (
         f"continuous batching must be >= 2x sequential, got {speedup:.2f}x"
     )
+
+    lat_ms = np.asarray(req_latencies[-n_req:]) * 1e3
+    p50, p99 = np.percentile(lat_ms, [50, 99])
+    write_json("serving", {
+        "shape": {"users": m, "items": n, "k": k, "batch": batch,
+                  "topk": topk},
+        "engine_speedup_x_dense": us_dense / us_engine,
+        "engine_req_per_s": batch / (us_engine / 1e6),
+        "queue_req_per_s": queue_rps,
+        "queue_speedup_x_sequential": speedup,
+        "queue_latency_ms_p50": float(p50),
+        "queue_latency_ms_p99": float(p99),
+    })
 
 
 def main() -> None:

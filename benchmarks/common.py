@@ -1,15 +1,63 @@
-"""Shared benchmark helpers: CSV emission + wall-clock timing."""
+"""Shared benchmark helpers: CSV emission + wall-clock timing + JSON reports.
+
+Every ``emit`` line is also recorded in-process; suites call
+:func:`write_json` at the end of their ``run`` to drop a machine-readable
+``BENCH_<suite>.json``, so the perf trajectory (throughput, speedup, p99)
+is trackable across PRs without scraping stdout.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable
+from typing import Callable, Dict, List, Optional
 
 import jax
+
+_RECORDS: List[Dict] = []
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """The harness contract: ``name,us_per_call,derived`` CSV lines."""
     print(f"{name},{us_per_call:.3f},{derived}")
+    _RECORDS.append(
+        {"name": name, "us_per_call": float(us_per_call), "derived": derived}
+    )
+
+
+def reset_records() -> None:
+    _RECORDS.clear()
+
+
+def records() -> List[Dict]:
+    return list(_RECORDS)
+
+
+def write_json(
+    suite: str,
+    summary: Optional[Dict] = None,
+    *,
+    directory: Optional[str] = None,
+) -> str:
+    """Write ``BENCH_<suite>.json``: every emit record since the last reset
+    plus a suite-level ``summary`` dict of headline numbers.  The output
+    directory defaults to ``$BENCH_JSON_DIR`` or the CWD.  Returns the
+    path."""
+    directory = directory or os.environ.get("BENCH_JSON_DIR") or "."
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"BENCH_{suite}.json")
+    payload = {
+        "suite": suite,
+        "unix_time": int(time.time()),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "summary": summary or {},
+        "records": records(),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {path}")
+    return path
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -16,11 +16,19 @@ def main() -> None:
                         help="paper-scale datasets/epochs (slow)")
     parser.add_argument("--only", default=None,
                         help="comma-separated subset: "
-                             "figures,kernels,roofline,serving")
+                             "figures,kernels,roofline,serving,online")
+    parser.add_argument("--json-dir", default=None,
+                        help="directory for the BENCH_<suite>.json reports "
+                             "(default: $BENCH_JSON_DIR or CWD)")
     args = parser.parse_args()
+    if args.json_dir:
+        import os
+
+        os.environ["BENCH_JSON_DIR"] = args.json_dir
 
     from benchmarks import (
         bench_kernels,
+        bench_online,
         bench_paper_figures,
         bench_roofline,
         bench_serving,
@@ -31,6 +39,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,
         "serving": bench_serving.run,
+        "online": bench_online.run,
     }
     selected = (
         {s.strip() for s in args.only.split(",")} if args.only else set(suites)

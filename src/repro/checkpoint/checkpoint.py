@@ -109,6 +109,38 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def step_path(directory: str, step: int) -> str:
+    """The on-disk directory of one step — the single definition of the
+    layout every reader (restore, serving loader, online delta folds) uses."""
+    return os.path.join(directory, f"step_{step:012d}")
+
+
+def load_metadata(directory: str, step: int) -> Dict[str, Any]:
+    with open(os.path.join(step_path(directory, step), "metadata.json")) as f:
+        return json.load(f)
+
+
+def load_raw(
+    directory: str,
+    step: Optional[int] = None,
+    *,
+    metadata: Optional[Dict[str, Any]] = None,
+) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    """Load a step's flat ``{key: array}`` payload + metadata, no structure
+    imposed — the layer :func:`restore` (pytree shaping) and the online
+    delta folds build on.  Pass ``metadata`` if already read to skip the
+    re-read."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    if metadata is None:
+        metadata = load_metadata(directory, step)
+    with np.load(os.path.join(step_path(directory, step), "arrays.npz")) as data:
+        arrays = {key: data[key] for key in data.files}
+    return arrays, metadata
+
+
 def restore(
     directory: str,
     tree_like: Pytree,
@@ -116,15 +148,7 @@ def restore(
     step: Optional[int] = None,
 ) -> Tuple[Pytree, Dict[str, Any]]:
     """Restore into the structure of ``tree_like``.  Returns (tree, metadata)."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {directory}")
-    path = os.path.join(directory, f"step_{step:012d}")
-    with open(os.path.join(path, "metadata.json")) as f:
-        meta = json.load(f)
-    with np.load(os.path.join(path, "arrays.npz")) as data:
-        arrays = {k: data[k] for k in data.files}
+    arrays, meta = load_raw(directory, step)
 
     keys = [k for k, _ in _flatten_with_paths(tree_like)]
     leaves, treedef = jax.tree_util.tree_flatten(tree_like)

@@ -82,6 +82,26 @@ def init_params(
     )
 
 
+def params_from_flat(arrays: Dict[str, Any], prefix: str = "params__") -> MFParams:
+    """Rebuild :class:`MFParams` from a flat ``{key: array}`` checkpoint
+    payload (the ``params__p``-style keys the checkpointer's path flattening
+    produces).  The single owner of that key mapping — the serving loader
+    and the online delta folds both go through here."""
+
+    def opt(name):
+        key = prefix + name
+        return jnp.asarray(arrays[key]) if key in arrays else None
+
+    return MFParams(
+        p=jnp.asarray(arrays[prefix + "p"]),
+        q=jnp.asarray(arrays[prefix + "q"]),
+        user_bias=opt("user_bias"),
+        item_bias=opt("item_bias"),
+        global_mean=opt("global_mean"),
+        implicit=opt("implicit"),
+    )
+
+
 def _user_vector(
     params: MFParams, u: jax.Array, hist: Optional[jax.Array]
 ) -> jax.Array:
@@ -202,9 +222,20 @@ def train_step(
     masked XLA formulation with identical semantics.  Duplicate (u, i) rows in
     a batch accumulate additively (scatter-add), the standard minibatch
     relaxation of the paper's sequential SGD.
+
+    An optional ``batch["weight"]`` (B,) gates rows out of the update —
+    gradients, bias/implicit updates, and metrics all scale by it (0 = row
+    fully inert, fractional = importance weighting).  The weight multiplies
+    the *update mask* and the metrics only — never the prediction, which
+    must stay the full model output for the error (and thus the gradient
+    direction) to be right.  NB: for the EMA-state optimizers
+    (adadelta/adam) a zero-weight row still *writes back* its row's decayed
+    EMA state, the same caveat duplicate rows already carry — which is why
+    the online updater chunks instead of padding.
     """
     u, i, r = batch["user"], batch["item"], batch["rating"].astype(jnp.float32)
     hist = batch.get("hist")
+    weight = batch.get("weight")
     k = params.p.shape[-1]
 
     pu = _user_vector(params, u, hist)
@@ -212,13 +243,18 @@ def train_step(
     r_u = effective_ranks(pu, t_p)
     r_i = effective_ranks(qi, t_q)
     pair_ranks = jnp.minimum(r_u, r_i)
-    mask = rank_mask(pair_ranks, k) * dim_mask[None, :]
+    pred_mask = rank_mask(pair_ranks, k) * dim_mask[None, :]
+    w = (
+        jnp.ones_like(r) if weight is None else weight.astype(jnp.float32)
+    )
+    mask = pred_mask * w[:, None]  # gates updates; predictions use pred_mask
 
     fused_ok = (
         use_fused_kernel
         and opt.name == "sgd"
         and params.user_bias is None
         and params.implicit is None
+        and weight is None
     )
     if fused_ok:
         new_pu, new_qi, err = kops.fused_mf_sgd(
@@ -245,7 +281,9 @@ def train_step(
         }
         return new_params, opt_state, metrics
 
-    pred = jnp.sum(pu.astype(jnp.float32) * qi.astype(jnp.float32) * mask, axis=-1)
+    pred = jnp.sum(
+        pu.astype(jnp.float32) * qi.astype(jnp.float32) * pred_mask, axis=-1
+    )
     if params.user_bias is not None:
         pred = (
             pred
@@ -266,14 +304,14 @@ def train_step(
     new_state = opt_state._replace(p=st_p, q=st_q)
 
     if params.user_bias is not None:
-        ones = jnp.ones((u.shape[0], 1), jnp.float32)
+        w_col = w[:, None]
         g_bu = (lam * params.user_bias[u] - err[:, None]).astype(jnp.float32)
         g_bi = (lam * params.item_bias[i] - err[:, None]).astype(jnp.float32)
         new_bu, st_bu = opt.apply_rows(
-            params.user_bias, opt_state.user_bias, u, g_bu, ones, lr
+            params.user_bias, opt_state.user_bias, u, g_bu, w_col, lr
         )
         new_bi, st_bi = opt.apply_rows(
-            params.item_bias, opt_state.item_bias, i, g_bi, ones, lr
+            params.item_bias, opt_state.item_bias, i, g_bi, w_col, lr
         )
         new_params = new_params._replace(user_bias=new_bu, item_bias=new_bi)
         new_state = new_state._replace(user_bias=st_bu, item_bias=st_bi)
@@ -283,7 +321,9 @@ def train_step(
         n_items = params.implicit.shape[0] - 1
         counts = jnp.sum((hist < n_items).astype(jnp.float32), axis=1, keepdims=True)
         coef = err[:, None] * jax.lax.rsqrt(jnp.maximum(counts, 1.0))
-        g_y = -(coef[:, None, :] * (qi * mask)[:, None, :]) * jnp.ones(
+        # pred_mask here, not mask: the row weight rides in via flat_mask
+        # below (apply_rows multiplies it in) — using mask would square it
+        g_y = -(coef[:, None, :] * (qi * pred_mask)[:, None, :]) * jnp.ones(
             (1, hist.shape[1], 1), jnp.float32
         )
         g_y = g_y + lam * params.implicit[hist]
@@ -299,9 +339,11 @@ def train_step(
         new_params = new_params._replace(implicit=new_y)
         new_state = new_state._replace(implicit=st_y)
 
+    denom = jnp.maximum(jnp.sum(w), 1e-9)  # weighted mean, not deflated
     metrics = {
-        "abs_err": jnp.mean(jnp.abs(err)),
-        "work_fraction": jnp.mean(pair_ranks.astype(jnp.float32)) / k,
+        "abs_err": jnp.sum(jnp.abs(err) * w) / denom,
+        "work_fraction": jnp.sum(pair_ranks.astype(jnp.float32) * w)
+        / (denom * k),
     }
     return new_params, new_state, metrics
 

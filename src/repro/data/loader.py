@@ -47,8 +47,12 @@ def iterate_batches(
             "user": ds.user[idx],
             "item": ds.item[idx],
             "rating": ds.rating[idx],
-            "weight": weight,
         }
+        if not drop_remainder:
+            # train batches (drop_remainder) are always full: omitting the
+            # all-ones weight keeps train_step's weight-free fast path (and
+            # the fused-kernel route) eligible
+            batch["weight"] = weight
         if hist is not None:
             batch["hist"] = hist[ds.user[idx]]
         yield batch

@@ -237,6 +237,29 @@ def serving_topk_specs(mesh: Mesh):
     return in_specs, out_specs
 
 
+def serving_topk_kernel_specs(mesh: Mesh):
+    """(in_specs, out_specs) of the engine's *kernel-path* sharded top-k.
+
+    Same user/item axis mapping as :func:`serving_topk_specs`, different
+    operand set: the Pallas kernel re-masks raw factors per K-block, so each
+    shard receives its slab of the padded raw catalog ``(q, r_i, bias)``
+    (all row-sharded over "model") plus the replicated ``t_p`` scalar,
+    instead of pre-masked streaming tiles.
+    """
+    dp = data_axes(mesh)
+    row = dp if dp else None
+    user_spec = P(row, None)
+    in_specs = (
+        user_spec,            # raw user factor block
+        P(),                  # t_p (replicated scalar)
+        P("model", None),     # q slab
+        P("model", None),     # r_i slab
+        P("model", None),     # bias slab
+    )
+    out_specs = (user_spec, user_spec)
+    return in_specs, out_specs
+
+
 def mf_batch_shardings(mesh: Mesh, has_hist: bool = False):
     dp = data_axes(mesh)
     out = {

@@ -16,7 +16,12 @@ from repro.core.ranks import effective_ranks, rank_mask
 from repro.kernels import ref
 from repro.kernels.fused_mf_sgd import fused_mf_sgd_padded
 from repro.kernels.pruned_matmul import pruned_matmul_padded
-from repro.kernels.pruned_topk import pruned_topk_padded
+from repro.kernels.pruned_topk import (
+    TOPK_BLOCK_K,
+    TOPK_BLOCK_M,
+    TOPK_BLOCK_N,
+    pruned_topk_padded,
+)
 
 
 def _default_interpret() -> bool:
@@ -146,7 +151,8 @@ def _pruned_topk_scan(p, q, r_u, r_i, item_bias, *, topk, block_n):
 
 
 def pad_catalog_for_topk_kernel(
-    q, r_i, item_bias, *, block_n: int = 256, block_k: int = 128
+    q, r_i, item_bias, *, block_n: int = TOPK_BLOCK_N,
+    block_k: int = TOPK_BLOCK_K,
 ):
     """Item-side operands of ``pruned_topk_padded``: raw factors, ranks, and
     biases padded to the kernel's block multiples.  The single definition of
@@ -161,7 +167,9 @@ def pad_catalog_for_topk_kernel(
     )
 
 
-def pad_users_for_topk_kernel(p, r_u, *, block_m: int = 128, block_k: int = 128):
+def pad_users_for_topk_kernel(
+    p, r_u, *, block_m: int = TOPK_BLOCK_M, block_k: int = TOPK_BLOCK_K
+):
     """User-side operands of ``pruned_topk_padded`` (see above)."""
     return (
         _pad_to(_pad_to(p, block_m, 0), block_k, 1),
@@ -177,9 +185,9 @@ def pruned_topk(
     topk: int,
     *,
     item_bias: jax.Array | None = None,
-    block_m: int = 128,
-    block_n: int = 256,
-    block_k: int = 128,
+    block_m: int = TOPK_BLOCK_M,
+    block_n: int = TOPK_BLOCK_N,
+    block_k: int = TOPK_BLOCK_K,
     interpret: bool | None = None,
     use_kernel: bool = True,
 ) -> tuple[jax.Array, jax.Array]:

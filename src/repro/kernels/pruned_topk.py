@@ -37,6 +37,13 @@ from repro.kernels.pruned_matmul import _VMEM, pltpu
 
 _NEG_INF = float("-inf")
 
+# Default block geometry.  Every producer of padded operands (kernels.ops
+# wrappers, the serving engine's precomputed catalog layouts) imports these,
+# so retuning the kernel retunes the whole layout contract at once.
+TOPK_BLOCK_M = 128
+TOPK_BLOCK_N = 256
+TOPK_BLOCK_K = 128
+
 
 def _compiler_params():
     """Unlike pruned_matmul, the N (item-tile) axis is sequential: it carries
@@ -156,9 +163,9 @@ def pruned_topk_padded(
     *,
     topk: int,
     n_items: int,
-    block_m: int = 128,
-    block_n: int = 256,
-    block_k: int = 128,
+    block_m: int = TOPK_BLOCK_M,
+    block_n: int = TOPK_BLOCK_N,
+    block_k: int = TOPK_BLOCK_K,
     interpret: bool = False,
 ):
     """Padded-shape kernel entry.  Returns ``(scores, indices)`` shaped

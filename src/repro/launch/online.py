@@ -1,0 +1,226 @@
+"""Online serving launcher: train -> stream -> serve, in one process.
+
+    PYTHONPATH=src python -m repro.launch.online --dataset movielens100k \
+        --scale 0.05 --train-epochs 3 --events 500 --swap-every 3 --clients 4
+
+Runs the full freshness loop the online subsystem exists for:
+
+1. train a DP-MF model (or resume from ``--ckpt``) on a train split;
+2. start the serving engine + async request queue and hammer it from
+   ``--clients`` concurrent request threads for the whole run;
+3. stream held-out (or synthetic Poisson) events through the
+   :class:`~repro.online.updater.OnlineUpdater` — pruned row updates only;
+4. every ``--swap-every`` micro-batches, hot-swap the new factor version
+   into the live engine (zero dropped requests) and write an async delta
+   checkpoint.
+
+Exit status is non-zero if ANY request failed or was dropped during the run
+— the CI smoke contract.  A JSON report (throughput, swap latency, serving
+percentiles, work fraction, MAE before/after) lands on stdout and, with
+``--json``, on disk.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import numpy as np
+
+from repro.core.trainer import DPMFTrainer, TrainConfig
+from repro.data.ratings import paper_dataset, train_test_split
+from repro.online import (
+    OnlineUpdater,
+    PoissonSource,
+    ReplaySource,
+    SnapshotPublisher,
+    iter_microbatches,
+)
+from repro.serving import ServingEngine
+
+
+def run_online(args) -> dict:
+    ds = paper_dataset(args.dataset, seed=args.seed, scale=args.scale)
+    rest, test_ds = train_test_split(ds, 0.15, seed=args.seed)
+    train_ds, stream_ds = train_test_split(rest, 0.25, seed=args.seed + 1)
+
+    config = TrainConfig(
+        k=args.k,
+        epochs=args.train_epochs,
+        batch_size=args.batch_size,
+        lr=args.lr,
+        pruning_rate=args.pruning_rate,
+        variant=args.variant,
+        seed=args.seed,
+        checkpoint_dir=args.ckpt,
+    )
+    trainer = DPMFTrainer(config, train_ds, test_ds)
+    if trainer.maybe_restore():
+        print(f"# resumed training checkpoint at epoch {trainer.epoch}")
+    trainer.run()
+    mae_before = trainer.evaluate()
+    print(f"# trained: MAE {mae_before:.4f}, t_q {float(trainer.t_q):.4f}")
+
+    updater = OnlineUpdater.from_trainer(
+        trainer, batch_size=max(args.batch_events, 64)
+    )
+    engine = ServingEngine(
+        trainer.params, trainer.t_p, trainer.t_q,
+        use_kernel=True if args.use_kernel else None,
+        user_history=trainer.hist,
+        block_n=args.block_n,
+    )
+    publisher = SnapshotPublisher(
+        engine, updater,
+        checkpoint_dir=(args.ckpt + "/online") if args.ckpt else None,
+    )
+
+    if args.source == "replay":
+        source = ReplaySource(stream_ds, epochs=None, shuffle=True,
+                              seed=args.seed)
+    else:
+        source = PoissonSource(
+            updater.num_users, updater.num_items,
+            rate=1000.0, seed=args.seed,
+            new_user_prob=args.new_id_prob, new_item_prob=args.new_id_prob,
+            rating_min=ds.rating_min, rating_max=ds.rating_max,
+        )
+
+    # warm the power-of-two buckets queue batches can land in, so the first
+    # in-flight requests measure serving, not compiles
+    warm_users = np.arange(min(engine.num_users, 8), dtype=np.int32)
+    for b in (1, 2, 4, 8):
+        if b <= len(warm_users):
+            engine.topk(warm_users[:b], args.topk)
+
+    # ---- concurrent request traffic over the whole stream window ----------
+    engine.start(linger_ms=1.0)
+    stop = threading.Event()
+    latencies: list = []
+    failures: list = []
+    ok = [0]
+    lock = threading.Lock()
+
+    def client(seed: int) -> None:
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            user = int(rng.integers(0, engine.num_users))
+            t0 = time.perf_counter()
+            try:
+                engine.submit(user, args.topk, timeout=30.0).result(timeout=60)
+                dt = time.perf_counter() - t0
+                with lock:
+                    ok[0] += 1
+                    latencies.append(dt)
+            except Exception as exc:  # noqa: BLE001 - any failure fails the run
+                with lock:
+                    failures.append(f"user {user}: {exc!r}")
+
+    threads = [
+        threading.Thread(target=client, args=(1000 + c,), daemon=True)
+        for c in range(args.clients)
+    ]
+    for t in threads:
+        t.start()
+
+    # ---- the update loop ---------------------------------------------------
+    swaps = []
+    events = 0
+    work_fractions = []
+    t_stream = time.perf_counter()
+    for b, batch in enumerate(
+        iter_microbatches(source, args.batch_events, max_events=args.events)
+    ):
+        metrics = updater.apply(batch)
+        events += metrics["events"]
+        work_fractions.append(metrics["work_fraction"])
+        if (b + 1) % args.swap_every == 0:
+            info = updater.maybe_recalibrate()  # no-op within drift budget
+            if info:
+                print(f"# recalibrated: drift {info['drift']:.3f}")
+            swaps.append(publisher.publish())
+    swaps.append(publisher.publish())  # final flush
+    stream_s = time.perf_counter() - t_stream
+    publisher.close()
+
+    stop.set()
+    for t in threads:
+        t.join(timeout=120)
+    engine.stop()
+
+    mae_after = updater.evaluate(test_ds)
+    lat_ms = np.asarray(latencies) * 1e3 if latencies else np.zeros(1)
+    report = {
+        "events": events,
+        "event_rate_per_s": events / max(stream_s, 1e-9),
+        "mean_work_fraction": float(np.mean(work_fractions)),
+        "swaps": len(swaps),
+        "final_version": engine.version,
+        "swap_ms_p50": float(np.percentile([s.swap_s * 1e3 for s in swaps], 50)),
+        "swap_ms_max": float(max(s.swap_s * 1e3 for s in swaps)),
+        "requests_ok": ok[0],
+        "requests_failed": len(failures),
+        "latency_ms_p50": float(np.percentile(lat_ms, 50)),
+        "latency_ms_p99": float(np.percentile(lat_ms, 99)),
+        "mae_before": mae_before,
+        "mae_after": mae_after,
+        "num_users": engine.num_users,
+        "num_items": engine.n_items,
+    }
+    if failures:
+        report["failure_samples"] = failures[:5]
+    return report
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--dataset", default="movielens100k",
+                        choices=["movielens100k", "appliances",
+                                 "bookcrossings", "jester"])
+    parser.add_argument("--scale", type=float, default=0.05,
+                        help="dataset size multiplier")
+    parser.add_argument("--k", type=int, default=24)
+    parser.add_argument("--train-epochs", type=int, default=3)
+    parser.add_argument("--batch-size", type=int, default=1024,
+                        help="offline training batch size")
+    parser.add_argument("--lr", type=float, default=0.05)
+    parser.add_argument("--pruning-rate", type=float, default=0.3)
+    parser.add_argument("--variant", default="funk",
+                        choices=["funk", "bias", "svdpp"])
+    parser.add_argument("--events", type=int, default=500,
+                        help="total streamed events")
+    parser.add_argument("--batch-events", type=int, default=64,
+                        help="events per update micro-batch")
+    parser.add_argument("--swap-every", type=int, default=3,
+                        help="hot-swap every N micro-batches")
+    parser.add_argument("--source", default="replay",
+                        choices=["replay", "poisson"])
+    parser.add_argument("--new-id-prob", type=float, default=0.02,
+                        help="cold-start id probability (poisson source)")
+    parser.add_argument("--clients", type=int, default=4,
+                        help="concurrent request threads during the stream")
+    parser.add_argument("--topk", type=int, default=10)
+    parser.add_argument("--block-n", type=int, default=1024)
+    parser.add_argument("--use-kernel", action="store_true",
+                        help="force the Pallas kernel path (default: TPU only)")
+    parser.add_argument("--ckpt", default=None,
+                        help="checkpoint dir (training + online deltas)")
+    parser.add_argument("--seed", type=int, default=0)
+    parser.add_argument("--json", default=None, metavar="PATH",
+                        help="also write the run report to PATH")
+    args = parser.parse_args()
+
+    report = run_online(args)
+    print(json.dumps(report, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+    if report["requests_failed"]:
+        raise SystemExit(
+            f"{report['requests_failed']} requests failed during the run"
+        )
+
+
+if __name__ == "__main__":
+    main()

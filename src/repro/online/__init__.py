@@ -1,0 +1,25 @@
+"""Online learning: streaming pruned factor updates + zero-downtime serving.
+
+The third pillar of the system (train, serve, **refresh**): consume fresh
+``(user, item, rating)`` events, apply the paper's dynamically-pruned row
+updates to only the touched rows, and hot-swap versioned factor snapshots
+into a running :class:`~repro.serving.engine.ServingEngine` without dropping
+requests.
+"""
+from repro.online.publisher import (  # noqa: F401
+    SnapshotPublisher,
+    SwapReport,
+    fold_deltas,
+)
+from repro.online.stream import (  # noqa: F401
+    Event,
+    EventBatch,
+    IteratorSource,
+    PoissonSource,
+    ReplaySource,
+    iter_microbatches,
+)
+from repro.online.updater import (  # noqa: F401
+    OnlineUpdater,
+    PublishSnapshot,
+)

@@ -1,0 +1,303 @@
+"""Versioned factor publication: updater -> serving engine, without downtime.
+
+:class:`SnapshotPublisher` drains the updater's accumulated delta
+(:meth:`OnlineUpdater.snapshot`) and pushes it into a running
+:class:`~repro.serving.engine.ServingEngine` via :meth:`ServingEngine.swap`
+— the double-buffered atomic flip.  In-flight request batches finish on the
+version they started on; the hot-user LRU and the catalog tile layouts are
+invalidated/patched for the touched rows only (a full rebuild only after
+threshold recalibration, a latent rearrange, or catalog growth).
+
+Durability rides along as **delta checkpoints**: instead of serializing the
+full factor tables per swap, the publisher writes only the touched rows
+(plus thresholds and bookkeeping) through the existing
+:class:`~repro.checkpoint.checkpoint.AsyncCheckpointer` — serialization
+overlaps the next update batches exactly as training checkpoints overlap
+epochs.  ``kind=full`` checkpoints are written whenever a delta cannot
+describe the change (recalibration permuted the latent axis).
+:func:`fold_deltas` replays a delta chain over a base checkpoint and
+returns the reconstructed state — the restart path for an online job.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.core import mf
+from repro.online.updater import OnlineUpdater, PublishSnapshot
+
+
+@dataclasses.dataclass
+class SwapReport:
+    version: int
+    swap_s: float               # wall time of the double-buffered swap
+    touched_users: int
+    touched_items: int
+    full_rebuild: bool
+    events_seen: int
+    checkpoint_step: Optional[int] = None
+
+
+class SnapshotPublisher:
+    """Publish updater snapshots into a live engine, optionally checkpointing.
+
+    ``checkpoint_dir`` enables async delta checkpoints (one per publish,
+    step = engine version, ``keep`` retention on top of whatever full
+    checkpoints the chain needs).  The publisher never stops the engine:
+    :meth:`publish` is safe under concurrent request traffic.
+    """
+
+    def __init__(
+        self,
+        engine,
+        updater: OnlineUpdater,
+        *,
+        checkpoint_dir: Optional[str] = None,
+        keep: int = 8,
+    ):
+        self.engine = engine
+        self.updater = updater
+        self.keep = keep
+        self._ckpt = (
+            ckpt_lib.AsyncCheckpointer(checkpoint_dir, keep=keep)
+            if checkpoint_dir
+            else None
+        )
+        self._last_step = 0       # previous checkpoint step (0 = the base)
+        self._last_full_step = 0  # most recent kind=full anchor
+        self._force_full_next = False
+        if checkpoint_dir:
+            # Resume an existing chain: steps keep counting from the
+            # directory's frontier (engine versions restart at 0 per
+            # process, so step numbers must NOT come from them — reusing a
+            # step would overwrite a live link of the chain), and the first
+            # post-restart checkpoint is a full anchor so the fold never
+            # depends on the restarted process's in-memory lineage.
+            frontier = ckpt_lib.latest_step(checkpoint_dir)
+            if frontier is not None:
+                self._last_step = frontier
+                self._force_full_next = True
+        self.reports: list = []
+
+    def publish(self) -> SwapReport:
+        """One snapshot -> swap -> (async) checkpoint cycle."""
+        snap = self.updater.snapshot()
+        start = time.perf_counter()
+        version = self.engine.swap(
+            snap.params,
+            snap.t_p,
+            snap.t_q,
+            touched_users=None if snap.full_rebuild else snap.touched_users,
+            touched_items=None if snap.full_rebuild else snap.touched_items,
+            touched_implicit_items=snap.touched_implicit_items,
+            user_history=snap.user_history,
+        )
+        swap_s = time.perf_counter() - start
+        step = None
+        if self._ckpt is not None:
+            step = self._last_step + 1
+            # Keep-N retention deletes the oldest steps; a delta whose
+            # predecessors were GC'd is unusable.  Writing a full anchor at
+            # least every keep-1 publishes guarantees the surviving window
+            # always contains one, so fold_deltas always has a valid chain.
+            full = (
+                snap.full_rebuild
+                or self._force_full_next
+                or step - self._last_full_step >= max(self.keep - 1, 1)
+            )
+            self._ckpt.save(
+                step,
+                _delta_tree(snap, full=full),
+                metadata={
+                    "kind": "full" if full else "delta",
+                    "prev_step": self._last_step,
+                    "version": version,
+                    "events_seen": snap.events_seen,
+                    "num_users": snap.params.p.shape[0],
+                    "num_items": snap.params.q.shape[0],
+                },
+            )
+            self._last_step = step
+            self._force_full_next = False
+            if full:
+                self._last_full_step = step
+        report = SwapReport(
+            version=version,
+            swap_s=swap_s,
+            touched_users=len(snap.touched_users),
+            touched_items=len(snap.touched_items),
+            full_rebuild=snap.full_rebuild,
+            events_seen=snap.events_seen,
+            checkpoint_step=step,
+        )
+        self.reports.append(report)
+        return report
+
+    def close(self) -> None:
+        """Join the in-flight checkpoint write (surfaces async errors)."""
+        if self._ckpt is not None:
+            self._ckpt.wait()
+
+
+# ---------------------------------------------------------------------------
+# Delta checkpoint format
+# ---------------------------------------------------------------------------
+
+
+def _delta_tree(snap: PublishSnapshot, *, full: bool) -> dict:
+    """Checkpoint payload for one publish.
+
+    ``kind=delta``: touched row indices + their current values — O(touched)
+    bytes.  ``kind=full``: the whole params — required after a
+    recalibration/rearrange (a row delta cannot express a latent-axis
+    permutation) and written periodically as a retention anchor.
+    """
+    params = snap.params
+    if full:
+        tree = {"params": params}
+    else:
+        u = jnp.asarray(snap.touched_users, jnp.int32)
+        i = jnp.asarray(snap.touched_items, jnp.int32)
+        tree = {
+            "user_idx": u,
+            "p_rows": params.p[u],
+            "item_idx": i,
+            "q_rows": params.q[i],
+        }
+        if params.user_bias is not None:
+            tree["user_bias_rows"] = params.user_bias[u]
+            tree["item_bias_rows"] = params.item_bias[i]
+            tree["global_mean"] = params.global_mean
+        if params.implicit is not None:
+            y = jnp.asarray(snap.touched_implicit_items, jnp.int32)
+            tree["implicit_idx"] = y
+            tree["implicit_rows"] = params.implicit[y]
+    tree["t_p"] = snap.t_p
+    tree["t_q"] = snap.t_q
+    if snap.user_history is not None:
+        # histories are small int32 and change with every event batch; the
+        # chain replays them wholesale
+        tree["user_history"] = jnp.asarray(snap.user_history)
+    return tree
+
+
+def _grow_like(params: mf.MFParams, num_users: int, num_items: int) -> mf.MFParams:
+    """Zero-extend a params pytree to (num_users, num_items) before a delta
+    scatter — grown rows are always in the delta's touched set, so the zero
+    fill is immediately overwritten."""
+    m, k = params.p.shape
+    n = params.q.shape[0]
+    if num_users <= m and num_items <= n:
+        return params
+    out = params
+    if num_items > n:
+        out = out._replace(
+            q=jnp.pad(out.q, ((0, num_items - n), (0, 0))),
+            item_bias=(
+                None if out.item_bias is None
+                else jnp.pad(out.item_bias, ((0, num_items - n), (0, 0)))
+            ),
+            implicit=(
+                None if out.implicit is None
+                else jnp.concatenate([
+                    out.implicit[:n],
+                    jnp.zeros((num_items - n, k), out.implicit.dtype),
+                    out.implicit[n:],
+                ])
+            ),
+        )
+    if num_users > m:
+        out = out._replace(
+            p=jnp.pad(out.p, ((0, num_users - m), (0, 0))),
+            user_bias=(
+                None if out.user_bias is None
+                else jnp.pad(out.user_bias, ((0, num_users - m), (0, 0)))
+            ),
+        )
+    return out
+
+
+def fold_deltas(
+    directory: str,
+    params: mf.MFParams,
+    t_p,
+    t_q,
+    *,
+    user_history: Optional[np.ndarray] = None,
+    from_step: int = 0,
+) -> Tuple[mf.MFParams, jnp.ndarray, jnp.ndarray, Optional[np.ndarray], int]:
+    """Replay the delta chain under ``directory`` onto a base state.
+
+    Steps are applied ascending, skipping anything at or below ``from_step``.
+    Returns ``(params, t_p, t_q, user_history, last_step)`` — the state a
+    restarted online job resumes from.  The base state comes from the
+    training checkpoint (``serving.load_mf_checkpoint``).
+
+    Keep-N retention may have deleted old deltas; replay therefore anchors
+    on the latest surviving ``kind=full`` checkpoint (which subsumes
+    everything before it) and verifies chain continuity from there via the
+    ``prev_step`` metadata — a delta whose predecessor is missing raises
+    instead of silently reconstructing stale factors.
+    """
+    t_p = jnp.asarray(t_p, jnp.float32)
+    t_q = jnp.asarray(t_q, jnp.float32)
+    history = None if user_history is None else np.asarray(user_history)
+    last = from_step
+    steps = [s for s in ckpt_lib.all_steps(directory) if s > from_step]
+    metas = {s: ckpt_lib.load_metadata(directory, s) for s in steps}
+    fulls = [s for s in steps if metas[s].get("kind", "delta") == "full"]
+    if fulls:  # everything before the latest full is subsumed by it
+        steps = [s for s in steps if s >= fulls[-1]]
+    for step in steps:
+        meta = metas[step]
+        tree, _ = ckpt_lib.load_raw(directory, step, metadata=meta)
+        kind = meta.get("kind", "delta")
+        if kind == "delta":
+            prev = meta.get("prev_step")
+            if prev is not None and int(prev) != last:
+                raise ValueError(
+                    f"delta chain broken at step {step}: expects predecessor "
+                    f"{prev} but replay state is at {last} (retention "
+                    "deleted intermediate deltas?)"
+                )
+        if kind == "full":
+            params = mf.params_from_flat(tree)
+        else:
+            params = _grow_like(
+                params, int(meta["num_users"]), int(meta["num_items"])
+            )
+            u = jnp.asarray(tree["user_idx"], jnp.int32)
+            i = jnp.asarray(tree["item_idx"], jnp.int32)
+            params = params._replace(
+                p=params.p.at[u].set(jnp.asarray(tree["p_rows"])),
+                q=params.q.at[i].set(jnp.asarray(tree["q_rows"])),
+            )
+            if "user_bias_rows" in tree and params.user_bias is not None:
+                params = params._replace(
+                    user_bias=params.user_bias.at[u].set(
+                        jnp.asarray(tree["user_bias_rows"])
+                    ),
+                    item_bias=params.item_bias.at[i].set(
+                        jnp.asarray(tree["item_bias_rows"])
+                    ),
+                )
+            if "implicit_idx" in tree and params.implicit is not None:
+                y = jnp.asarray(tree["implicit_idx"], jnp.int32)
+                params = params._replace(
+                    implicit=params.implicit.at[y].set(
+                        jnp.asarray(tree["implicit_rows"])
+                    )
+                )
+        t_p = jnp.asarray(tree["t_p"], jnp.float32)
+        t_q = jnp.asarray(tree["t_q"], jnp.float32)
+        if "user_history" in tree:
+            history = np.asarray(tree["user_history"])
+        last = step
+    return params, t_p, t_q, history, last
+
+

@@ -1,0 +1,221 @@
+"""Event sources for the online learning subsystem.
+
+Production freshness starts with a stream of ``(user, item, rating)``
+interaction events.  Three sources cover the lifecycle:
+
+* :class:`ReplaySource` — replay a :class:`~repro.data.ratings.RatingsDataset`
+  (held-out events, a log dump) in deterministic order, optionally for
+  multiple passes;
+* :class:`PoissonSource` — synthetic traffic: Zipf-popular items, uniform
+  users, exponential inter-arrival times under a target event rate, and a
+  configurable probability of emitting a *never-seen* user/item id one past
+  the current frontier (the cold-start path the updater must handle);
+* :class:`IteratorSource` — adapt any iterator of ``(user, item, rating)``
+  tuples (a Kafka consumer, a socket reader) into the same interface.
+
+All sources iterate single :class:`Event` records; :func:`iter_microbatches`
+accumulates them into fixed-arrays :class:`EventBatch` micro-batches — the
+unit the updater consumes.  Everything here is host-side numpy: the stream is
+I/O, not math.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Iterable, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    user: int
+    item: int
+    rating: float
+    timestamp: float = 0.0  # seconds on the source's simulated clock
+
+
+@dataclasses.dataclass
+class EventBatch:
+    """A micro-batch of events as contiguous arrays (the updater's unit)."""
+
+    user: np.ndarray    # (B,) int32
+    item: np.ndarray    # (B,) int32
+    rating: np.ndarray  # (B,) float32
+
+    def __len__(self) -> int:
+        return int(self.user.shape[0])
+
+    @classmethod
+    def from_events(cls, events: Iterable[Event]) -> "EventBatch":
+        ev = list(events)
+        return cls(
+            user=np.asarray([e.user for e in ev], np.int32),
+            item=np.asarray([e.item for e in ev], np.int32),
+            rating=np.asarray([e.rating for e in ev], np.float32),
+        )
+
+
+class ReplaySource:
+    """Replay a ratings dataset as an event stream.
+
+    ``epochs`` passes (``None`` = forever); ``shuffle`` draws a fresh
+    deterministic permutation per pass (seeded, like the training loader),
+    otherwise events replay in stored order — the natural choice for a
+    time-ordered log.
+    """
+
+    def __init__(self, ds, *, epochs: Optional[int] = 1,
+                 shuffle: bool = False, seed: int = 0):
+        self.ds = ds
+        self.epochs = epochs
+        self.shuffle = shuffle
+        self.seed = seed
+        self.num_users = ds.num_users
+        self.num_items = ds.num_items
+
+    def __iter__(self) -> Iterator[Event]:
+        passes = itertools.count() if self.epochs is None else range(self.epochs)
+        clock = 0.0
+        for epoch in passes:
+            if self.shuffle:
+                rng = np.random.default_rng(
+                    np.random.SeedSequence([self.seed, epoch])
+                )
+                order = rng.permutation(len(self.ds))
+            else:
+                order = np.arange(len(self.ds))
+            for j in order:
+                yield Event(
+                    int(self.ds.user[j]), int(self.ds.item[j]),
+                    float(self.ds.rating[j]), clock,
+                )
+                clock += 1.0
+
+
+class PoissonSource:
+    """Synthetic live traffic: a Poisson process over a catalog.
+
+    Users are uniform, items Zipf-popular (the long-tail shape real
+    interaction streams have), inter-arrival gaps exponential with mean
+    ``1 / rate`` on a simulated clock (no wall-clock sleeping — pacing
+    belongs to the caller).  With probability ``new_user_prob`` /
+    ``new_item_prob`` an event instead introduces a brand-new id one past
+    the largest seen so far, which is what exercises the updater's
+    cold-start row initialization.  ``rating_fn(user, item, rng)``
+    customizes ratings; the default is uniform on ``[rating_min,
+    rating_max]``.  Infinite: bound it with ``iter_microbatches(...,
+    max_events=N)`` or ``itertools.islice``.
+    """
+
+    def __init__(
+        self,
+        num_users: int,
+        num_items: int,
+        *,
+        rate: float = 1000.0,
+        seed: int = 0,
+        zipf_a: float = 1.3,
+        rating_min: float = 1.0,
+        rating_max: float = 5.0,
+        new_user_prob: float = 0.0,
+        new_item_prob: float = 0.0,
+        rating_fn: Optional[Callable[[int, int, np.random.Generator], float]] = None,
+    ):
+        if rate <= 0:
+            raise ValueError(f"rate must be positive, got {rate}")
+        self.num_users = num_users
+        self.num_items = num_items
+        self.rate = rate
+        self.seed = seed
+        self.zipf_a = zipf_a
+        self.rating_min = rating_min
+        self.rating_max = rating_max
+        self.new_user_prob = new_user_prob
+        self.new_item_prob = new_item_prob
+        self.rating_fn = rating_fn
+
+    def __iter__(self) -> Iterator[Event]:
+        rng = np.random.default_rng(self.seed)
+        next_user = self.num_users
+        next_item = self.num_items
+        clock = 0.0
+        while True:
+            clock += float(rng.exponential(1.0 / self.rate))
+            if self.new_user_prob and rng.random() < self.new_user_prob:
+                user, next_user = next_user, next_user + 1
+            else:
+                user = int(rng.integers(0, next_user))
+            if self.new_item_prob and rng.random() < self.new_item_prob:
+                item, next_item = next_item, next_item + 1
+            else:
+                # Zipf with rejection onto the current catalog: popular head,
+                # long tail, like the synthetic training data
+                item = int(rng.zipf(self.zipf_a)) - 1
+                while item >= next_item:
+                    item = int(rng.zipf(self.zipf_a)) - 1
+            if self.rating_fn is not None:
+                rating = float(self.rating_fn(user, item, rng))
+            else:
+                rating = float(
+                    rng.uniform(self.rating_min, self.rating_max)
+                )
+            yield Event(user, item, rating, clock)
+
+
+class IteratorSource:
+    """Adapt any iterable of ``(user, item, rating)`` tuples (or
+    :class:`Event` records) into an event source."""
+
+    def __init__(self, it: Iterable):
+        self._it = it
+
+    def __iter__(self) -> Iterator[Event]:
+        clock = 0.0
+        for row in self._it:
+            if isinstance(row, Event):
+                yield row
+            else:
+                user, item, rating = row[0], row[1], row[2]
+                yield Event(int(user), int(item), float(rating), clock)
+            clock += 1.0
+
+
+def iter_microbatches(
+    source: Iterable[Event],
+    batch_size: int,
+    *,
+    max_events: Optional[int] = None,
+    max_batch_span_s: Optional[float] = None,
+) -> Iterator[EventBatch]:
+    """Accumulate events into :class:`EventBatch` micro-batches.
+
+    A batch closes when it reaches ``batch_size`` events or (if
+    ``max_batch_span_s`` is set) when the next event's *simulated* timestamp
+    is more than that many seconds past the batch's first event — the
+    freshness bound: a trickle of events still reaches the model.  The final
+    partial batch is always flushed.  ``max_events`` bounds the total drawn
+    from an infinite source.
+    """
+    if batch_size <= 0:
+        raise ValueError(f"batch_size must be positive, got {batch_size}")
+    if max_events is not None:
+        source = itertools.islice(iter(source), max_events)
+    pending: list = []
+    first_ts = 0.0
+    for event in source:
+        if (
+            pending
+            and max_batch_span_s is not None
+            and event.timestamp - first_ts > max_batch_span_s
+        ):
+            yield EventBatch.from_events(pending)
+            pending = []
+        if not pending:
+            first_ts = event.timestamp
+        pending.append(event)
+        if len(pending) >= batch_size:
+            yield EventBatch.from_events(pending)
+            pending = []
+    if pending:
+        yield EventBatch.from_events(pending)

@@ -65,6 +65,37 @@ class LRUCache:
             while len(self._data) > self.capacity:
                 self._data.popitem(last=False)
 
+    def keys(self):
+        """Snapshot of the cached keys (thread-safe copy)."""
+        with self._lock:
+            return list(self._data.keys())
+
+    def invalidate(self, keys) -> int:
+        """Drop the given keys (missing ones are ignored); returns the number
+        of entries actually removed.  Used by the serving engine's hot swap
+        to evict exactly the users whose vectors a factor update staled."""
+        removed = 0
+        with self._lock:
+            for key in keys:
+                if self._data.pop(key, None) is not None:
+                    removed += 1
+        return removed
+
+    def copy_without(self, keys) -> "LRUCache":
+        """New cache with the same capacity, entries minus ``keys``, and the
+        hit/miss counters carried over.  The old cache is untouched — an
+        in-flight batch may still be writing old-version entries into it,
+        which is exactly why hot swaps copy instead of mutating."""
+        drop = set(keys)
+        clone = LRUCache(self.capacity)
+        with self._lock:
+            for key, value in self._data.items():
+                if key not in drop:
+                    clone._data[key] = value
+            clone.hits = self.hits
+            clone.misses = self.misses
+        return clone
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._data)

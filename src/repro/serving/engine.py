@@ -23,17 +23,24 @@ memory-bound pattern GPU-MF studies identify at catalog scale.  The engine:
 * **pipelines requests** — ``submit()`` hands a request to the continuous
   batching queue (``serving/queue.py``) and returns a future; concurrent
   callers coalesce into deadline-ordered batches instead of serializing
-  full scoring launches.
+  full scoring launches;
+* **hot-swaps factor versions** — :meth:`swap` publishes a new
+  ``(params, t_p, t_q)`` snapshot without dropping requests.  All
+  model-derived state (factors, ranks, tiled layouts, user constants, the
+  hot-user LRU) lives in an immutable per-version :class:`_Snapshot`; every
+  scoring batch captures the current snapshot ONCE at entry, so a concurrent
+  swap never changes results mid-batch and each result is deterministic for
+  the version that served it.  Swaps are double-buffered: the next version's
+  layouts are built (incrementally, for touched item rows only, when the
+  thresholds and catalog geometry are unchanged) before the atomic flip.
 
 Scores returned are full model scores (user/global biases folded back in
 after ranking — per-user constants never change the ranking itself).
 """
 from __future__ import annotations
 
-import json
-import os
 import threading
-from typing import Optional, Tuple
+from typing import Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +50,8 @@ from repro.checkpoint import checkpoint as ckpt_lib
 from repro.core import mf
 from repro.core.ranks import effective_ranks, rank_mask
 from repro.kernels.ops import (
+    TOPK_BLOCK_K,
+    TOPK_BLOCK_N,
     pad_catalog_for_topk_kernel,
     pad_users_for_topk_kernel,
     stream_topk_tiles,
@@ -70,33 +79,237 @@ def load_mf_checkpoint(
     serving wrong scores for BiasSVD/SVD++ checkpoints).  Returns
     ``(params, t_p, t_q, perm, metadata)``.
     """
-    if step is None:
-        step = ckpt_lib.latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {directory}")
-    path = os.path.join(directory, f"step_{step:012d}")
-    with open(os.path.join(path, "metadata.json")) as f:
-        meta = json.load(f)
-    with np.load(os.path.join(path, "arrays.npz")) as data:
-        present = set(data.files)
+    data, meta = ckpt_lib.load_raw(directory, step)
+    params = mf.params_from_flat(data)
 
-        def opt(key):
-            return jnp.asarray(data[key]) if key in present else None
+    def opt(key):
+        return jnp.asarray(data[key]) if key in data else None
 
-        params = mf.MFParams(
-            p=jnp.asarray(data["params__p"]),
-            q=jnp.asarray(data["params__q"]),
-            user_bias=opt("params__user_bias"),
-            item_bias=opt("params__item_bias"),
-            global_mean=opt("params__global_mean"),
-            implicit=opt("params__implicit"),
-        )
-        t_p = opt("t_p")
-        t_q = opt("t_q")
-        perm = opt("perm")
+    t_p = opt("t_p")
+    t_q = opt("t_q")
+    perm = opt("perm")
     t_p = jnp.float32(0.0) if t_p is None else t_p.astype(jnp.float32)
     t_q = jnp.float32(0.0) if t_q is None else t_q.astype(jnp.float32)
     return params, t_p, t_q, perm, meta
+
+
+# ---------------------------------------------------------------------------
+# Versioned model snapshots
+# ---------------------------------------------------------------------------
+
+
+class _Snapshot:
+    """One immutable factor version plus everything derived from it.
+
+    Scoring entry points capture ``engine._snap`` exactly once per request
+    batch and thread it through the whole launch, so :meth:`ServingEngine.swap`
+    (a plain attribute store, atomic under the GIL) can flip versions while
+    requests are in flight: a batch that started on version v finishes on
+    version v, bit-for-bit.  Layouts are built lazily under ``_build_lock``
+    and reused (or incrementally patched) across swaps.
+    """
+
+    def __init__(
+        self,
+        version: int,
+        params: mf.MFParams,
+        t_p,
+        t_q,
+        *,
+        block_n: int,
+        cache: LRUCache,
+        user_history: Optional[np.ndarray],
+        r_i: Optional[jnp.ndarray] = None,
+        user_const: Optional[np.ndarray] = None,
+    ):
+        self.version = version
+        self.params = params
+        self.t_p = jnp.asarray(t_p, jnp.float32)
+        self.t_q = jnp.asarray(t_q, jnp.float32)
+        self.num_users, self.k = params.p.shape
+        self.n_items = params.q.shape[0]
+        self.block_n = block_n
+        self.cache = cache
+        self.user_history = user_history
+
+        # ``r_i``/``user_const`` accept precomputed values so an incremental
+        # swap can patch the previous snapshot's at the touched rows instead
+        # of re-reducing the full catalog / user table
+        self.r_i = (
+            effective_ranks(params.q, self.t_q) if r_i is None else r_i
+        )
+        self.item_bias_vec = (
+            params.item_bias[:, 0].astype(jnp.float32)
+            if params.item_bias is not None
+            else jnp.zeros((self.n_items,), jnp.float32)
+        )
+        # per-user additive constant (never changes ranking; folded back in
+        # after top-k so returned scores equal full model scores); host-side
+        # because it is applied to host result arrays per request
+        if user_const is not None:
+            self.user_const = user_const
+        elif params.user_bias is not None:
+            self.user_const = np.asarray(
+                params.user_bias[:, 0].astype(jnp.float32) + params.global_mean
+            )
+        else:
+            self.user_const = None
+
+        # Scoring layouts are built lazily on first use so a snapshot only
+        # holds the catalog copies its configured path actually reads:
+        # streaming tiles (rank-masked f32), or the kernel's padded raw
+        # factors + ranks (it re-masks per K-block so it can skip K-blocks).
+        self._stream_layout = None
+        self._kernel_layout = None
+        self._shard_layouts = {}
+        self._kernel_shard_layouts = {}
+        self._build_lock = threading.Lock()
+
+    # -- layouts -------------------------------------------------------------
+    def stream_layout(self):
+        with self._build_lock:
+            return self._stream_layout_locked()
+
+    def kernel_layout(self):
+        with self._build_lock:
+            if self._kernel_layout is None:
+                self._kernel_layout = pad_catalog_for_topk_kernel(
+                    self.params.q, self.r_i, self.item_bias_vec
+                )
+            return self._kernel_layout
+
+    def shard_layout(self, n_model: int):
+        """Streaming catalog tiles padded so the tile axis splits evenly over
+        ``n_model`` shards; padding tiles carry -inf biases and can never
+        win the merge.  One copy per shard count (NOT per topk)."""
+        with self._build_lock:
+            if n_model not in self._shard_layouts:
+                q_tiles, b_tiles, offs = self._stream_layout_locked()
+                pad_t = (-q_tiles.shape[0]) % n_model
+                self._shard_layouts[n_model] = (
+                    jnp.pad(q_tiles, ((0, pad_t), (0, 0), (0, 0))),
+                    jnp.pad(b_tiles, ((0, pad_t), (0, 0)),
+                            constant_values=_NEG_INF),
+                    jnp.pad(offs, (0, pad_t)),
+                )
+            return self._shard_layouts[n_model]
+
+    def _stream_layout_locked(self):
+        # shard_layout holds _build_lock already; inline the lazy build
+        if self._stream_layout is None:
+            qm = self.params.q.astype(jnp.float32) * rank_mask(self.r_i, self.k)
+            self._stream_layout = tile_catalog(
+                qm, self.item_bias_vec, self.block_n
+            )
+        return self._stream_layout
+
+    def kernel_shard_layout(self, n_model: int):
+        """Kernel-path catalog operands padded so each of ``n_model`` shards
+        gets an equal, block-aligned item slab.  Padding rows carry rank 0
+        and -inf bias, so the kernel's running top-k can never select them
+        regardless of which shard they land on."""
+        with self._build_lock:
+            if n_model not in self._kernel_shard_layouts:
+                q, r_i, bias = self.params.q, self.r_i, self.item_bias_vec
+                n = q.shape[0]
+                mult = TOPK_BLOCK_N * n_model
+                pad_n = (-n) % mult
+                pad_k = (-self.k) % TOPK_BLOCK_K
+                qp = jnp.pad(q, ((0, pad_n), (0, pad_k)))
+                rip = jnp.pad(r_i[:, None].astype(jnp.int32), ((0, pad_n), (0, 0)))
+                biasp = jnp.pad(
+                    bias.astype(jnp.float32)[:, None],
+                    ((0, pad_n), (0, 0)),
+                    constant_values=_NEG_INF,
+                )
+                self._kernel_shard_layouts[n_model] = (qp, rip, biasp)
+            return self._kernel_shard_layouts[n_model]
+
+    # -- incremental rebuilds (hot-swap fast path) ---------------------------
+    def layouts_view(self):
+        """Consistent copy of the built-layout set, taken under the build
+        lock — the swap thread iterates it while the scheduler thread may
+        still be lazily building layouts into this (previous) snapshot."""
+        with self._build_lock:
+            return (
+                self._stream_layout,
+                self._kernel_layout,
+                dict(self._shard_layouts),
+                dict(self._kernel_shard_layouts),
+            )
+
+    def clone_layouts_from(self, prev: "_Snapshot", touched_items: np.ndarray):
+        """Carry ``prev``'s built layouts over to this snapshot, patching only
+        the rows of ``touched_items`` — valid ONLY when thresholds, the
+        catalog size, and the latent permutation are unchanged (the caller
+        checks).  This is the double-buffer build of a hot swap: the
+        rank/mask compute drops to O(touched * k), but note each ``.at[].set``
+        runs outside jit and therefore copies its full buffer — per-swap
+        memory traffic stays O(n * k), only the recompute is saved."""
+        k = self.k
+        idx = jnp.asarray(touched_items, jnp.int32)
+        q_rows = self.params.q[idx]
+        r_rows = self.r_i[idx]
+        qm_rows = q_rows.astype(jnp.float32) * rank_mask(r_rows, k)
+        b_rows = self.item_bias_vec[idx]
+        stream, kernel, shard, kernel_shard = prev.layouts_view()
+
+        if stream is not None:
+            q_tiles, b_tiles, offs = stream
+            block_n = q_tiles.shape[1]
+            t_idx, slot = idx // block_n, idx % block_n
+            self._stream_layout = (
+                q_tiles.at[t_idx, slot].set(qm_rows),
+                b_tiles.at[t_idx, slot].set(b_rows),
+                offs,
+            )
+        if kernel is not None:
+            qp, rip, biasp = kernel
+            self._kernel_layout = (
+                qp.at[idx, :k].set(q_rows.astype(qp.dtype)),
+                rip.at[idx, 0].set(r_rows),
+                biasp.at[idx, 0].set(b_rows),
+            )
+        for n_model, (q_tiles, b_tiles, offs) in shard.items():
+            block_n = q_tiles.shape[1]
+            t_idx, slot = idx // block_n, idx % block_n
+            self._shard_layouts[n_model] = (
+                q_tiles.at[t_idx, slot].set(qm_rows),
+                b_tiles.at[t_idx, slot].set(b_rows),
+                offs,
+            )
+        for n_model, (qp, rip, biasp) in kernel_shard.items():
+            self._kernel_shard_layouts[n_model] = (
+                qp.at[idx, :k].set(q_rows.astype(qp.dtype)),
+                rip.at[idx, 0].set(r_rows),
+                biasp.at[idx, 0].set(b_rows),
+            )
+
+    def build_like(self, prev: "_Snapshot"):
+        """Eagerly build every layout ``prev`` had built (full rebuild path —
+        thresholds/geometry changed).  Keeps the first post-swap request from
+        paying the build: the swap is double-buffered, not lazy."""
+        stream, kernel, shard, kernel_shard = prev.layouts_view()
+        if stream is not None:
+            self.stream_layout()
+        if kernel is not None:
+            self.kernel_layout()
+        for n_model in shard:
+            self.shard_layout(n_model)
+        for n_model in kernel_shard:
+            self.kernel_shard_layout(n_model)
+
+    def built_layouts(self):
+        """Every device array currently materialized for this snapshot (used
+        to block until the double-buffered build is actually resident)."""
+        out = []
+        for layout in (self._stream_layout, self._kernel_layout):
+            if layout is not None:
+                out.extend(layout)
+        for table in (self._shard_layouts, self._kernel_shard_layouts):
+            for layout in table.values():
+                out.extend(layout)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -112,6 +325,10 @@ class ServingEngine:
     defaults of ``kernels.ops.pad_catalog_for_topk_kernel``.  ``max_batch``
     caps a scoring launch; larger requests are chunked.  All top-k entry
     points return ``(scores, indices)`` — the ``jax.lax.top_k`` ordering.
+
+    The model state behind those entry points is a versioned snapshot;
+    :meth:`swap` atomically publishes a new one (see the module docstring
+    for the consistency contract).
     """
 
     def __init__(
@@ -128,21 +345,35 @@ class ServingEngine:
         user_history: Optional[np.ndarray] = None,
         allow_missing_history: bool = False,
     ):
-        self.params = params
-        self.t_p = jnp.asarray(t_p, jnp.float32)
-        self.t_q = jnp.asarray(t_q, jnp.float32)
-        self.num_users, self.k = params.p.shape
-        self.n_items = params.q.shape[0]
         self.max_batch = max_batch
         self.block_n = block_n
         if use_kernel is None:
             use_kernel = jax.default_backend() == "tpu"
         self.use_kernel = use_kernel
         self.interpret = interpret
-        self.user_history = (
-            None if user_history is None else np.asarray(user_history)
+        self.cache_size = cache_size
+
+        history = self._resolve_history(
+            params, user_history, allow_missing_history
         )
-        if params.implicit is not None and self.user_history is None:
+        cache = LRUCache(cache_size if params.implicit is not None else 0)
+        self._snap = _Snapshot(
+            0, params, t_p, t_q,
+            block_n=block_n, cache=cache, user_history=history,
+        )
+        # Sharded scoring: compiled program per (mesh, topk, kernel-path) —
+        # jit caches by function identity, so the shard_map closure must be
+        # built once.  Layouts are passed as arguments, so compiled programs
+        # survive swaps (recompiling only if the catalog geometry changes).
+        self._sharded_fns = {}
+        self._queue = None  # async frontend, created by start()/submit()
+        self._queue_lock = threading.Lock()  # guards _queue transitions
+        self._swap_lock = threading.Lock()   # serializes swap() builders
+
+    @staticmethod
+    def _resolve_history(params, user_history, allow_missing_history):
+        history = None if user_history is None else np.asarray(user_history)
+        if params.implicit is not None and history is None:
             if not allow_missing_history:
                 raise ValueError(
                     "SVD++ params need user_history (see "
@@ -151,48 +382,10 @@ class ServingEngine:
                 )
             # Empty histories: every entry is the implicit table's padding
             # row, so user vectors reduce to p_u exactly.
-            self.user_history = np.full(
-                (self.num_users, 1), self.n_items, np.int32
+            history = np.full(
+                (params.p.shape[0], 1), params.q.shape[0], np.int32
             )
-
-        # ---- load-time precompute (was per-request in the old path) ------
-        # Per-item effective ranks are frozen with the factors; biases are a
-        # (n,) vector shared by both scoring layouts.
-        self.r_i = effective_ranks(params.q, self.t_q)
-        self._item_bias_vec = (
-            params.item_bias[:, 0].astype(jnp.float32)
-            if params.item_bias is not None
-            else jnp.zeros((self.n_items,), jnp.float32)
-        )
-
-        # Scoring layouts are built lazily on first use so an engine only
-        # holds the catalog copies its configured path actually reads:
-        # streaming tiles (rank-masked f32), or the kernel's padded raw
-        # factors + ranks (it re-masks per K-block so it can skip K-blocks).
-        self._stream_layout_cache = None
-        self._kernel_layout = None
-        # Sharded scoring: catalog layout per shard count, compiled program
-        # per (mesh, topk) — jit caches by function identity, so the
-        # shard_map closure must be built once, and the padded catalog only
-        # once per shard count (not per topk).
-        self._shard_layouts = {}
-        self._sharded_fns = {}
-        self._queue = None  # async frontend, created by start()/submit()
-        self._queue_lock = threading.Lock()  # guards _queue transitions
-
-        # per-user additive constant (never changes ranking; folded back in
-        # after top-k so returned scores equal full model scores); host-side
-        # because it is applied to host result arrays per request
-        if params.user_bias is not None:
-            self._user_const = np.asarray(
-                params.user_bias[:, 0].astype(jnp.float32) + params.global_mean
-            )
-        else:
-            self._user_const = None
-
-        self.vector_cache = LRUCache(
-            cache_size if params.implicit is not None else 0
-        )
+        return history
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -202,83 +395,334 @@ class ServingEngine:
         params, t_p, t_q, _, _ = load_mf_checkpoint(directory, step=step)
         return cls(params, t_p, t_q, **kwargs)
 
+    # -- versioned state accessors ------------------------------------------
+    @property
+    def version(self) -> int:
+        return self._snap.version
+
+    @property
+    def params(self) -> mf.MFParams:
+        return self._snap.params
+
+    @property
+    def t_p(self):
+        return self._snap.t_p
+
+    @property
+    def t_q(self):
+        return self._snap.t_q
+
+    @property
+    def r_i(self):
+        return self._snap.r_i
+
+    @property
+    def num_users(self) -> int:
+        return self._snap.num_users
+
+    @property
+    def n_items(self) -> int:
+        return self._snap.n_items
+
+    @property
+    def k(self) -> int:
+        return self._snap.k
+
+    @property
+    def user_history(self) -> Optional[np.ndarray]:
+        return self._snap.user_history
+
+    @property
+    def vector_cache(self) -> LRUCache:
+        return self._snap.cache
+
+    # -- hot swap ------------------------------------------------------------
+    def swap(
+        self,
+        params: mf.MFParams,
+        t_p=None,
+        t_q=None,
+        *,
+        touched_users: Optional[Iterable[int]] = None,
+        touched_items: Optional[Iterable[int]] = None,
+        touched_implicit_items: Optional[Iterable[int]] = None,
+        user_history: Optional[np.ndarray] = None,
+    ) -> int:
+        """Atomically publish a new factor version; returns its number.
+
+        Zero-downtime contract: requests never observe a half-swapped model.
+        A scoring batch in flight when the swap lands completes on the old
+        snapshot (per-version determinism); batches popped afterwards score
+        on the new one.  The new snapshot's layouts are built double-buffered
+        *before* the flip:
+
+        * ``touched_items`` given, thresholds/catalog-geometry unchanged —
+          the previous layouts are patched at only those rows: O(touched * k)
+          compute (rank/mask work), though each patched buffer is still
+          copied whole (XLA scatter outside jit), so memory traffic per swap
+          remains O(n * k);
+        * otherwise (recalibrated thresholds, a latent-axis rearrange, or a
+          grown catalog) — full rebuild of whatever layouts were in use.
+
+        The hot-user LRU survives the swap minus the stale entries: the
+        ``touched_users`` plus, for SVD++, every user whose history contains
+        a row of ``touched_implicit_items``/``touched_items`` (their cached
+        aggregation folds those implicit rows in).  Pass
+        ``touched_users=None`` to drop the whole cache.
+
+        Tables may grow (cold-start users/items appended by the online
+        updater); they may not shrink — queued request ids stay valid.
+        """
+        # normalize one-shot iterables up front: the touched sets are walked
+        # several times below (layout patch, user-const patch, LRU pruning)
+        if touched_users is not None:
+            touched_users = np.asarray(list(touched_users), np.int64)
+        if touched_items is not None:
+            touched_items = np.asarray(list(touched_items), np.int64)
+        if touched_implicit_items is not None:
+            touched_implicit_items = np.asarray(
+                list(touched_implicit_items), np.int64
+            )
+        with self._swap_lock:
+            prev = self._snap
+            if params.p.shape[0] < prev.num_users or (
+                params.q.shape[0] < prev.n_items
+            ):
+                raise ValueError(
+                    "swap cannot shrink the user/item tables "
+                    f"({prev.num_users}x{prev.n_items} -> "
+                    f"{params.p.shape[0]}x{params.q.shape[0]}): queued "
+                    "requests may already reference the trailing rows"
+                )
+            t_p = prev.t_p if t_p is None else t_p
+            t_q = prev.t_q if t_q is None else t_q
+
+            if user_history is None and prev.user_history is not None:
+                user_history = self._grow_history(
+                    prev.user_history, params, prev.n_items
+                )
+            elif params.implicit is not None and user_history is None:
+                user_history = self._resolve_history(params, None, True)
+
+            same_geometry = (
+                params.q.shape[0] == prev.n_items
+                and params.p.shape[1] == prev.k
+                and float(jnp.asarray(t_q, jnp.float32)) == float(prev.t_q)
+            )
+            incremental = touched_items is not None and same_geometry
+            idx = None
+            r_i_pre = None
+            user_const_pre = None
+            if incremental:
+                idx = np.unique(np.asarray(list(touched_items), np.int64))
+                if idx.size:
+                    # pad to the next power of two (duplicating the last
+                    # index — a duplicate .set writes the same row value) so
+                    # the scatter programs retrace O(log n) times, not once
+                    # per distinct touched count
+                    bucket = 1 << (int(idx.size) - 1).bit_length()
+                    idx = np.pad(idx, (0, bucket - idx.size), mode="edge")
+                    jidx = jnp.asarray(idx, jnp.int32)
+                    # item ranks: reduce only the touched rows, patch the rest
+                    r_i_pre = prev.r_i.at[jidx].set(
+                        effective_ranks(
+                            params.q[jidx], jnp.asarray(t_q, jnp.float32)
+                        )
+                    )
+                else:
+                    r_i_pre = prev.r_i
+                user_const_pre = self._patch_user_const(
+                    prev, params, touched_users
+                )
+
+            new = _Snapshot(
+                prev.version + 1, params, t_p, t_q,
+                block_n=self.block_n,
+                cache=self._carry_cache(
+                    prev, params, touched_users, touched_items,
+                    touched_implicit_items, user_history,
+                ),
+                user_history=user_history,
+                r_i=r_i_pre,
+                user_const=user_const_pre,
+            )
+
+            if incremental:
+                if idx is not None and idx.size:
+                    new.clone_layouts_from(prev, idx)
+                else:  # nothing touched on the item side: layouts carry over
+                    (new._stream_layout, new._kernel_layout,
+                     new._shard_layouts,
+                     new._kernel_shard_layouts) = prev.layouts_view()
+            else:
+                new.build_like(prev)
+            # the flip must publish a *resident* double buffer, not a pile of
+            # pending device computations the first request would wait on
+            built = new.built_layouts()
+            if built:
+                jax.block_until_ready(built)
+
+            self._snap = new  # atomic: in-flight batches hold `prev`
+            return new.version
+
+    @staticmethod
+    def _patch_user_const(prev, params, touched_users) -> Optional[np.ndarray]:
+        """Incremental-swap user constants: copy the previous (m,) vector and
+        rewrite only the touched (and newly grown) rows.  Returns None —
+        meaning "recompute from scratch" — whenever the patch could be wrong:
+        no bias term, no touched-user list, or a moved global mean."""
+        if params.user_bias is None:
+            return None
+        if prev.user_const is None or touched_users is None:
+            return None
+        if (
+            prev.params.global_mean is None
+            or float(params.global_mean) != float(prev.params.global_mean)
+        ):
+            return None
+        m_new = params.p.shape[0]
+        tu = np.asarray(list(touched_users), np.int64)
+        if m_new > prev.num_users:
+            # grown rows are rewritten unconditionally — correctness must not
+            # depend on the caller having listed them as touched
+            tu = np.concatenate(
+                [tu, np.arange(prev.num_users, m_new, dtype=np.int64)]
+            )
+        uc = np.empty((m_new,), np.float32)
+        uc[: prev.num_users] = prev.user_const
+        if tu.size:
+            uc[tu] = np.asarray(
+                params.user_bias[jnp.asarray(tu), 0].astype(jnp.float32)
+                + params.global_mean
+            )
+        return uc
+
+    @staticmethod
+    def _grow_history(history, params, old_n_items):
+        """Pad the history matrix for grown user tables and remap the padding
+        sentinel (== old catalog size) when the item table grew under it."""
+        new_m = params.p.shape[0]
+        new_n = params.q.shape[0]
+        out = history
+        if new_n != old_n_items and params.implicit is not None:
+            out = out.copy()
+            out[out == old_n_items] = new_n
+        if new_m > history.shape[0]:
+            pad_rows = np.full(
+                (new_m - history.shape[0], history.shape[1]),
+                new_n if params.implicit is not None else old_n_items,
+                history.dtype,
+            )
+            out = np.concatenate([out, pad_rows], axis=0)
+        return out
+
+    def _carry_cache(
+        self, prev, params, touched_users, touched_items,
+        touched_implicit_items, user_history,
+    ) -> LRUCache:
+        """Hot-user LRU for the next snapshot: previous entries minus the
+        stale ones (touched-rows-only invalidation)."""
+        capacity = self.cache_size if params.implicit is not None else 0
+        if capacity != prev.cache.capacity or touched_users is None:
+            return LRUCache(capacity)
+        stale = set(int(u) for u in touched_users)
+        if params.implicit is not None:
+            # an SVD++ user vector folds in the implicit rows of its history:
+            # users whose history intersects the touched implicit rows are
+            # stale even though their own p row never moved.  Only users
+            # actually IN the cache can hold a stale entry, so the scan is
+            # O(|cache| * hist) — not O(num_users * hist) — per swap.
+            items = set(
+                int(i) for i in
+                (touched_items if touched_items is not None else ())
+            ) | set(
+                int(i) for i in
+                (touched_implicit_items
+                 if touched_implicit_items is not None else ())
+            )
+            cached = [u for u in prev.cache.keys() if u not in stale]
+            if items and cached and user_history is not None:
+                hit = np.isin(
+                    user_history[np.asarray(cached, np.int64)],
+                    np.fromiter(items, np.int64, len(items)),
+                ).any(axis=1)
+                stale |= set(
+                    int(u) for u, h in zip(cached, hit) if h
+                )
+        return prev.cache.copy_without(stale)
+
     # -- user vectors --------------------------------------------------------
-    def _user_vectors(self, user_ids: np.ndarray) -> jnp.ndarray:
+    def _user_vectors(self, snap: _Snapshot, user_ids: np.ndarray) -> jnp.ndarray:
         """(B, k) user vectors: plain rows, or SVD++ history-aggregated rows
         memoized per user in the LRU (the hot-user cache)."""
-        if self.params.implicit is None:
-            return self.params.p[jnp.asarray(user_ids)]
-        rows = [self.vector_cache.get(int(u)) for u in user_ids]
+        if snap.params.implicit is None:
+            return snap.params.p[jnp.asarray(user_ids)]
+        rows = [snap.cache.get(int(u)) for u in user_ids]
         missing = [i for i, r in enumerate(rows) if r is None]
         if missing:
             miss_ids = np.asarray([user_ids[i] for i in missing], np.int32)
-            hist = jnp.asarray(self.user_history[miss_ids])
+            hist = jnp.asarray(snap.user_history[miss_ids])
             fresh = np.asarray(
-                mf._user_vector(self.params, jnp.asarray(miss_ids), hist)
+                mf._user_vector(snap.params, jnp.asarray(miss_ids), hist)
             )
             for slot, row in zip(missing, fresh):
                 rows[slot] = row
-                self.vector_cache.put(int(user_ids[slot]), row)
+                snap.cache.put(int(user_ids[slot]), row)
         return jnp.asarray(np.stack(rows))
 
     # -- scoring -------------------------------------------------------------
-    def _masked_user_block(self, pu: jnp.ndarray) -> jnp.ndarray:
-        r_u = effective_ranks(pu, self.t_p)
-        return pu.astype(jnp.float32) * rank_mask(r_u, self.k)
+    def _masked_user_block(self, snap: _Snapshot, pu: jnp.ndarray) -> jnp.ndarray:
+        r_u = effective_ranks(pu, snap.t_p)
+        return pu.astype(jnp.float32) * rank_mask(r_u, snap.k)
 
-    def _stream_layout(self):
-        if self._stream_layout_cache is None:
-            qm = self.params.q.astype(jnp.float32) * rank_mask(
-                self.r_i, self.k
-            )
-            self._stream_layout_cache = tile_catalog(
-                qm, self._item_bias_vec, self.block_n
-            )
-        return self._stream_layout_cache
-
-    def _topk_block(self, pu: jnp.ndarray, topk: int):
+    def _topk_block(self, snap: _Snapshot, pu: jnp.ndarray, topk: int):
         if self.use_kernel:
-            return self._topk_block_kernel(pu, topk)
-        q_tiles, b_tiles, offs = self._stream_layout()
+            return self._topk_block_kernel(snap, pu, topk)
+        q_tiles, b_tiles, offs = snap.stream_layout()
         return stream_topk_tiles(
-            self._masked_user_block(pu), q_tiles, b_tiles, offs, topk=topk
+            self._masked_user_block(snap, pu), q_tiles, b_tiles, offs,
+            topk=topk,
         )
 
-    def _topk_block_kernel(self, pu: jnp.ndarray, topk: int):
-        if self._kernel_layout is None:
-            self._kernel_layout = pad_catalog_for_topk_kernel(
-                self.params.q, self.r_i, self._item_bias_vec
-            )
-        qp, rip, biasp = self._kernel_layout
-        r_u = effective_ranks(pu, self.t_p)
+    def _topk_block_kernel(self, snap: _Snapshot, pu: jnp.ndarray, topk: int):
+        qp, rip, biasp = snap.kernel_layout()
+        r_u = effective_ranks(pu, snap.t_p)
         pp, rup = pad_users_for_topk_kernel(pu, r_u)
-        interpret = (
+        scores, idx = pruned_topk_padded(
+            pp, qp, rup, rip, biasp,
+            topk=topk, n_items=snap.n_items,
+            interpret=self._interpret(),
+        )
+        return scores[: pu.shape[0], :topk], idx[: pu.shape[0], :topk]
+
+    def _interpret(self) -> bool:
+        return (
             jax.default_backend() != "tpu"
             if self.interpret is None
             else self.interpret
         )
-        scores, idx = pruned_topk_padded(
-            pp, qp, rup, rip, biasp,
-            topk=topk, n_items=self.n_items,
-            interpret=interpret,
-        )
-        return scores[: pu.shape[0], :topk], idx[: pu.shape[0], :topk]
 
     def _validate_request(self, user_ids, topk: int) -> np.ndarray:
-        if not 0 < topk <= self.n_items:
-            raise ValueError(f"topk must be in [1, {self.n_items}], got {topk}")
+        return self._validate_for(self._snap, user_ids, topk)
+
+    @staticmethod
+    def _validate_for(snap: _Snapshot, user_ids, topk: int) -> np.ndarray:
+        if not 0 < topk <= snap.n_items:
+            raise ValueError(
+                f"topk must be in [1, {snap.n_items}], got {topk}"
+            )
         ids = np.asarray(user_ids, np.int32).reshape(-1)
         # jnp gathers clamp out-of-range indices silently — that would serve
         # the *last* user's recommendations to an unknown user id.
-        bad = (ids < 0) | (ids >= self.num_users)
+        bad = (ids < 0) | (ids >= snap.num_users)
         if bad.any():
             raise ValueError(
                 f"unknown user ids {ids[bad][:5].tolist()} "
-                f"(catalog has {self.num_users} users)"
+                f"(catalog has {snap.num_users} users)"
             )
         return ids
 
-    def _run_chunked(self, ids: np.ndarray, topk: int, block_fn):
+    def _run_chunked(self, snap: _Snapshot, ids: np.ndarray, topk: int, block_fn):
         """Shared request loop: split into max_batch chunks, pad each chunk
         to its power-of-two bucket (bounds the jit cache to log2(max_batch)
         shapes per scoring program), score, fold user constants back in."""
@@ -288,12 +732,12 @@ class ServingEngine:
             chunk = ids[lo : lo + self.max_batch]
             bucket = bucket_size(len(chunk), self.max_batch)
             padded = np.pad(chunk, (0, bucket - len(chunk)), mode="edge")
-            pu = self._user_vectors(padded)
+            pu = self._user_vectors(snap, padded)
             scores, idx = block_fn(pu, topk)
             scores = np.asarray(scores[: len(chunk)])
             idx = np.asarray(idx[: len(chunk)])
-            if self._user_const is not None:
-                scores = scores + self._user_const[chunk][:, None]
+            if snap.user_const is not None:
+                scores = scores + snap.user_const[chunk][:, None]
             out_s[lo : lo + len(chunk)] = scores
             out_i[lo : lo + len(chunk)] = idx
         return out_s, out_i
@@ -305,47 +749,57 @@ class ServingEngine:
         as (B, topk) numpy arrays — the ``jax.lax.top_k`` ordering, same as
         ``kernels.ops.pruned_topk`` and ``ref.pruned_topk_ref`` — identical
         to dense score-and-argsort."""
-        ids = self._validate_request(user_ids, topk)
-        return self._run_chunked(ids, topk, self._topk_block)
+        snap = self._snap  # captured once: the whole batch serves one version
+        ids = self._validate_for(snap, user_ids, topk)
+        return self._run_chunked(
+            snap, ids, topk,
+            lambda pu, k_: self._topk_block(snap, pu, k_),
+        )
 
     # -- sharded catalog -----------------------------------------------------
-    def _shard_layout(self, n_model: int):
-        """Catalog tiles padded so the tile axis splits evenly over
-        ``n_model`` shards; padding tiles carry -inf biases and can never
-        win the merge.  One copy per shard count (NOT per topk)."""
-        if n_model not in self._shard_layouts:
-            q_tiles, b_tiles, offs = self._stream_layout()
-            pad_t = (-q_tiles.shape[0]) % n_model
-            self._shard_layouts[n_model] = (
-                jnp.pad(q_tiles, ((0, pad_t), (0, 0), (0, 0))),
-                jnp.pad(b_tiles, ((0, pad_t), (0, 0)),
-                        constant_values=_NEG_INF),
-                jnp.pad(offs, (0, pad_t)),
-            )
-        return self._shard_layouts[n_model]
-
-    def _sharded_program(self, mesh, topk: int):
-        """Compiled shard_map scoring program for (mesh, topk).  Built once:
-        jit caches by function identity, so rebuilding the closure per
-        request would retrace and recompile every call."""
+    def _sharded_program(self, mesh, topk: int, kernel: bool):
+        """Compiled shard_map scoring program for (mesh, topk, path).  Built
+        once: jit caches by function identity, so rebuilding the closure per
+        request would retrace and recompile every call.  Layouts enter as
+        arguments, so the program survives hot swaps."""
         from repro.distributed import mesh_compat
-        from repro.distributed.sharding import serving_topk_specs
+        from repro.distributed.sharding import (
+            serving_topk_kernel_specs,
+            serving_topk_specs,
+        )
 
-        key = (mesh, topk)
+        key = (mesh, topk, kernel)
         if key not in self._sharded_fns:
-            in_specs, out_specs = serving_topk_specs(mesh)
+            if kernel:
+                in_specs, out_specs = serving_topk_kernel_specs(mesh)
+                interpret = self._interpret()
 
-            def body(pm_blk, qt, bt, off):
-                local_s, local_i = stream_topk_tiles(
-                    pm_blk, qt, bt, off, topk=topk
-                )
-                gs = jax.lax.all_gather(local_s, "model")  # (n_model, b, topk)
-                gi = jax.lax.all_gather(local_i, "model")
-                b = pm_blk.shape[0]
-                cand_s = jnp.moveaxis(gs, 0, 1).reshape(b, -1)
-                cand_i = jnp.moveaxis(gi, 0, 1).reshape(b, -1)
-                merged_s, sel = jax.lax.top_k(cand_s, topk)
-                return merged_s, jnp.take_along_axis(cand_i, sel, axis=1)
+                def body(pu_blk, t_p, qp, rip, biasp):
+                    n_loc = qp.shape[0]
+                    r_u = effective_ranks(pu_blk, t_p)
+                    pp, rup = pad_users_for_topk_kernel(pu_blk, r_u)
+                    # padding rows inside the slab carry -inf bias, so every
+                    # slab can claim its full extent as valid items
+                    s, i = pruned_topk_padded(
+                        pp, qp, rup, rip, biasp,
+                        topk=topk, n_items=n_loc, interpret=interpret,
+                    )
+                    b = pu_blk.shape[0]
+                    local_s = s[:b, :topk]
+                    local_i = (
+                        i[:b, :topk] + jax.lax.axis_index("model") * n_loc
+                    )
+                    return _merge_over_model(local_s, local_i, b, topk)
+            else:
+                in_specs, out_specs = serving_topk_specs(mesh)
+
+                def body(pm_blk, qt, bt, off):
+                    local_s, local_i = stream_topk_tiles(
+                        pm_blk, qt, bt, off, topk=topk
+                    )
+                    return _merge_over_model(
+                        local_s, local_i, pm_blk.shape[0], topk
+                    )
 
             self._sharded_fns[key] = jax.jit(mesh_compat.shard_map(
                 body,
@@ -365,34 +819,48 @@ class ServingEngine:
         and with them the per-request user-factor fan-out — shard over the
         data axes when present (``distributed.sharding.serving_topk_specs``),
         so a (2, 4) ``("data", "model")`` mesh scores each user slab against
-        each catalog slice on its own device.  Per shard: streaming top-k,
-        one all-gather of the (b, topk) shard winners over "model", local
-        merge — collective traffic is O(b * topk), independent of catalog
-        size, and the batch axis never leaves its data shard.  Returns
-        ``(scores, indices)`` like :meth:`topk`; requests go through the
-        same chunk/bucket loop, so batch shapes (and thus compiled programs)
-        stay bounded."""
+        each catalog slice on its own device.  Per shard: streaming top-k
+        (or the Pallas kernel when ``use_kernel=True`` — each shard runs the
+        fused pruned-score+top-k kernel on its own item slab), one all-gather
+        of the (b, topk) shard winners over "model", local merge —
+        collective traffic is O(b * topk), independent of catalog size, and
+        the batch axis never leaves its data shard.  Returns ``(scores,
+        indices)`` like :meth:`topk`; requests go through the same
+        chunk/bucket loop, so batch shapes (and thus compiled programs) stay
+        bounded."""
         from repro.distributed import mesh_compat
         from repro.distributed.sharding import serving_row_multiple
 
-        ids = self._validate_request(user_ids, topk)
+        snap = self._snap
+        ids = self._validate_for(snap, user_ids, topk)
         mesh = mesh_compat.resolve_mesh(mesh)
         if mesh is None or "model" not in mesh.axis_names:
             raise ValueError("topk_sharded needs a mesh with a 'model' axis")
-        layout = self._shard_layout(mesh.shape["model"])
-        fn = self._sharded_program(mesh, topk)
+        n_model = mesh.shape["model"]
+        kernel = self.use_kernel
+        layout = (
+            snap.kernel_shard_layout(n_model) if kernel
+            else snap.shard_layout(n_model)
+        )
+        fn = self._sharded_program(mesh, topk, kernel)
         row_mult = serving_row_multiple(mesh)
 
-        def block_fn(pu, k):
+        def block_fn(pu, k_):
             b = pu.shape[0]
             pad = (-b) % row_mult  # equal user slabs per data shard
-            pm = self._masked_user_block(pu)
+            if kernel:
+                pm = pu.astype(jnp.float32)
+            else:
+                pm = self._masked_user_block(snap, pu)
             if pad:
                 pm = jnp.pad(pm, ((0, pad), (0, 0)))
-            scores, idx = fn(pm, *layout)
+            if kernel:
+                scores, idx = fn(pm, snap.t_p, *layout)
+            else:
+                scores, idx = fn(pm, *layout)
             return scores[:b], idx[:b]
 
-        return self._run_chunked(ids, topk, block_fn)
+        return self._run_chunked(snap, ids, topk, block_fn)
 
     # -- async frontend ------------------------------------------------------
     def start(self, *, mesh=None, **queue_kwargs):
@@ -404,6 +872,10 @@ class ServingEngine:
         Queue kwargs (``max_batch``, ``max_pending``, ``linger_ms``) pass
         through.  The queue's single scheduler thread is the only thread
         that touches the scoring paths, so no engine locking is needed.
+
+        Restartable: after :meth:`stop` (or after the attached queue was
+        closed directly) ``start`` brings up a fresh queue — the lifecycle
+        the online publisher's swap-time drains rely on.
         """
         with self._queue_lock:
             return self._start_locked(mesh=mesh, **queue_kwargs)
@@ -412,28 +884,36 @@ class ServingEngine:
         from repro.serving.queue import RequestQueue
 
         if self._queue is not None:
-            raise RuntimeError("engine already has a running request queue")
+            if not self._queue.closed:
+                raise RuntimeError("engine already has a running request queue")
+            self._queue = None  # stale handle: queue was closed directly
         score_fn = None
         if mesh is not None:
             score_fn = lambda users, k: self.topk_sharded(users, k, mesh=mesh)
         self._queue = RequestQueue(self, score_fn=score_fn, **queue_kwargs)
         return self._queue
 
-    def submit(self, user_id: int, topk: int = 10, *, timeout=None):
+    def submit(
+        self, user_id: int, topk: int = 10, *, timeout=None, priority: int = 0
+    ):
         """Async single-user request: returns a ``concurrent.futures.Future``
         resolving to ``(scores, item_ids)`` — (topk,) rows, byte-identical
         to the caller's row of :meth:`topk`.  Poll with ``future.done()``,
-        block with ``future.result(timeout)``.  Starts a default queue on
-        first use; call :meth:`start` first to configure it.  Safe from any
-        thread (first-submit races resolve to one shared queue)."""
+        block with ``future.result(timeout)``.  ``priority`` orders requests
+        inside a deadline bucket (lower = sooner; see ``serving/queue.py``).
+        Starts a default queue on first use; call :meth:`start` first to
+        configure it.  Safe from any thread (first-submit races resolve to
+        one shared queue)."""
         with self._queue_lock:
-            if self._queue is None:
+            if self._queue is None or self._queue.closed:
                 self._start_locked()
             queue = self._queue
-        return queue.submit(user_id, topk, timeout=timeout)
+        return queue.submit(user_id, topk, timeout=timeout, priority=priority)
 
     def stop(self) -> None:
-        """Drain and stop the async pipeline (no-op if never started)."""
+        """Drain and stop the async pipeline.  Idempotent: a second stop (or
+        stop before any start) is a no-op; :meth:`start`/:meth:`submit` work
+        again afterwards."""
         with self._queue_lock:
             queue, self._queue = self._queue, None
         if queue is not None:
@@ -450,3 +930,14 @@ class ServingEngine:
             ]
             for row_i, row_s in zip(idx, scores)
         ]
+
+
+def _merge_over_model(local_s, local_i, b: int, topk: int):
+    """Cross-shard merge of per-shard (b, topk) winners: one all-gather over
+    "model", then a local top-k over the n_model * topk candidates."""
+    gs = jax.lax.all_gather(local_s, "model")  # (n_model, b, topk)
+    gi = jax.lax.all_gather(local_i, "model")
+    cand_s = jnp.moveaxis(gs, 0, 1).reshape(b, -1)
+    cand_i = jnp.moveaxis(gi, 0, 1).reshape(b, -1)
+    merged_s, sel = jax.lax.top_k(cand_s, topk)
+    return merged_s, jnp.take_along_axis(cand_i, sel, axis=1)

@@ -10,10 +10,15 @@ new arrivals accumulate behind it, and every caller gets a
 
 Scheduling policy (deterministic, and what the tests pin down):
 
-* requests are ordered by **(deadline, arrival)**; a batch is formed from the
-  earliest-deadline request's ``topk`` **bucket** (mixing topk values in one
-  launch would change the compiled program shape), taking up to ``max_batch``
-  same-bucket requests in deadline order;
+* requests are ordered by **(deadline bucket, priority, arrival)** —
+  deadlines are quantized into ``deadline_bucket_ms`` buckets, and within a
+  bucket lower ``priority`` values go first (priority 0 is the default
+  request class; online maintenance work submits at low priority, e.g. 10,
+  so model-refresh traffic can never crowd out user requests, while a
+  deadline that is a whole bucket earlier still wins regardless of class);
+  a batch is formed from the winning request's ``topk`` **bucket** (mixing
+  topk values in one launch would change the compiled program shape), taking
+  up to ``max_batch`` same-bucket requests in that order;
 * within a batch, duplicate user ids are scored once and fanned back out;
   futures resolve in deadline order;
 * **admission control**: at ``max_pending`` queued requests ``submit`` either
@@ -53,8 +58,10 @@ class RequestTimeout(TimeoutError):
 
 @dataclass(order=True)
 class _Pending:
-    deadline: float
+    bucket: float                        # quantized deadline (inf = none)
+    priority: int                        # lower = scheduled sooner
     seq: int
+    deadline: float = field(compare=False)   # exact deadline, for expiry
     topk: int = field(compare=False)
     user_id: int = field(compare=False)
     future: Future = field(compare=False)
@@ -84,6 +91,13 @@ class RequestQueue:
     continuous batching already coalesces whatever arrives while the previous
     launch is in flight.
 
+    ``deadline_bucket_ms`` quantizes deadlines for the priority comparison:
+    requests whose deadlines fall in the same bucket are ordered by
+    ``priority`` (then arrival), so a latency-insensitive background request
+    cannot jump ahead of user traffic just by carrying a marginally earlier
+    deadline, while genuinely earlier deadlines still dominate.  Set it to 0
+    to recover strict earliest-deadline-first with priority as a tiebreak.
+
     ``start=False`` skips the scheduler thread; tests (and anyone wanting
     strict determinism) call :meth:`drain_once` manually.
     """
@@ -96,6 +110,7 @@ class RequestQueue:
         max_batch: Optional[int] = None,
         max_pending: int = 4096,
         linger_ms: float = 0.0,
+        deadline_bucket_ms: float = 50.0,
         start: bool = True,
     ):
         if max_pending <= 0:
@@ -105,6 +120,7 @@ class RequestQueue:
         self.max_batch = max_batch if max_batch is not None else engine.max_batch
         self.max_pending = max_pending
         self.linger_s = linger_ms / 1e3
+        self.bucket_s = deadline_bucket_ms / 1e3
         self._cond = threading.Condition()
         self._heap: List[_Pending] = []
         self._seq = itertools.count()
@@ -119,6 +135,11 @@ class RequestQueue:
             self.start()
 
     # -- lifecycle -----------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        with self._cond:
+            return self._closed
+
     def start(self) -> None:
         if self._thread is not None:
             return
@@ -164,6 +185,7 @@ class RequestQueue:
         topk: int = 10,
         *,
         timeout: Optional[float] = None,
+        priority: int = 0,
         block: bool = False,
         block_timeout: Optional[float] = None,
     ) -> Future:
@@ -171,14 +193,23 @@ class RequestQueue:
 
         Validation happens here so a bad request fails its own submit and can
         never poison a batch.  ``timeout`` (seconds) bounds time-to-schedule;
+        ``priority`` (lower = sooner) orders requests within a deadline
+        bucket — use a high value (e.g. 10) for background/maintenance work;
         ``block=True`` waits up to ``block_timeout`` for queue space instead
         of raising :class:`QueueFullError`.
         """
         # engine validation gives the uniform messages for bad ids / topk
         self.engine._validate_request([user_id], topk)
         deadline = _INF if timeout is None else time.monotonic() + timeout
+        bucket = (
+            deadline if self.bucket_s <= 0 or deadline == _INF
+            else (deadline // self.bucket_s) * self.bucket_s
+        )
         fut: Future = Future()
-        req = _Pending(deadline, next(self._seq), int(topk), int(user_id), fut)
+        req = _Pending(
+            bucket, int(priority), next(self._seq),
+            deadline, int(topk), int(user_id), fut,
+        )
         with self._cond:
             if self._closed:
                 raise RuntimeError("queue is closed")
@@ -206,9 +237,10 @@ class RequestQueue:
 
     # -- scheduling ----------------------------------------------------------
     def _pop_batch(self) -> List[_Pending]:
-        """Pop the next batch under the lock: earliest-deadline request
-        defines the topk bucket; same-bucket requests join in deadline order
-        up to ``max_batch``.  Expired requests fail here, never score."""
+        """Pop the next batch under the lock: the scheduling-order winner
+        (deadline bucket, then priority, then arrival) defines the topk
+        bucket; same-bucket requests join in scheduling order up to
+        ``max_batch``.  Expired requests fail here, never score."""
         now = time.monotonic()
         batch: List[_Pending] = []
         skipped: List[_Pending] = []

@@ -313,3 +313,72 @@ def test_engine_queue_sharded_scoring_parity(engine):
             assert np.array_equal(got_i, want_i[r])
     finally:
         engine.stop()
+
+
+# ---------------------------------------------------------------------------
+# priority classes
+# ---------------------------------------------------------------------------
+
+
+def test_priority_orders_within_deadline_bucket(engine):
+    """No-deadline requests share one (infinite) bucket: lower priority
+    values schedule first regardless of arrival order — with max_batch
+    smaller than the backlog, the late high-priority request still makes
+    the first launch and low-priority work waits."""
+    batches = []
+
+    def spy(users, topk):
+        batches.append(list(users))
+        return engine.topk(users, topk)
+
+    q = RequestQueue(engine, score_fn=spy, start=False, max_batch=2)
+    low = [q.submit(u, 5, priority=10) for u in (11, 12, 13)]
+    urgent = q.submit(14, 5, priority=0)
+    assert q.drain_once() == 2
+    assert urgent.done()            # the high-priority request made batch 1
+    assert 14 in batches[0]
+    assert sum(f.done() for f in low) == 1  # only one low-prio slot remained
+    while q.drain_once():
+        pass
+    assert all(f.done() for f in low)
+    q.close()
+
+
+def test_priority_never_starves_high_priority_under_flood(engine):
+    """Continuous low-priority arrivals must not delay a high-priority
+    request past the very next launch (the ROADMAP fairness item)."""
+    q = RequestQueue(engine, start=False, max_batch=8)
+    for u in range(16):
+        q.submit(u % engine.num_users, 5, priority=10)
+    for round_ in range(6):
+        # a flood keeps arriving...
+        for u in range(8):
+            q.submit((round_ * 8 + u) % engine.num_users, 5, priority=10)
+        # ...and one user-facing request lands
+        vip = q.submit(round_ % engine.num_users, 5, priority=0)
+        assert q.drain_once() > 0
+        assert vip.done(), f"high-priority request starved in round {round_}"
+    q.close()
+
+
+def test_priority_does_not_override_earlier_deadline_bucket(engine):
+    """A whole deadline bucket earlier beats any priority: urgency first,
+    class second."""
+    q = RequestQueue(engine, start=False, max_batch=1,
+                     deadline_bucket_ms=50.0)
+    slow_high = q.submit(1, 5, timeout=60.0, priority=0)
+    fast_low = q.submit(2, 5, timeout=1.0, priority=10)
+    assert q.drain_once() == 1
+    assert fast_low.done() and not slow_high.done()
+    assert q.drain_once() == 1
+    assert slow_high.done()
+    q.close()
+
+
+def test_engine_submit_passes_priority(engine):
+    fut_low = engine.submit(1, 5, priority=10)
+    fut_high = engine.submit(2, 5, priority=0)
+    for fut in (fut_low, fut_high):
+        scores, items = fut.result(timeout=60)
+        assert scores.shape == (5,) and items.shape == (5,)
+    engine.stop()
