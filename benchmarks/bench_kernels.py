@@ -13,7 +13,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, reset_records, time_fn, write_json
 from repro.core.ranks import effective_ranks
 from repro.kernels import ops as kops
 from repro.kernels import ref
@@ -29,9 +29,8 @@ def _rearranged_factors(m, n, k, seed=0):
     return jnp.asarray(p), jnp.asarray(q)
 
 
-def tile_skip_fractions() -> None:
-    m = n = 4096
-    k = 256
+def tile_skip_fractions(m: int = 4096, k: int = 256) -> None:
+    n = m
     t = 0.05
     p, q = _rearranged_factors(m, n, k)
     r_u = effective_ranks(p, t)
@@ -74,11 +73,10 @@ def tile_skip_fractions() -> None:
     )
 
 
-def fused_sgd_wallclock() -> None:
+def fused_sgd_wallclock(b: int = 65536, k: int = 128) -> None:
     """Fusion benefit measured at the XLA level (masked ops): fused ref vs
     three separate passes over the row blocks."""
     rng = np.random.default_rng(0)
-    b, k = 65536, 128
     p = jnp.asarray(rng.normal(0, 0.1, (b, k)).astype(np.float32))
     q = jnp.asarray(rng.normal(0, 0.1, (b, k)).astype(np.float32))
     r = jnp.asarray(rng.uniform(1, 5, b).astype(np.float32))
@@ -133,8 +131,14 @@ def kernel_interpret_correctness() -> None:
     emit("kernel/pallas_pruned_matmul_interpret", 0.0, f"max_err={err:.2e}")
 
 
-def run(full: bool = False) -> None:
+def run(*, full: bool = False, smoke: bool = False) -> None:
     del full
-    tile_skip_fractions()
-    fused_sgd_wallclock()
+    reset_records()
+    if smoke:
+        tile_skip_fractions(m=512, k=256)
+        fused_sgd_wallclock(b=2048, k=64)
+    else:
+        tile_skip_fractions()
+        fused_sgd_wallclock()
     kernel_interpret_correctness()
+    write_json("kernels")

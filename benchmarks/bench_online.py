@@ -49,10 +49,17 @@ def _updater_for(params, t_p, t_q, rate, batch):
     )
 
 
-def run(*, full: bool = False) -> None:
+def run(*, full: bool = False, smoke: bool = False) -> None:
     reset_records()
-    m, n, k = (20000, 100000, 64) if full else (2048, 20000, 48)
-    batch_events, n_batches, rate = 256, 24, 0.5
+    if smoke:
+        m, n, k = 512, 4000, 16
+        batch_events, n_batches, rate = 128, 8, 0.5
+    elif full:
+        m, n, k = 20000, 100000, 64
+        batch_events, n_batches, rate = 256, 24, 0.5
+    else:
+        m, n, k = 2048, 20000, 48
+        batch_events, n_batches, rate = 256, 24, 0.5
     rng = np.random.default_rng(0)
 
     params = mf.init_params(jax.random.PRNGKey(0), m, n, k)

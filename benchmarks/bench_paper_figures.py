@@ -22,7 +22,7 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, reset_records, write_json
 from repro.core import (
     DPMFTrainer,
     TrainConfig,
@@ -186,12 +186,25 @@ def ablation_rearrangement(scale: float = 0.5, epochs: int = 15) -> None:
         )
 
 
-def run(full: bool = False) -> None:
-    scale = 1.0 if full else 0.25
-    fig2_time_share(scale=min(scale, 0.3))
-    fig5_sparsity_trend(scale=min(scale, 0.3))
-    fig7_threshold_accuracy(scale=min(scale, 0.3))
-    fig11_speedup_vs_rate(scale=(1.0 if full else 0.5), epochs=25)
-    fig12_runtime_vs_k(scale=scale)
-    fig13_hyperparams(scale=scale)
-    ablation_rearrangement(scale=0.5)
+def run(*, full: bool = False, smoke: bool = False) -> None:
+    reset_records()
+    if smoke:
+        # Toy sizes: exercises every figure path + the report schema fast.
+        fig2_time_share(scale=0.05)
+        fig5_sparsity_trend(scale=0.05)
+        fig7_threshold_accuracy(scale=0.05)
+        fig11_speedup_vs_rate(datasets=("movielens100k",), scale=0.05,
+                              epochs=3)
+        fig12_runtime_vs_k(scale=0.05, epochs=3)
+        fig13_hyperparams(scale=0.05, epochs=3)
+        ablation_rearrangement(scale=0.05, epochs=3)
+    else:
+        scale = 1.0 if full else 0.25
+        fig2_time_share(scale=min(scale, 0.3))
+        fig5_sparsity_trend(scale=min(scale, 0.3))
+        fig7_threshold_accuracy(scale=min(scale, 0.3))
+        fig11_speedup_vs_rate(scale=(1.0 if full else 0.5), epochs=25)
+        fig12_runtime_vs_k(scale=scale)
+        fig13_hyperparams(scale=scale)
+        ablation_rearrangement(scale=0.5)
+    write_json("figures")

@@ -19,7 +19,7 @@ import json
 import os
 from typing import Dict, Optional
 
-from benchmarks.common import emit
+from benchmarks.common import emit, reset_records, write_json
 from repro import configs as cfg_lib
 from repro.roofline import analysis, hw
 
@@ -228,8 +228,11 @@ def render_markdown(rows) -> str:
     return hdr + "\n".join(lines) + "\n"
 
 
-def run(full: bool = False) -> None:
-    del full
+def run(*, full: bool = False, smoke: bool = False) -> None:
+    # The roofline table only *reads* recorded dry-run costs, so smoke and
+    # full are the same cheap assembly pass.
+    del full, smoke
+    reset_records()
     os.makedirs(OUT_DIR, exist_ok=True)
     for tag in ("singlepod", "multipod"):
         rows = build_rows(tag)
@@ -255,3 +258,4 @@ def run(full: bool = False) -> None:
                 + (";depth-corrected" if r.corrected else ""),
             )
         emit(f"roofline/{tag}/table", 0.0, out)
+    write_json("roofline")

@@ -39,9 +39,14 @@ def dense_oracle(params, users, t_p, t_q, topk):
     return jnp.take_along_axis(scores, idx, axis=1), idx
 
 
-def run(*, full: bool = False) -> None:
+def run(*, full: bool = False, smoke: bool = False) -> None:
     reset_records()
-    m, n, k = (20000, 200000, 64) if full else (4096, 40000, 48)
+    if smoke:
+        m, n, k = 1024, 8000, 32
+    elif full:
+        m, n, k = 20000, 200000, 64
+    else:
+        m, n, k = 4096, 40000, 48
     batch, topk, t = 256, 10, 0.05
     rng = np.random.default_rng(0)
 
@@ -149,9 +154,13 @@ def run(*, full: bool = False) -> None:
           f"{seq_rps:.0f} sequential ({speedup:.1f}x; "
           f"{queue.batches_served} launches, mean batch "
           f"{queue.requests_served / max(queue.batches_served, 1):.1f})")
-    assert speedup >= 2.0, (
-        f"continuous batching must be >= 2x sequential, got {speedup:.2f}x"
-    )
+    if not smoke:
+        # at smoke's toy catalog the per-request work is too small for
+        # batching to amortize the queue handoff; the gate is a perf
+        # assertion, not a correctness one
+        assert speedup >= 2.0, (
+            f"continuous batching must be >= 2x sequential, got {speedup:.2f}x"
+        )
 
     lat_ms = np.asarray(req_latencies[-n_req:]) * 1e3
     p50, p99 = np.percentile(lat_ms, [50, 99])

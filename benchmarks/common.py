@@ -60,6 +60,51 @@ def write_json(
     return path
 
 
+_SCHEMA = {
+    "suite": str,
+    "unix_time": int,
+    "backend": str,
+    "device_count": int,
+    "summary": dict,
+    "records": list,
+}
+_RECORD_SCHEMA = {"name": str, "us_per_call": (int, float), "derived": str}
+
+
+def validate_report(path: str) -> Dict:
+    """Schema-check one ``BENCH_<suite>.json`` report; returns the payload.
+
+    Guards the machine-readable perf-trajectory contract: every report must
+    carry the envelope fields and well-typed emit records, so downstream
+    tooling (and the CI smoke job) notices a suite that silently stopped
+    recording.  Raises ``ValueError`` with the first violation.
+    """
+    if not os.path.exists(path):
+        raise ValueError(f"missing bench report {path}")
+    with open(path) as f:
+        payload = json.load(f)
+    for key, typ in _SCHEMA.items():
+        if key not in payload:
+            raise ValueError(f"{path}: missing key {key!r}")
+        if not isinstance(payload[key], typ):
+            raise ValueError(
+                f"{path}: {key!r} should be {typ}, got {type(payload[key])}"
+            )
+    suite = payload["suite"]
+    if not path.endswith(f"BENCH_{suite}.json"):
+        raise ValueError(f"{path}: suite field {suite!r} mismatches filename")
+    if not payload["records"]:
+        raise ValueError(f"{path}: empty records — suite emitted nothing")
+    for i, rec in enumerate(payload["records"]):
+        for key, typ in _RECORD_SCHEMA.items():
+            if key not in rec or not isinstance(rec[key], typ):
+                raise ValueError(
+                    f"{path}: record {i} field {key!r} missing or mistyped: "
+                    f"{rec!r}"
+                )
+    return payload
+
+
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall time (microseconds) of a jax-producing callable."""
     for _ in range(warmup):

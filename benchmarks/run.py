@@ -1,11 +1,18 @@
 """Benchmark entry point: one function per paper table/figure plus the
 roofline assembly.  Prints ``name,us_per_call,derived`` CSV lines.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig11,roofline]
+    PYTHONPATH=src python -m benchmarks.run [--full | --smoke] \
+        [--only fig11,roofline]
+
+``--smoke`` runs every suite at toy size and schema-validates each
+``BENCH_<suite>.json`` report (benchmarks/common.validate_report) — the CI
+guard that keeps the machine-readable perf trajectory from regressing to
+empty or malformed.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
 
@@ -14,16 +21,20 @@ def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--full", action="store_true",
                         help="paper-scale datasets/epochs (slow)")
+    parser.add_argument("--smoke", action="store_true",
+                        help="toy sizes; schema-validate every "
+                             "BENCH_<suite>.json report")
     parser.add_argument("--only", default=None,
                         help="comma-separated subset: "
-                             "figures,kernels,roofline,serving,online")
+                             "figures,kernels,roofline,serving,online,"
+                             "training")
     parser.add_argument("--json-dir", default=None,
                         help="directory for the BENCH_<suite>.json reports "
                              "(default: $BENCH_JSON_DIR or CWD)")
     args = parser.parse_args()
+    if args.full and args.smoke:
+        parser.error("--full and --smoke are mutually exclusive")
     if args.json_dir:
-        import os
-
         os.environ["BENCH_JSON_DIR"] = args.json_dir
 
     from benchmarks import (
@@ -32,6 +43,8 @@ def main() -> None:
         bench_paper_figures,
         bench_roofline,
         bench_serving,
+        bench_training,
+        common,
     )
 
     suites = {
@@ -40,20 +53,37 @@ def main() -> None:
         "roofline": bench_roofline.run,
         "serving": bench_serving.run,
         "online": bench_online.run,
+        "training": bench_training.run,
     }
     selected = (
         {s.strip() for s in args.only.split(",")} if args.only else set(suites)
     )
+    unknown = selected - set(suites)
+    if unknown:
+        parser.error(
+            f"unknown suite(s) {sorted(unknown)}; "
+            f"choose from {sorted(suites)}"
+        )
+    json_dir = os.environ.get("BENCH_JSON_DIR") or "."
     failed = 0
     for name, fn in suites.items():
         if name not in selected:
             continue
         try:
-            fn(full=args.full)
+            fn(full=args.full, smoke=args.smoke)
         except Exception:
             failed += 1
             print(f"bench/{name},0.0,ERROR", flush=True)
             traceback.print_exc()
+            continue
+        if args.smoke:
+            report = os.path.join(json_dir, f"BENCH_{name}.json")
+            try:
+                common.validate_report(report)
+                print(f"# schema OK: {report}")
+            except ValueError as exc:
+                failed += 1
+                print(f"bench/{name},0.0,SCHEMA_ERROR {exc}", flush=True)
     sys.exit(1 if failed else 0)
 
 

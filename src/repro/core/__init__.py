@@ -2,12 +2,16 @@
 from repro.core.mf import (  # noqa: F401
     MFOptState,
     MFParams,
+    eval_epoch_scan,
     eval_mae,
     init_opt_state,
     init_params,
     predict_all_items,
     predict_pairs,
+    train_epoch_scan,
+    train_epoch_scan_shard_map,
     train_step,
+    train_step_shard_map,
 )
 from repro.core.ranks import (  # noqa: F401
     effective_ranks,

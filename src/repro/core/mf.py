@@ -197,11 +197,7 @@ def init_opt_state(params: MFParams, opt: RowOptimizer) -> MFOptState:
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("opt", "lam", "use_fused_kernel", "interpret"),
-)
-def train_step(
+def _train_step(
     params: MFParams,
     opt_state: MFOptState,
     batch: Batch,
@@ -217,21 +213,23 @@ def train_step(
 ) -> Tuple[MFParams, MFOptState, Dict[str, jax.Array]]:
     """One minibatched, dynamically-pruned MF update (Algs. 2 + 3).
 
-    ``use_fused_kernel`` routes the plain-SGD FunkSVD case through the fused
-    Pallas kernel; every other (variant, optimizer) combination uses the
-    masked XLA formulation with identical semantics.  Duplicate (u, i) rows in
-    a batch accumulate additively (scatter-add), the standard minibatch
-    relaxation of the paper's sequential SGD.
+    ``use_fused_kernel`` routes every plain-SGD case without implicit
+    feedback — FunkSVD *and* BiasSVD, weighted or not — through the fused
+    Pallas kernel (biases and the weight column ride along in-kernel); every
+    other (variant, optimizer) combination uses the masked XLA formulation
+    with identical semantics.  Duplicate (u, i) rows in a batch accumulate
+    additively (scatter-add), the standard minibatch relaxation of the
+    paper's sequential SGD.
 
     An optional ``batch["weight"]`` (B,) gates rows out of the update —
     gradients, bias/implicit updates, and metrics all scale by it (0 = row
     fully inert, fractional = importance weighting).  The weight multiplies
     the *update mask* and the metrics only — never the prediction, which
     must stay the full model output for the error (and thus the gradient
-    direction) to be right.  NB: for the EMA-state optimizers
-    (adadelta/adam) a zero-weight row still *writes back* its row's decayed
-    EMA state, the same caveat duplicate rows already carry — which is why
-    the online updater chunks instead of padding.
+    direction) to be right.  NB: for the stateful-EMA optimizers
+    (momentum/adadelta/adam) a zero-weight row still *writes back* its
+    row's decayed state, the same caveat duplicate rows already carry —
+    which is why the online updater chunks instead of padding.
     """
     u, i, r = batch["user"], batch["item"], batch["rating"].astype(jnp.float32)
     hist = batch.get("hist")
@@ -252,12 +250,11 @@ def train_step(
     fused_ok = (
         use_fused_kernel
         and opt.name == "sgd"
-        and params.user_bias is None
         and params.implicit is None
-        and weight is None
     )
     if fused_ok:
-        new_pu, new_qi, err = kops.fused_mf_sgd(
+        has_bias = params.user_bias is not None
+        new_pu, new_qi, new_bu, new_bi, err = kops.fused_mf_sgd(
             params.p[u],
             qi,
             r,
@@ -265,6 +262,10 @@ def train_step(
             t_q,
             lr=1.0,  # lr folded below so it can stay a traced array
             lam=lam,
+            bias_u=params.user_bias[u, 0] if has_bias else None,
+            bias_i=params.item_bias[i, 0] if has_bias else None,
+            global_mean=params.global_mean if has_bias else 0.0,
+            weight=weight,
             interpret=interpret,
         )
         # kernel computed rows at lr=1; rescale the delta by the traced lr and
@@ -275,9 +276,22 @@ def train_step(
             p=params.p.at[u].add(dp.astype(params.p.dtype)),
             q=params.q.at[i].add(dq.astype(params.q.dtype)),
         )
+        if has_bias:
+            dbu = (new_bu - params.user_bias[u, 0]) * lr
+            dbi = (new_bi - params.item_bias[i, 0]) * lr
+            new_params = new_params._replace(
+                user_bias=params.user_bias.at[u, 0].add(
+                    dbu.astype(params.user_bias.dtype)
+                ),
+                item_bias=params.item_bias.at[i, 0].add(
+                    dbi.astype(params.item_bias.dtype)
+                ),
+            )
+        denom = jnp.maximum(jnp.sum(w), 1e-9)
         metrics = {
-            "abs_err": jnp.mean(jnp.abs(err)),
-            "work_fraction": jnp.mean(pair_ranks.astype(jnp.float32)) / k,
+            "abs_err": jnp.sum(jnp.abs(err) * w) / denom,
+            "work_fraction": jnp.sum(pair_ranks.astype(jnp.float32) * w)
+            / (denom * k),
         }
         return new_params, opt_state, metrics
 
@@ -348,8 +362,13 @@ def train_step(
     return new_params, new_state, metrics
 
 
-@jax.jit
-def eval_mae(
+train_step = jax.jit(
+    _train_step,
+    static_argnames=("opt", "lam", "use_fused_kernel", "interpret"),
+)
+
+
+def _eval_mae(
     params: MFParams,
     batch: Batch,
     t_p: jax.Array,
@@ -364,9 +383,122 @@ def eval_mae(
     return jnp.sum(abs_err), jnp.sum(w)
 
 
+eval_mae = jax.jit(_eval_mae)
+
+
+# ---------------------------------------------------------------------------
+# Epoch-compiled training: one donated lax.scan per epoch
+# ---------------------------------------------------------------------------
+
+
+def _epoch_scan(step_fn, params, opt_state, batches):
+    """``lax.scan`` of ``step_fn`` over packed ``(steps, B)`` batch arrays.
+
+    Metrics accumulate on device (sum of per-batch means, divided once at the
+    end — identical to what the per-batch Python loop computes) so an epoch
+    costs exactly one host sync, taken by the *caller* when it fetches the
+    returned scalars.
+    """
+    steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
+
+    def body(carry, batch):
+        p, s, err_sum, work_sum = carry
+        p, s, m = step_fn(p, s, batch)
+        return (p, s, err_sum + m["abs_err"], work_sum + m["work_fraction"]), None
+
+    init = (
+        params,
+        opt_state,
+        jnp.zeros((), jnp.float32),
+        jnp.zeros((), jnp.float32),
+    )
+    (new_params, new_state, err_sum, work_sum), _ = jax.lax.scan(
+        body, init, batches
+    )
+    denom = jnp.float32(max(steps, 1))
+    metrics = {"abs_err": err_sum / denom, "work_fraction": work_sum / denom}
+    return new_params, new_state, metrics
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("opt", "lam", "use_fused_kernel", "interpret"),
+    donate_argnums=(0, 1),
+)
+def train_epoch_scan(
+    params: MFParams,
+    opt_state: MFOptState,
+    batches: Batch,       # each value (steps, B, ...) — data/loader.PackedRatings
+    t_p: jax.Array,
+    t_q: jax.Array,
+    lr: jax.Array,
+    dim_mask: jax.Array,
+    hist: Optional[jax.Array] = None,   # (m, H) device-resident SVD++ history
+    *,
+    opt: RowOptimizer,
+    lam: float,
+    use_fused_kernel: bool = False,
+    interpret: Optional[bool] = None,
+) -> Tuple[MFParams, MFOptState, Dict[str, jax.Array]]:
+    """A whole epoch as ONE compiled, donated computation.
+
+    Semantically a fold of :func:`train_step` over the packed batches —
+    ``train_step`` stays the single-step owner (the online updater and the
+    legacy trainer path call it directly); this is the same body traced once
+    into a ``lax.scan``, so the per-step dispatch/upload/sync overhead of
+    the Python loop disappears.  ``donate_argnums=(0, 1)`` lets XLA update
+    params and optimizer state in place across the epoch.  The SVD++
+    history table is passed whole and gathered per step on device, instead
+    of being packed into (steps, B, H) batch arrays.
+    """
+
+    def step(p, s, batch):
+        if hist is not None:
+            batch = dict(batch, hist=hist[batch["user"]])
+        return _train_step(
+            p, s, batch, t_p, t_q, lr, dim_mask,
+            opt=opt, lam=lam,
+            use_fused_kernel=use_fused_kernel, interpret=interpret,
+        )
+
+    return _epoch_scan(step, params, opt_state, batches)
+
+
+@jax.jit
+def eval_epoch_scan(
+    params: MFParams,
+    batches: Batch,       # each value (steps, B, ...), weight-padded tail
+    t_p: jax.Array,
+    t_q: jax.Array,
+    hist: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sum |err| and weighted count over pre-packed eval batches — the
+    :func:`eval_mae` treatment of a whole pass, fetched once."""
+
+    def body(carry, batch):
+        tot, cnt = carry
+        if hist is not None:
+            batch = dict(batch, hist=hist[batch["user"]])
+        s, c = _eval_mae(params, batch, t_p, t_q)
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), batches
+    )
+    return tot, cnt
+
+
 # ---------------------------------------------------------------------------
 # Owner-compute distributed step (§Perf iteration for the paper's model)
 # ---------------------------------------------------------------------------
+
+
+def _check_owner_compute_opt(opt_name: str) -> None:
+    if opt_name not in ("adagrad", "sgd"):
+        raise ValueError(
+            "the owner-compute step implements sgd and adagrad only, got "
+            f"{opt_name!r}"
+        )
 
 
 def train_step_shard_map(
@@ -408,7 +540,10 @@ def train_step_shard_map(
 
     Collectives drop from O(n*k + B*k) all-reduce bytes to O(B_loc*k) —
     measured in EXPERIMENTS.md §Perf.  Semantics are identical to
-    :func:`train_step` (same masked Alg. 2/3 math; duplicate rows accumulate).
+    :func:`train_step` (same masked Alg. 2/3 math; duplicate rows
+    accumulate), including the optional ``batch["weight"]`` update gate —
+    zero-weight rows are fully inert, which is what lets the online
+    updater's shard router pad per-shard buckets.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -428,9 +563,10 @@ def train_step_shard_map(
     m_loc = params.p.shape[0] // n_dp
     n_loc = params.q.shape[0] // n_model
     k = params.p.shape[1]
+    _check_owner_compute_opt(opt_name)
     adagrad = opt_name == "adagrad"
 
-    def body(p_blk, q_blk, acc_p, acc_q, u, i, r, t_p, t_q):
+    def body(p_blk, q_blk, acc_p, acc_q, u, i, r, w, t_p, t_q):
         # block-local coordinates
         dp_idx = jnp.int32(0)
         stride = 1
@@ -462,27 +598,37 @@ def train_step_shard_map(
             jnp.sum(p_rows * q_rows * pair_mask, axis=-1) * is_local, "model"
         )
         err = r.astype(jnp.float32) - pred
+        wv = w.astype(jnp.float32)[:, None]
 
         # p gradient: assembled on the item owner (it holds q), then one psum.
         # Both gradients carry the full pair mask (Alg. 3 truncates the
-        # entire update at min(r_u, r_i)), matching train_step exactly.
-        g_p_partial = own * pair_mask * (lam * p_rows - err[:, None] * q_rows)
+        # entire update at min(r_u, r_i)) and the row weight — matching
+        # train_step's ``mask = pred_mask * w`` gate exactly.
+        g_p_partial = own * pair_mask * wv * (
+            lam * p_rows - err[:, None] * q_rows
+        )
         if compress_grads:
             from repro.distributed.compression import compressed_psum
 
             g_p = compressed_psum(g_p_partial, "model")
         else:
             g_p = jax.lax.psum(g_p_partial, "model")
-        g_q = own * pair_mask * (lam * q_rows - err[:, None] * p_rows)
+        g_q = own * pair_mask * wv * (lam * q_rows - err[:, None] * p_rows)
         safe_i = jnp.where(is_local, i_loc, 0)
 
         if adagrad:
+            # The second ``* wv`` mirrors RowOptimizer.apply_rows, whose
+            # delta multiplies the mask again after the accumulator update —
+            # a no-op for 0/1 weights, required for fractional ones.  (The
+            # pair-mask part of that second mask is already folded into g.)
             acc_p_rows = acc_p[u_loc] + g_p * g_p
-            dp_rows = -lr * g_p / jnp.sqrt(acc_p_rows + eps)
+            dp_rows = -lr * g_p / jnp.sqrt(acc_p_rows + eps) * wv
             acc_p = acc_p.at[u_loc].add(g_p * g_p)
             acc_q_rows = acc_q[safe_i] + g_q * g_q
             dq_rows = jnp.where(
-                is_local[:, None], -lr * g_q / jnp.sqrt(acc_q_rows + eps), 0.0
+                is_local[:, None],
+                -lr * g_q / jnp.sqrt(acc_q_rows + eps) * wv,
+                0.0,
             )
         else:  # plain SGD
             dp_rows = -lr * g_p
@@ -520,23 +666,36 @@ def train_step_shard_map(
             if adagrad:
                 acc_q = acc_q.at[safe_i].add(g_q * g_q)
 
-        abs_err = jax.lax.pmean(jnp.mean(jnp.abs(err)), dp + ("model",))
+        # Weighted epoch metrics, summed on device (err and w are identical
+        # on every model rank, so only the data axes need a psum).
         r_i_owner = jax.lax.psum(r_i * is_local, "model")
-        work = jax.lax.pmean(
-            jnp.mean(jnp.minimum(r_u, r_i_owner).astype(jnp.float32)) / k,
-            dp + ("model",),
+        wf = w.astype(jnp.float32)
+        w_sum = jnp.sum(wf)
+        abs_sum = jnp.sum(jnp.abs(err) * wf)
+        work_sum = jnp.sum(
+            jnp.minimum(r_u, r_i_owner).astype(jnp.float32) * wf
         )
+        if dp:
+            w_sum = jax.lax.psum(w_sum, dp)
+            abs_sum = jax.lax.psum(abs_sum, dp)
+            work_sum = jax.lax.psum(work_sum, dp)
+        denom = jnp.maximum(w_sum, 1e-9)
+        abs_err = abs_sum / denom
+        work = work_sum / (denom * k)
         return p_blk, q_blk, acc_p, acc_q, abs_err[None], work[None]
 
     acc_p_in = opt_state.p.get("acc") if adagrad else params.p
     acc_q_in = opt_state.q.get("acc") if adagrad else params.q
 
+    weight = batch.get("weight")
+    if weight is None:
+        weight = jnp.ones_like(batch["rating"], dtype=jnp.float32)
     new_p, new_q, acc_p, acc_q, abs_err, work = mesh_compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(
             P(dp, None), P("model", None), P(dp, None), P("model", None),
-            P(dp), P(dp), P(dp), P(), P(),
+            P(dp), P(dp), P(dp), P(dp), P(), P(),
         ),
         out_specs=(
             P(dp, None), P("model", None), P(dp, None), P("model", None),
@@ -546,6 +705,7 @@ def train_step_shard_map(
     )(
         params.p, params.q, acc_p_in, acc_q_in,
         batch["user"], batch["item"], batch["rating"].astype(jnp.float32),
+        weight.astype(jnp.float32),
         jnp.asarray(t_p, jnp.float32), jnp.asarray(t_q, jnp.float32),
     )
     new_params = params._replace(p=new_p, q=new_q)
@@ -556,3 +716,59 @@ def train_step_shard_map(
     )
     metrics = {"abs_err": abs_err[0], "work_fraction": work[0]}
     return new_params, new_state, metrics
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lr", "lam", "opt_name", "eps", "compress_grads", "mesh"),
+    donate_argnums=(0, 1),
+)
+def _train_epoch_scan_shard_map(
+    params, opt_state, batches, t_p, t_q,
+    *, lr, lam, opt_name, eps, compress_grads, mesh,
+):
+    def step(p, s, batch):
+        return train_step_shard_map(
+            p, s, batch, t_p, t_q, lr=lr, lam=lam, opt_name=opt_name,
+            eps=eps, compress_grads=compress_grads, mesh=mesh,
+        )
+
+    return _epoch_scan(step, params, opt_state, batches)
+
+
+def train_epoch_scan_shard_map(
+    params: MFParams,
+    opt_state: MFOptState,
+    batches: Batch,
+    t_p: jax.Array | float,
+    t_q: jax.Array | float,
+    *,
+    lr: float,
+    lam: float,
+    opt_name: str = "adagrad",
+    eps: float = 1e-8,
+    compress_grads: bool = False,
+    mesh=None,
+) -> Tuple[MFParams, MFOptState, Dict[str, jax.Array]]:
+    """Epoch-compiled multi-device training: the owner-compute
+    :func:`train_step_shard_map` folded through the same donated
+    ``lax.scan`` as :func:`train_epoch_scan`, so single-device and sharded
+    training (and the online updater's distributed refresh) share one epoch
+    implementation.  ``batches`` follows the same ownership contract as the
+    single step: every rating's user must live on its data shard's P block.
+    """
+    from repro.distributed import mesh_compat
+
+    _check_owner_compute_opt(opt_name)
+    mesh = mesh_compat.resolve_mesh(mesh)
+    if mesh is None:
+        raise ValueError(
+            "train_epoch_scan_shard_map needs a mesh: pass mesh= or enter a "
+            "mesh_compat.use_mesh(...) context"
+        )
+    return _train_epoch_scan_shard_map(
+        params, opt_state, batches,
+        jnp.asarray(t_p, jnp.float32), jnp.asarray(t_q, jnp.float32),
+        lr=float(lr), lam=float(lam), opt_name=opt_name, eps=float(eps),
+        compress_grads=bool(compress_grads), mesh=mesh,
+    )

@@ -42,6 +42,8 @@ class TrainConfig:
     init_method: str = "normal"        # normal | uniform (paper §5.3)
     variant: str = "funk"              # funk | bias | svdpp
     use_fused_kernel: bool = False     # Pallas path (interpret mode on CPU)
+    epoch_mode: str = "scan"           # scan: one donated lax.scan per epoch
+    #                                  # python: legacy per-batch host loop
     seed: int = 0
     eval_batch_size: int = 8192
     max_hist: int = 32                 # svd++ implicit history length
@@ -80,6 +82,23 @@ class DPMFTrainer:
             if config.variant == "svdpp"
             else None
         )
+        if config.epoch_mode not in ("scan", "python"):
+            raise ValueError(f"unknown epoch_mode {config.epoch_mode!r}")
+        if config.epoch_mode == "scan":
+            # Upload the ratings (and eval set / SVD++ history) ONCE;
+            # per-epoch reshuffles happen on device (data/loader.py).  The
+            # batch size is clamped so a tiny dataset trains as one batch
+            # per epoch instead of degenerating to zero steps (which is
+            # what the drop-remainder host loop silently does).
+            self._packed_train = loader.pack_ratings(
+                train_ds, min(config.batch_size, max(len(train_ds), 1))
+            )
+            self._packed_eval = (
+                loader.pack_eval_batches(test_ds, config.eval_batch_size)
+                if test_ds is not None
+                else None
+            )
+            self._hist_dev = None if self.hist is None else jnp.asarray(self.hist)
 
         rng = jax.random.PRNGKey(config.seed)
         self.params = mf.init_params(
@@ -200,43 +219,70 @@ class DPMFTrainer:
         )
         lr = jnp.float32(cfg.lr)
 
-        abs_err_sum = 0.0
-        work_sum = 0.0
-        steps = 0
         start = time.perf_counter()
-        for batch_np in loader.iterate_batches(
-            self.train_ds,
-            cfg.batch_size,
-            seed=cfg.seed,
-            epoch=self.epoch,
-            hist=self.hist,
-        ):
-            batch = {key: jnp.asarray(value) for key, value in batch_np.items()}
-            self.params, self.opt_state, metrics = mf.train_step(
+        if cfg.epoch_mode == "scan":
+            # One donated, compiled computation for the whole epoch: on-device
+            # reshuffle, lax.scan of train_step, metrics summed on device.
+            batches = self._packed_train.epoch_batches(cfg.seed, self.epoch)
+            self.params, self.opt_state, metrics = mf.train_epoch_scan(
                 self.params,
                 self.opt_state,
-                batch,
+                batches,
                 t_p,
                 t_q,
                 lr,
                 dim_mask,
+                self._hist_dev,
                 opt=self.opt,
                 lam=cfg.lam,
                 use_fused_kernel=cfg.use_fused_kernel,
             )
-            abs_err_sum += float(metrics["abs_err"])
-            work_sum += float(metrics["work_fraction"])
-            steps += 1
-        jax.block_until_ready(self.params.p)
+            jax.block_until_ready(self.params.p)
+            # the epoch's single host sync: two scalars
+            abs_err = float(metrics["abs_err"])
+            work = float(metrics["work_fraction"])
+        else:
+            # Legacy per-batch loop.  Metrics accumulate as device scalars —
+            # fetched once after the loop, never per step (a float() here
+            # would serialize every dispatch on a host sync).
+            abs_err_sum = jnp.zeros((), jnp.float32)
+            work_sum = jnp.zeros((), jnp.float32)
+            steps = 0
+            for batch_np in loader.iterate_batches(
+                self.train_ds,
+                cfg.batch_size,
+                seed=cfg.seed,
+                epoch=self.epoch,
+                hist=self.hist,
+            ):
+                batch = {key: jnp.asarray(value) for key, value in batch_np.items()}
+                self.params, self.opt_state, metrics = mf.train_step(
+                    self.params,
+                    self.opt_state,
+                    batch,
+                    t_p,
+                    t_q,
+                    lr,
+                    dim_mask,
+                    opt=self.opt,
+                    lam=cfg.lam,
+                    use_fused_kernel=cfg.use_fused_kernel,
+                )
+                abs_err_sum = abs_err_sum + metrics["abs_err"]
+                work_sum = work_sum + metrics["work_fraction"]
+                steps += 1
+            jax.block_until_ready(self.params.p)
+            abs_err = float(abs_err_sum) / max(steps, 1)
+            work = float(work_sum) / max(steps, 1)
         wall = time.perf_counter() - start
 
         test_mae = self.evaluate(t_p, t_q) if self.test_ds is not None else float("nan")
         record = EpochRecord(
             epoch=self.epoch,
             wall_time_s=wall,
-            train_abs_err=abs_err_sum / max(steps, 1),
+            train_abs_err=abs_err,
             test_mae=test_mae,
-            work_fraction=work_sum / max(steps, 1),
+            work_fraction=work,
             t_p=float(t_p),
             t_q=float(t_q),
         )
@@ -268,20 +314,26 @@ class DPMFTrainer:
             return float("nan")
         t_p = self.t_p if t_p is None else t_p
         t_q = self.t_q if t_q is None else t_q
-        total, count = 0.0, 0.0
-        hist = self.hist
+        if self.config.epoch_mode == "scan":
+            total, count = mf.eval_epoch_scan(
+                self.params, self._packed_eval, t_p, t_q, self._hist_dev
+            )
+            return float(total) / max(float(count), 1.0)
+        # Legacy loop: accumulate on device, fetch once at the end.
+        total = jnp.zeros((), jnp.float32)
+        count = jnp.zeros((), jnp.float32)
         for batch_np in loader.iterate_batches(
             self.test_ds,
             self.config.eval_batch_size,
             shuffle=False,
             drop_remainder=False,
-            hist=hist,
+            hist=self.hist,
         ):
             batch = {key: jnp.asarray(value) for key, value in batch_np.items()}
             s, c = mf.eval_mae(self.params, batch, t_p, t_q)
-            total += float(s)
-            count += float(c)
-        return total / max(count, 1.0)
+            total = total + s
+            count = count + c
+        return float(total) / max(float(count), 1.0)
 
     # -- summary metrics matching the paper's Eqs. 12-14 ---------------------
     def total_train_time(self) -> float:

@@ -14,6 +14,7 @@ from __future__ import annotations
 from typing import Any, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Pytree = Any
@@ -269,6 +270,66 @@ def mf_batch_shardings(mesh: Mesh, has_hist: bool = False):
     }
     if has_hist:
         out["hist"] = ns(mesh, dp, None)
+    return out
+
+
+def route_batch_to_owner_shards(
+    users,
+    items,
+    ratings,
+    *,
+    num_users: int,
+    n_dp: int,
+    weight=None,
+    pad_to_pow2: bool = False,
+):
+    """Reorder a rating batch to satisfy the owner-compute contract.
+
+    ``mf.train_step_shard_map`` splits the batch positionally into ``n_dp``
+    contiguous chunks and requires chunk ``s`` to contain only users owned by
+    data shard ``s`` (``u // m_loc == s``).  This host-side router buckets
+    the rows by owner and pads every bucket to a common length with
+    weight-0 rows (user = the shard's first owned row, item 0, rating 0) —
+    fully inert under the step's weight gate, so arbitrary event batches
+    (the online updater's input) can ride the sharded step.
+
+    ``pad_to_pow2`` rounds the per-shard length up to a power of two so a
+    jitted caller sees O(log B) distinct shapes, the same trick as the
+    serving micro-batcher.  Returns a numpy batch dict incl. ``"weight"``.
+    """
+    if num_users % n_dp:
+        raise ValueError(
+            f"num_users ({num_users}) must divide over {n_dp} data shards"
+        )
+    users = np.asarray(users, np.int32)
+    items = np.asarray(items, np.int32)
+    ratings = np.asarray(ratings, np.float32)
+    if users.size and (users.min() < 0 or users.max() >= num_users):
+        raise ValueError(
+            f"user ids must lie in [0, {num_users}) — grow the tables first "
+            f"(got range [{users.min()}, {users.max()}])"
+        )
+    m_loc = num_users // n_dp
+    owner = users // m_loc
+    buckets = [np.nonzero(owner == s)[0] for s in range(n_dp)]
+    length = max(1, max(len(b) for b in buckets))
+    if pad_to_pow2:
+        length = 1 << (length - 1).bit_length()
+    out = {
+        "user": np.empty(n_dp * length, np.int32),
+        "item": np.zeros(n_dp * length, np.int32),
+        "rating": np.zeros(n_dp * length, np.float32),
+        "weight": np.zeros(n_dp * length, np.float32),
+    }
+    for s, idx in enumerate(buckets):
+        base = s * length
+        out["user"][base : base + length] = s * m_loc  # inert padding rows
+        out["user"][base : base + len(idx)] = users[idx]
+        out["item"][base : base + len(idx)] = items[idx]
+        out["rating"][base : base + len(idx)] = ratings[idx]
+        out["weight"][base : base + len(idx)] = (
+            1.0 if weight is None else np.asarray(weight, np.float32)[idx]
+        )
     return out
 
 

@@ -4,14 +4,23 @@ For a batch of gathered factor rows this kernel computes, entirely in VMEM:
 
     r_u, r_i  = first-insignificant index of each row (dynamic, from the
                 *current* values — the paper's per-epoch/per-rating sparsity)
-    pred      = sum_{t < min(r_u, r_i)} p[t] * q[t]            (Alg. 2)
-    err       = rating - pred                                  (Eq. 4)
-    p', q'    = truncated SGD update on t < min(r_u, r_i)      (Alg. 3 / Eq. 5-6)
+    pred      = sum_{t < min(r_u, r_i)} p[t] * q[t] + mu + b_u + b_i (Alg. 2)
+    err       = rating - pred                                        (Eq. 4)
+    p', q'    = truncated SGD update on t < min(r_u, r_i)   (Alg. 3 / Eq. 5-6)
+    b_u', b_i'= SGD bias updates gated by the same row weight
 
 Fusing avoids three HBM round-trips of the (B, k) row blocks (dot, then two
 updates) — the latent-factor-update half of the paper's savings.  The
 surrounding gather/scatter stays in XLA (bandwidth-bound; XLA's dynamic
 gather/scatter-add is already roofline there).
+
+Bias rows, the global mean, and a per-row importance ``weight`` column ride
+along as (B, 1) / (1, 1) operands: negligible bandwidth next to the (B, k)
+blocks, and they let the BiasSVD and weighted-update cases (online
+importance weighting, padded batches) share the fused path instead of
+falling back to the unfused XLA formulation.  The weight gates the *update*
+only — the prediction (and thus the error) always uses the full model
+output, matching ``mf.train_step``.
 """
 from __future__ import annotations
 
@@ -30,23 +39,33 @@ def _ranks(rows: jax.Array, threshold: jax.Array, k: int) -> jax.Array:
     return jnp.min(jnp.where(insig, t_idx, jnp.int32(k)), axis=1, keepdims=True)
 
 
-def _kernel(p_ref, q_ref, r_ref, tp_ref, tq_ref, np_ref, nq_ref, err_ref, *, lr, lam):
+def _kernel(
+    p_ref, q_ref, r_ref, bu_ref, bi_ref, w_ref, tp_ref, tq_ref, mu_ref,
+    np_ref, nq_ref, nbu_ref, nbi_ref, err_ref, *, lr, lam,
+):
     bb, k = p_ref.shape
     p = p_ref[...].astype(jnp.float32)
     q = q_ref[...].astype(jnp.float32)
+    bu = bu_ref[...].astype(jnp.float32)   # (bb, 1)
+    bi = bi_ref[...].astype(jnp.float32)   # (bb, 1)
+    w = w_ref[...].astype(jnp.float32)     # (bb, 1)
     t_p = tp_ref[0, 0]
     t_q = tq_ref[0, 0]
+    mu = mu_ref[0, 0]
 
     r_u = _ranks(p, t_p, k)
     r_i = _ranks(q, t_q, k)
     t_idx = jax.lax.broadcasted_iota(jnp.int32, (bb, k), 1)
     mask = (t_idx < jnp.minimum(r_u, r_i)).astype(jnp.float32)
 
-    pred = jnp.sum(p * q * mask, axis=1, keepdims=True)
+    pred = jnp.sum(p * q * mask, axis=1, keepdims=True) + mu + bu + bi
     err = r_ref[...].astype(jnp.float32) - pred
+    wm = mask * w  # the update gate; pred above stays the full model output
 
-    np_ref[...] = (p + lr * (err * q - lam * p) * mask).astype(np_ref.dtype)
-    nq_ref[...] = (q + lr * (err * p - lam * q) * mask).astype(nq_ref.dtype)
+    np_ref[...] = (p + lr * (err * q - lam * p) * wm).astype(np_ref.dtype)
+    nq_ref[...] = (q + lr * (err * p - lam * q) * wm).astype(nq_ref.dtype)
+    nbu_ref[...] = (bu + lr * (err - lam * bu) * w).astype(nbu_ref.dtype)
+    nbi_ref[...] = (bi + lr * (err - lam * bi) * w).astype(nbi_ref.dtype)
     err_ref[...] = err.astype(err_ref.dtype)
 
 
@@ -57,8 +76,12 @@ def fused_mf_sgd_padded(
     p_rows: jax.Array,   # (B, k), B % block_b == 0
     q_rows: jax.Array,   # (B, k)
     ratings: jax.Array,  # (B, 1)
+    bias_u: jax.Array,   # (B, 1) f32 (zeros when unbiased)
+    bias_i: jax.Array,   # (B, 1) f32
+    weight: jax.Array,   # (B, 1) f32 (ones when unweighted; 0 = inert row)
     t_p: jax.Array,      # (1, 1) f32
     t_q: jax.Array,      # (1, 1) f32
+    mu: jax.Array,       # (1, 1) f32 global mean (0 when unbiased)
     *,
     lr: float,
     lam: float,
@@ -68,25 +91,23 @@ def fused_mf_sgd_padded(
     b, k = p_rows.shape
     grid = (b // block_b,)
     kernel = functools.partial(_kernel, lr=lr, lam=lam)
+    row_spec = pl.BlockSpec((block_b, 1), lambda ib: (ib, 0))
+    blk_spec = pl.BlockSpec((block_b, k), lambda ib: (ib, 0))
+    scalar_spec = pl.BlockSpec((1, 1), lambda ib: (0, 0))
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_b, k), lambda ib: (ib, 0)),
-            pl.BlockSpec((block_b, k), lambda ib: (ib, 0)),
-            pl.BlockSpec((block_b, 1), lambda ib: (ib, 0)),
-            pl.BlockSpec((1, 1), lambda ib: (0, 0)),
-            pl.BlockSpec((1, 1), lambda ib: (0, 0)),
+            blk_spec, blk_spec, row_spec, row_spec, row_spec, row_spec,
+            scalar_spec, scalar_spec, scalar_spec,
         ],
-        out_specs=[
-            pl.BlockSpec((block_b, k), lambda ib: (ib, 0)),
-            pl.BlockSpec((block_b, k), lambda ib: (ib, 0)),
-            pl.BlockSpec((block_b, 1), lambda ib: (ib, 0)),
-        ],
+        out_specs=[blk_spec, blk_spec, row_spec, row_spec, row_spec],
         out_shape=[
             jax.ShapeDtypeStruct((b, k), p_rows.dtype),
             jax.ShapeDtypeStruct((b, k), q_rows.dtype),
             jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(p_rows, q_rows, ratings, t_p, t_q)
+    )(p_rows, q_rows, ratings, bias_u, bias_i, weight, t_p, t_q, mu)

@@ -81,26 +81,53 @@ def fused_mf_sgd_ref(
     *,
     lr: float,
     lam: float,
+    bias_u: jax.Array | None = None,   # (b,) gathered user biases
+    bias_i: jax.Array | None = None,   # (b,) gathered item biases
+    global_mean: jax.Array | float = 0.0,
+    weight: jax.Array | None = None,   # (b,) update gate / importance weight
 ):
     """Alg. 2 + Alg. 3 fused: masked dot, error, masked SGD row updates.
 
-    Returns (new_p_rows, new_q_rows, err).  Ranks are computed from the
-    *current* row values (dynamic pruning); the update touches only the
+    Returns ``(new_p_rows, new_q_rows, new_bias_u, new_bias_i, err)`` —
+    the bias outputs are None when the inputs are.  Ranks are computed from
+    the *current* row values (dynamic pruning); the update touches only the
     computed prefix ``t < min(r_u, r_i)``, per Eq. 5/6 restricted by Alg. 3.
+    ``weight`` scales the updates only (0 = inert row); the prediction —
+    including biases and the global mean — is always the full model output,
+    so the error matches ``mf.train_step``.
     """
     k = p_rows.shape[-1]
     r_u = effective_ranks(p_rows, t_p)
     r_i = effective_ranks(q_rows, t_q)
     mask = rank_mask(jnp.minimum(r_u, r_i), k, jnp.float32)
+    w = (
+        jnp.ones((p_rows.shape[0],), jnp.float32)
+        if weight is None
+        else weight.astype(jnp.float32)
+    )
 
     pf = p_rows.astype(jnp.float32)
     qf = q_rows.astype(jnp.float32)
     pred = jnp.sum(pf * qf * mask, axis=-1)
+    if bias_u is not None:
+        pred = (
+            pred
+            + jnp.asarray(global_mean, jnp.float32)
+            + bias_u.astype(jnp.float32)
+            + bias_i.astype(jnp.float32)
+        )
     err = ratings.astype(jnp.float32) - pred
 
-    new_p = pf + lr * (err[:, None] * qf - lam * pf) * mask
-    new_q = qf + lr * (err[:, None] * pf - lam * qf) * mask
-    return new_p.astype(p_rows.dtype), new_q.astype(q_rows.dtype), err
+    wm = mask * w[:, None]
+    new_p = pf + lr * (err[:, None] * qf - lam * pf) * wm
+    new_q = qf + lr * (err[:, None] * pf - lam * qf) * wm
+    new_bu = new_bi = None
+    if bias_u is not None:
+        buf = bias_u.astype(jnp.float32)
+        bif = bias_i.astype(jnp.float32)
+        new_bu = (buf + lr * (err - lam * buf) * w).astype(bias_u.dtype)
+        new_bi = (bif + lr * (err - lam * bif) * w).astype(bias_i.dtype)
+    return new_p.astype(p_rows.dtype), new_q.astype(q_rows.dtype), new_bu, new_bi, err
 
 
 def early_stop_dot_loop(

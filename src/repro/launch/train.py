@@ -36,7 +36,13 @@ def main() -> None:
     parser.add_argument("--lam", type=float, default=0.02)
     parser.add_argument("--pruning-rate", type=float, default=0.3)
     parser.add_argument("--optimizer", default="adagrad",
-                        choices=["sgd", "adagrad", "adadelta", "adam"])
+                        choices=["sgd", "momentum", "adagrad", "adadelta",
+                                 "adam"])
+    parser.add_argument("--epoch-mode", default="scan",
+                        choices=["scan", "python"],
+                        help="scan: whole epoch as one donated lax.scan "
+                             "(device-resident data); python: legacy "
+                             "per-batch host loop")
     parser.add_argument("--strategy", default="standard",
                         choices=["standard", "twin"])
     parser.add_argument("--init", default="normal", choices=["normal", "uniform"])
@@ -63,6 +69,7 @@ def main() -> None:
         init_method=args.init,
         variant=args.variant,
         use_fused_kernel=args.use_fused_kernel,
+        epoch_mode=args.epoch_mode,
         seed=args.seed,
         checkpoint_dir=args.ckpt,
         checkpoint_every_epochs=args.ckpt_every,

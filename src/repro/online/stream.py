@@ -37,23 +37,53 @@ class Event:
 
 @dataclasses.dataclass
 class EventBatch:
-    """A micro-batch of events as contiguous arrays (the updater's unit)."""
+    """A micro-batch of events as contiguous arrays (the updater's unit).
+
+    ``weight`` (optional) is a per-event importance weight in (0, 1] —
+    time-decayed recency by default (:func:`iter_microbatches` with
+    ``half_life_s``).  It flows through ``batch["weight"]`` in
+    ``mf.train_step``: the update (not the prediction) scales by it, so
+    stale events move the factors less.
+    """
 
     user: np.ndarray    # (B,) int32
     item: np.ndarray    # (B,) int32
     rating: np.ndarray  # (B,) float32
+    weight: Optional[np.ndarray] = None  # (B,) float32 update gate
 
     def __len__(self) -> int:
         return int(self.user.shape[0])
 
     @classmethod
-    def from_events(cls, events: Iterable[Event]) -> "EventBatch":
+    def from_events(
+        cls,
+        events: Iterable[Event],
+        *,
+        half_life_s: Optional[float] = None,
+        now: Optional[float] = None,
+    ) -> "EventBatch":
+        """``half_life_s`` turns on exponential time decay: an event
+        ``half_life_s`` seconds older than ``now`` (default: the newest
+        event in the batch) gets weight 0.5, twice that 0.25, ...  The
+        newest event always carries weight 1, so a trickle of fresh events
+        is never down-weighted as a group."""
         ev = list(events)
-        return cls(
+        batch = cls(
             user=np.asarray([e.user for e in ev], np.int32),
             item=np.asarray([e.item for e in ev], np.int32),
             rating=np.asarray([e.rating for e in ev], np.float32),
         )
+        if half_life_s is not None and ev:
+            if half_life_s <= 0:
+                raise ValueError(
+                    f"half_life_s must be positive, got {half_life_s}"
+                )
+            ts = np.asarray([e.timestamp for e in ev], np.float64)
+            ref = float(ts.max()) if now is None else float(now)
+            batch.weight = np.exp2(
+                -np.maximum(ref - ts, 0.0) / half_life_s
+            ).astype(np.float32)
+        return batch
 
 
 class ReplaySource:
@@ -187,6 +217,7 @@ def iter_microbatches(
     *,
     max_events: Optional[int] = None,
     max_batch_span_s: Optional[float] = None,
+    half_life_s: Optional[float] = None,
 ) -> Iterator[EventBatch]:
     """Accumulate events into :class:`EventBatch` micro-batches.
 
@@ -196,6 +227,12 @@ def iter_microbatches(
     freshness bound: a trickle of events still reaches the model.  The final
     partial batch is always flushed.  ``max_events`` bounds the total drawn
     from an infinite source.
+
+    ``half_life_s`` enables recency importance weighting: each batch gets a
+    ``weight`` column decaying by 0.5 per half-life of age relative to the
+    batch's newest event (see :meth:`EventBatch.from_events`), which the
+    updater feeds through ``train_step``'s weight gate — older events move
+    the factors proportionally less.
     """
     if batch_size <= 0:
         raise ValueError(f"batch_size must be positive, got {batch_size}")
@@ -209,13 +246,13 @@ def iter_microbatches(
             and max_batch_span_s is not None
             and event.timestamp - first_ts > max_batch_span_s
         ):
-            yield EventBatch.from_events(pending)
+            yield EventBatch.from_events(pending, half_life_s=half_life_s)
             pending = []
         if not pending:
             first_ts = event.timestamp
         pending.append(event)
         if len(pending) >= batch_size:
-            yield EventBatch.from_events(pending)
+            yield EventBatch.from_events(pending, half_life_s=half_life_s)
             pending = []
     if pending:
-        yield EventBatch.from_events(pending)
+        yield EventBatch.from_events(pending, half_life_s=half_life_s)

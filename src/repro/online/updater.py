@@ -27,8 +27,10 @@ long-running stream needs:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional, Set
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -79,6 +81,7 @@ class OnlineUpdater:
         batch_size: int = 256,
         init_scale: float = 0.1,
         seed: int = 0,
+        mesh=None,
     ):
         self.opt = (
             optimizer if isinstance(optimizer, RowOptimizer)
@@ -89,6 +92,45 @@ class OnlineUpdater:
             opt_state if opt_state is not None
             else mf.init_opt_state(params, self.opt)
         )
+        self.mesh = mesh
+        self._user_multiple = self._item_multiple = 1
+        if mesh is not None:
+            # Distributed refresh: event batches route through the owner-
+            # compute train_step_shard_map (ROADMAP "distributed online
+            # updates").  Only the FunkSVD variants the sharded step
+            # implements are eligible.
+            if self.opt.name not in ("sgd", "adagrad"):
+                raise ValueError(
+                    "mesh-backed online updates support sgd/adagrad only "
+                    f"(got {self.opt.name!r})"
+                )
+            if params.user_bias is not None or params.implicit is not None:
+                raise ValueError(
+                    "mesh-backed online updates support the FunkSVD variant "
+                    "only (no biases / implicit factors)"
+                )
+            self._n_dp = 1
+            for axis in ("pod", "data"):
+                if axis in mesh.axis_names:
+                    self._n_dp *= mesh.shape[axis]
+            self._user_multiple = self._n_dp
+            self._item_multiple = mesh.shape["model"]
+            if (
+                params.p.shape[0] % self._user_multiple
+                or params.q.shape[0] % self._item_multiple
+            ):
+                raise ValueError(
+                    "factor tables must divide over the mesh: "
+                    f"P rows {params.p.shape[0]} over {self._user_multiple}, "
+                    f"Q rows {params.q.shape[0]} over {self._item_multiple}"
+                )
+            self._sharded_step = jax.jit(
+                functools.partial(
+                    mf.train_step_shard_map,
+                    lr=float(lr), lam=float(lam), opt_name=self.opt.name,
+                    mesh=mesh,
+                )
+            )
         self.t_p = jnp.asarray(t_p, jnp.float32)
         self.t_q = jnp.asarray(t_q, jnp.float32)
         self.lr = jnp.float32(lr)
@@ -184,7 +226,26 @@ class OnlineUpdater:
         m, k = params.p.shape
         n = params.q.shape[0]
 
-        add_n = max(0, max_item + 1 - n)
+        # In mesh mode, growth rounds up to the mesh multiples so the grown
+        # tables keep dividing over the data/model axes.
+        def round_up(v: int, mult: int) -> int:
+            return -(-v // mult) * mult
+
+        add_n = max(0, round_up(max_item + 1, self._item_multiple) - n)
+        add_m = max(0, round_up(max_user + 1, self._user_multiple) - m)
+        if self.mesh is not None and (add_n or add_m):
+            # Gather the sharded tables to replicated host arrays before
+            # growing: jnp.concatenate of a mesh-sharded table with fresh
+            # rows re-shards the longer result and (jax 0.4.x) scrambles the
+            # existing rows.  The next sharded step re-shards its inputs
+            # anyway, exactly like the first step after construction.
+            def unshard(tree):
+                return jax.tree_util.tree_map(
+                    lambda x: jnp.asarray(np.asarray(x)), tree
+                )
+
+            params = unshard(params)
+            self.opt_state = unshard(self.opt_state)
         if add_n:
             grew = True
             new_n = n + add_n
@@ -230,7 +291,6 @@ class OnlineUpdater:
             self._touched_implicit.update(range(n, new_n))
             n = new_n
 
-        add_m = max(0, max_user + 1 - m)
         if add_m:
             grew = True
             params = params._replace(
@@ -286,8 +346,9 @@ class OnlineUpdater:
         """Binary decomposition of ``total`` into power-of-two chunk sizes
         (capped at ``cap``): jit sees only O(log cap) distinct batch shapes,
         and — unlike zero-weight padding — no row is ever duplicated, so the
-        EMA-state optimizers (adadelta/adam), whose duplicate-index scatter
-        write-back is nondeterministic, stay exact too."""
+        stateful optimizers (momentum/adadelta/adam), whose duplicate-index
+        scatter write-back is nondeterministic and whose state decays even
+        for zero-weight rows, stay exact too."""
         sizes = []
         while total >= cap:
             sizes.append(cap)
@@ -315,32 +376,56 @@ class OnlineUpdater:
         users = np.asarray(batch.user, np.int32)
         items = np.asarray(batch.item, np.int32)
         ratings = np.asarray(batch.rating, np.float32)
+        weights = (
+            None if getattr(batch, "weight", None) is None
+            else np.asarray(batch.weight, np.float32)
+        )
         self.ensure_capacity(int(users.max()), int(items.max()))
         if self.user_history is not None:
             self._append_history(users, items)
 
-        abs_err = work = 0.0
         total = len(users)
-        lo = 0
-        for size in self._chunk_sizes(total, self.batch_size):
-            u = users[lo : lo + size]
-            i = items[lo : lo + size]
-            r = ratings[lo : lo + size]
-            lo += size
-            step_batch = {
-                "user": jnp.asarray(u),
-                "item": jnp.asarray(i),
-                "rating": jnp.asarray(r),
-            }
-            if self.user_history is not None:
-                step_batch["hist"] = jnp.asarray(self.user_history[u])
-            self.params, self.opt_state, metrics = mf.train_step(
-                self.params, self.opt_state, step_batch,
-                self.t_p, self.t_q, self.lr, self._dim_mask,
-                opt=self.opt, lam=self.lam,
+        if self.mesh is not None:
+            # Distributed refresh: one owner-compute sharded step per event
+            # batch.  The router buckets rows by user owner and pads with
+            # weight-0 rows (pow2 lengths keep the jit cache bounded).
+            from repro.distributed.sharding import route_batch_to_owner_shards
+
+            routed = route_batch_to_owner_shards(
+                users, items, ratings,
+                num_users=self.num_users, n_dp=self._n_dp,
+                weight=weights, pad_to_pow2=True,
             )
-            abs_err += float(metrics["abs_err"]) * size
-            work += float(metrics["work_fraction"]) * size
+            step_batch = {key: jnp.asarray(v) for key, v in routed.items()}
+            self.params, self.opt_state, metrics = self._sharded_step(
+                self.params, self.opt_state, step_batch, self.t_p, self.t_q
+            )
+            abs_err = float(metrics["abs_err"]) * total
+            work = float(metrics["work_fraction"]) * total
+        else:
+            abs_err = work = 0.0
+            lo = 0
+            for size in self._chunk_sizes(total, self.batch_size):
+                u = users[lo : lo + size]
+                i = items[lo : lo + size]
+                r = ratings[lo : lo + size]
+                step_batch = {
+                    "user": jnp.asarray(u),
+                    "item": jnp.asarray(i),
+                    "rating": jnp.asarray(r),
+                }
+                if weights is not None:
+                    step_batch["weight"] = jnp.asarray(weights[lo : lo + size])
+                lo += size
+                if self.user_history is not None:
+                    step_batch["hist"] = jnp.asarray(self.user_history[u])
+                self.params, self.opt_state, metrics = mf.train_step(
+                    self.params, self.opt_state, step_batch,
+                    self.t_p, self.t_q, self.lr, self._dim_mask,
+                    opt=self.opt, lam=self.lam,
+                )
+                abs_err += float(metrics["abs_err"]) * size
+                work += float(metrics["work_fraction"]) * size
 
         self._touched_users.update(int(x) for x in users)
         self._touched_items.update(int(x) for x in items)

@@ -7,7 +7,7 @@ Two families:
   with duplicate-safe ``.at[].add``.  All of them accept the paper's pruning
   ``mask`` so Algorithm 3's truncated update composes with any optimizer
   (paper §5.3 shows the method is optimizer-agnostic; we implement SGD,
-  Adagrad — LibMF's default — AdaDelta and Adam).
+  momentum, Adagrad — LibMF's default — AdaDelta and Adam).
 * **Dense optimizers** — pytree-wide Adam/SGD for the non-MF architectures
   (transformers, GNN, recsys MLPs).
 
@@ -40,11 +40,14 @@ class RowOptimizer:
     rho: float = 0.95     # adadelta decay
     beta1: float = 0.9    # adam
     beta2: float = 0.999  # adam
+    mu: float = 0.9       # momentum
 
     def init(self, param: jax.Array) -> Dict[str, jax.Array]:
         zeros = lambda: jnp.zeros_like(param)  # noqa: E731
         if self.name == "sgd":
             return {}
+        if self.name == "momentum":
+            return {"mom": zeros()}
         if self.name == "adagrad":
             return {"acc": zeros()}
         if self.name == "adadelta":
@@ -65,6 +68,17 @@ class RowOptimizer:
         g = grad_rows.astype(jnp.float32) * mask
         if self.name == "sgd":
             return param.at[idx].add((-lr * g).astype(param.dtype)), state
+
+        if self.name == "momentum":
+            # Heavy ball on the masked gradient.  Like adadelta/adam,
+            # duplicate rows collapse to the last write and an all-zero mask
+            # still decays + writes back the row's momentum — zero-weight
+            # rows gate the param update, not the state (mf.train_step NB).
+            mom_rows = self.mu * state["mom"][idx] + g
+            return (
+                param.at[idx].add((-lr * mom_rows * mask).astype(param.dtype)),
+                {"mom": state["mom"].at[idx].set(mom_rows)},
+            )
 
         if self.name == "adagrad":
             acc_rows = state["acc"][idx] + g * g

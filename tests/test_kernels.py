@@ -48,12 +48,13 @@ def test_fused_mf_sgd_vs_ref(b, k, bb, dtype, t):
     p = jnp.asarray(rng.normal(0, 0.1, (b, k)).astype(np.float32), dtype)
     q = jnp.asarray(rng.normal(0, 0.1, (b, k)).astype(np.float32), dtype)
     r = jnp.asarray(rng.uniform(1, 5, (b,)).astype(np.float32))
-    exp_p, exp_q, exp_e = ref.fused_mf_sgd_ref(
+    exp_p, exp_q, _, _, exp_e = ref.fused_mf_sgd_ref(
         p, q, r, jnp.float32(t), jnp.float32(t), lr=0.05, lam=0.02
     )
-    got_p, got_q, got_e = fused_mf_sgd(
+    got_p, got_q, got_bu, got_bi, got_e = fused_mf_sgd(
         p, q, r, t, t, lr=0.05, lam=0.02, block_b=bb
     )
+    assert got_bu is None and got_bi is None  # unbiased call
     tol = 1e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(got_p), np.asarray(exp_p), rtol=tol, atol=tol)
     np.testing.assert_allclose(np.asarray(got_q), np.asarray(exp_q), rtol=tol, atol=tol)

@@ -96,3 +96,44 @@ def test_microbatches_span_flushes_early():
 def test_microbatches_validates_batch_size():
     with pytest.raises(ValueError):
         list(iter_microbatches([], 0))
+
+
+def test_microbatches_half_life_weights():
+    """half_life_s attaches recency weights: 0.5 per half-life of age
+    relative to the newest event; the newest always carries 1.0."""
+    events = [Event(0, 0, 1.0, float(t)) for t in (0.0, 10.0, 20.0)]
+    (batch,) = list(iter_microbatches(events, 8, half_life_s=10.0))
+    np.testing.assert_allclose(batch.weight, [0.25, 0.5, 1.0])
+    # without the flag there is no weight column at all
+    (plain,) = list(iter_microbatches(events, 8))
+    assert plain.weight is None
+    with pytest.raises(ValueError):
+        EventBatch.from_events(events, half_life_s=0.0)
+
+
+def test_time_decayed_events_move_factors_less():
+    """The decayed weight flows through the updater into train_step's update
+    gate: replaying the same event with an older timestamp moves the factor
+    rows strictly less (prediction/error stay full-model, so the step
+    direction is identical)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import mf
+    from repro.online import OnlineUpdater
+
+    params = mf.init_params(jax.random.PRNGKey(0), 8, 8, 12)
+
+    def delta_for(age_s):
+        events = [Event(3, 4, 5.0, 100.0 - age_s), Event(0, 1, 1.0, 100.0)]
+        (batch,) = list(
+            iter_microbatches(events, 8, half_life_s=30.0)
+        )
+        upd = OnlineUpdater(params, None, 0.0, 0.0, optimizer="sgd",
+                            lr=0.05, seed=0)
+        upd.apply(batch)
+        return float(jnp.sum(jnp.abs(upd.params.p[3] - params.p[3])))
+
+    fresh, stale, ancient = delta_for(0.0), delta_for(30.0), delta_for(90.0)
+    assert fresh > stale > ancient > 0.0
+    np.testing.assert_allclose(stale / fresh, 0.5, rtol=1e-4)

@@ -370,3 +370,81 @@ def test_train_step_fractional_weight_scales_update_not_prediction():
     assert float(half_m["abs_err"]) == pytest.approx(
         float(full_m["abs_err"]), rel=1e-6
     )
+
+
+def test_mesh_mode_updater_matches_single_device():
+    """OnlineUpdater(mesh=...) — the distributed refresh path — matches the
+    single-device updater through owner routing, a fractional time-decay
+    weight column, and a cold-start growth event (rounded to mesh
+    multiples)."""
+    import jax
+
+    if jax.device_count() < 4:
+        pytest.skip("needs >= 4 devices (run under the 4-device CI mesh job)")
+    from repro.distributed.mesh_compat import use_mesh
+    from repro.online.stream import EventBatch
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    m, n, k = 16, 8, 12
+    params = mf.init_params(jax.random.PRNGKey(0), m, n, k)
+    rng = np.random.default_rng(3)
+    # 32 events = one power-of-two chunk on the single-device path, so the
+    # adagrad accumulator sees identical batch boundaries on both sides
+    batches = [
+        EventBatch(
+            user=rng.integers(0, m, 32).astype(np.int32),
+            item=rng.integers(0, n, 32).astype(np.int32),
+            rating=rng.uniform(1, 5, 32).astype(np.float32),
+            weight=rng.uniform(0.25, 1.0, 32).astype(np.float32),
+        )
+        for _ in range(3)
+    ]
+    # cold start past both tables: growth must round to the mesh multiples
+    batches.append(EventBatch(
+        user=np.asarray([m + 1], np.int32),
+        item=np.asarray([n + 2], np.int32),
+        rating=np.asarray([4.5], np.float32),
+        weight=np.asarray([0.5], np.float32),
+    ))
+
+    ref_upd = OnlineUpdater(params, None, 0.05, 0.05, optimizer="adagrad",
+                            lr=0.03, batch_size=64, seed=9)
+    with use_mesh(mesh):
+        mesh_upd = OnlineUpdater(params, None, 0.05, 0.05,
+                                 optimizer="adagrad", lr=0.03,
+                                 batch_size=64, seed=9, mesh=mesh)
+        for b in batches[:3]:
+            ref_upd.apply(b)
+            mesh_upd.apply(b)
+        # exact parity over the routed, fractional-weight updates
+        np.testing.assert_allclose(
+            np.asarray(mesh_upd.params.p), np.asarray(ref_upd.params.p),
+            atol=2e-7, rtol=0,
+        )
+        np.testing.assert_allclose(
+            np.asarray(mesh_upd.params.q), np.asarray(ref_upd.params.q),
+            atol=2e-7, rtol=0,
+        )
+        np.testing.assert_allclose(
+            np.asarray(mesh_upd.opt_state.q["acc"]),
+            np.asarray(ref_upd.opt_state.q["acc"]), atol=2e-7, rtol=0,
+        )
+        # cold start: growth rounds to mesh multiples; the rows that existed
+        # before the growth event are untouched by it (fresh rows draw
+        # different RNG streams on the two sides by design, so only the
+        # pre-growth slabs compare)
+        pre_p = np.asarray(mesh_upd.params.p)
+        pre_q = np.asarray(mesh_upd.params.q)
+        mesh_upd.apply(batches[3])
+        assert mesh_upd.num_users % 2 == 0 and mesh_upd.num_users >= m + 2
+        assert mesh_upd.num_items % 2 == 0 and mesh_upd.num_items >= n + 3
+        np.testing.assert_allclose(
+            np.asarray(mesh_upd.params.p[:m]), pre_p[:m], atol=2e-7, rtol=0
+        )
+        np.testing.assert_allclose(
+            np.asarray(mesh_upd.params.q[:n]), pre_q[:n], atol=2e-7, rtol=0
+        )
+        # the grown row actually absorbed the event
+        assert bool(np.all(np.isfinite(np.asarray(mesh_upd.params.p))))
+        scores_after = mesh_upd.params.p[m + 1] @ mesh_upd.params.q[n + 2]
+        assert np.isfinite(float(scores_after))

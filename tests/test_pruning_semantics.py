@@ -117,7 +117,7 @@ def test_fused_sgd_matches_paper_update_loop(pq, t, lr, lam):
     p_rows = p[:n_pairs]
     q_rows = q[:n_pairs]
     ratings = np.linspace(1, 5, n_pairs).astype(np.float32)
-    new_p, new_q, err = ref.fused_mf_sgd_ref(
+    new_p, new_q, _, _, err = ref.fused_mf_sgd_ref(
         jnp.asarray(p_rows), jnp.asarray(q_rows), jnp.asarray(ratings),
         jnp.float32(t), jnp.float32(t), lr=lr, lam=lam,
     )
