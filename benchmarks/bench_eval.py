@@ -1,0 +1,195 @@
+"""Evaluation subsystem: pruned-vs-dense metric gap + eval throughput.
+
+    PYTHONPATH=src python -m benchmarks.bench_eval [--full]
+
+Three claims, checked then timed:
+
+1. **metric plumbing is exact** — at thresholds 0 the engine's ranking
+   metrics (HR@K/NDCG@K/recall@K through ``ServingEngine.topk``) equal the
+   brute-force dense oracle's *exactly* (same users, same indices, same
+   math), so any gap measured at trained thresholds is pruning, never
+   plumbing (asserted);
+2. **the pruning error band, in ranking terms** — relevance is defined as
+   the *dense model's own* top-L items per user, so the dense oracle scores
+   HR = NDCG = recall = 1.0 by construction and the pruned engine's
+   shortfall IS the ranking distortion pruning introduces (the
+   ranking-side analogue of the paper's P_MAE, Eq. 13, free of dataset
+   artifacts);
+3. **eval is cheap enough to run continuously** — users/s of the engine
+   ranking eval and of the one-scan ``mf.eval_ranking_epoch_scan`` variant,
+   and events/s of prequential test-then-learn scoring vs plain updates
+   (the overhead of folding eval into the online path).
+
+Emits the ``name,us_per_call,derived`` CSV contract and writes
+``BENCH_eval.json`` (schema-validated by ``benchmarks/run.py --smoke``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import types
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, reset_records, time_fn, write_json
+from repro.core import mf, threshold
+from repro.data import synthetic_ratings, train_test_split
+from repro.eval import PrequentialEvaluator
+from repro.eval import ranking as ranking_eval
+from repro.online import OnlineUpdater, ReplaySource, iter_microbatches
+from repro.serving import ServingEngine
+
+
+def run(*, full: bool = False, smoke: bool = False) -> None:
+    reset_records()
+    if smoke:
+        m, n, k, ratings = 400, 3000, 16, 6000
+        topk, rate, stream_events = 10, 0.4, 512
+    elif full:
+        m, n, k, ratings = 20000, 100000, 64, 400000
+        topk, rate, stream_events = 10, 0.4, 8192
+    else:
+        m, n, k, ratings = 2048, 20000, 48, 60000
+        topk, rate, stream_events = 10, 0.4, 4096
+
+    ds = synthetic_ratings(num_users=m, num_items=n, num_ratings=ratings,
+                           seed=0)
+    _, stream_ds = train_test_split(ds, 0.5, seed=1)
+    params = mf.init_params(
+        jax.random.PRNGKey(0), m, n, k, init_method="libmf"
+    )
+    t_p, t_q = threshold.thresholds_from_matrices(params.p, params.q, rate)
+
+    # Relevance = each user's DENSE top-L: the dense oracle then scores a
+    # perfect 1.0 on every metric, so the pruned engine's shortfall is
+    # exactly the ranking distortion pruning introduces.
+    rel_l = 5
+    eval_users = np.arange(min(m, 2048), dtype=np.int32)
+    rel_items = np.concatenate([
+        ranking_eval.dense_topk(params, eval_users[lo : lo + 256], rel_l)[1]
+        for lo in range(0, eval_users.size, 256)
+    ])
+    holdout = types.SimpleNamespace(
+        user=np.repeat(eval_users, rel_l),
+        item=rel_items.reshape(-1),
+        rating=np.ones(eval_users.size * rel_l, np.float32),
+    )
+    # pack the relevance sets ONCE; every evaluate_* call below reuses them,
+    # so the timed sections measure ranking, not holdout re-sorting
+    relevance = ranking_eval.relevance_from_dataset(holdout)
+    users = relevance[0]
+
+    # ---- 1. parity: engine metrics == dense oracle at thresholds 0 ---------
+    dense_engine = ServingEngine(params, 0.0, 0.0, use_kernel=False,
+                                 max_batch=256)
+    oracle = ranking_eval.evaluate_oracle(params, topk=topk,
+                                          relevance=relevance)
+    engine_dense = ranking_eval.evaluate_engine(dense_engine, topk=topk,
+                                                relevance=relevance)
+    assert engine_dense == oracle, (
+        f"engine/oracle divergence at t=0: {engine_dense} vs {oracle}"
+    )
+    assert oracle.hr == oracle.recall == 1.0, oracle  # by construction
+    print(f"# parity at t=0: engine == oracle exactly "
+          f"(NDCG@{topk} {oracle.ndcg:.4f}, {oracle.users} users)")
+
+    # ---- 2. pruned-vs-dense ranking gap ------------------------------------
+    pruned_engine = ServingEngine(params, t_p, t_q, use_kernel=False,
+                                  max_batch=256)
+    pruned = ranking_eval.evaluate_engine(pruned_engine, topk=topk,
+                                          relevance=relevance)
+    gaps = {
+        "hr": oracle.hr - pruned.hr,
+        "ndcg": oracle.ndcg - pruned.ndcg,
+        "recall": oracle.recall - pruned.recall,
+    }
+    for name, gap in gaps.items():
+        emit(f"eval_gap_{name}_at{topk}_rate{rate}", abs(gap) * 1e6,
+             f"dense-pruned {name}@{topk} delta")
+    print(f"# pruned vs dense @ rate {rate}: NDCG {pruned.ndcg:.4f} vs "
+          f"{oracle.ndcg:.4f} (gap {gaps['ndcg']:+.4f}), "
+          f"HR {pruned.hr:.4f} vs {oracle.hr:.4f}")
+
+    # ---- 3a. ranking-eval throughput ---------------------------------------
+    t0 = time.perf_counter()
+    ranking_eval.evaluate_engine(pruned_engine, topk=topk,
+                                 relevance=relevance)
+    engine_s = time.perf_counter() - t0
+    engine_users_s = users.size / engine_s
+    emit(f"eval_engine_ranking_u{users.size}_n{n}",
+         engine_s / users.size * 1e6, f"{engine_users_s:.0f} users/s")
+
+    batches = ranking_eval.pack_ranking_batches(holdout, 256)
+
+    def scan_eval():
+        return mf.eval_ranking_epoch_scan(
+            params, batches, t_p, t_q, topk=topk
+        )["weight_sum"]
+
+    scan_us = time_fn(scan_eval)
+    scan_users_s = users.size / (scan_us / 1e6)
+    emit(f"eval_scan_ranking_u{users.size}_n{n}", scan_us / users.size,
+         f"{scan_users_s:.0f} users/s")
+    print(f"# ranking eval: engine {engine_users_s:.0f} users/s, "
+          f"one-scan {scan_users_s:.0f} users/s")
+
+    # ---- 3b. prequential overhead over plain updates -----------------------
+    def stream_batches():
+        return iter_microbatches(
+            ReplaySource(stream_ds, epochs=None, shuffle=True, seed=3),
+            128, max_events=stream_events,
+        )
+
+    upd = OnlineUpdater(params, t_p=t_p, t_q=t_q, pruning_rate=rate,
+                        batch_size=128, seed=5)
+    next_b = iter(stream_batches())
+    upd.apply(next(next_b))  # compile outside the timed region
+    t0 = time.perf_counter()
+    done = 0
+    for batch in next_b:
+        done += upd.apply(batch)["events"]
+    plain_s = time.perf_counter() - t0
+
+    upd2 = OnlineUpdater(params, t_p=t_p, t_q=t_q, pruning_rate=rate,
+                         batch_size=128, seed=5)
+    ev = PrequentialEvaluator(upd2, window=1024)
+    next_b = iter(stream_batches())
+    ev.consume(next(next_b))
+    t0 = time.perf_counter()
+    for batch in next_b:
+        ev.consume(batch)
+    preq_s = time.perf_counter() - t0
+    overhead = preq_s / max(plain_s, 1e-9) - 1.0
+    emit(f"eval_prequential_b128_n{n}", preq_s / max(done, 1) * 1e6,
+         f"{done / preq_s:.0f} events/s, {overhead * 100:.0f}% over plain")
+    print(f"# prequential: {done / preq_s:.0f} events/s scored+applied "
+          f"({overhead * 100:.0f}% overhead over update-only); "
+          f"MAE {ev.stats.mae:.4f}")
+
+    write_json("eval", {
+        "shape": {"users": m, "items": n, "k": k, "topk": topk,
+                  "pruning_rate": rate},
+        "dense": oracle.as_dict(),
+        "pruned": pruned.as_dict(),
+        "gap_ndcg": gaps["ndcg"],
+        "gap_hr": gaps["hr"],
+        "gap_recall": gaps["recall"],
+        "engine_eval_users_per_s": engine_users_s,
+        "scan_eval_users_per_s": scan_users_s,
+        "prequential_events_per_s": done / preq_s,
+        "prequential_overhead_frac": overhead,
+        "prequential_mae": ev.stats.mae,
+    })
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--full", action="store_true",
+                        help="catalog-scale shape (slower)")
+    args = parser.parse_args()
+    run(full=args.full)
+
+
+if __name__ == "__main__":
+    main()

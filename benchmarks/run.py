@@ -27,7 +27,7 @@ def main() -> None:
     parser.add_argument("--only", default=None,
                         help="comma-separated subset: "
                              "figures,kernels,roofline,serving,online,"
-                             "training")
+                             "training,eval")
     parser.add_argument("--json-dir", default=None,
                         help="directory for the BENCH_<suite>.json reports "
                              "(default: $BENCH_JSON_DIR or CWD)")
@@ -38,6 +38,7 @@ def main() -> None:
         os.environ["BENCH_JSON_DIR"] = args.json_dir
 
     from benchmarks import (
+        bench_eval,
         bench_kernels,
         bench_online,
         bench_paper_figures,
@@ -54,6 +55,7 @@ def main() -> None:
         "serving": bench_serving.run,
         "online": bench_online.run,
         "training": bench_training.run,
+        "eval": bench_eval.run,
     }
     selected = (
         {s.strip() for s in args.only.split(",")} if args.only else set(suites)

@@ -488,6 +488,65 @@ def eval_epoch_scan(
     return tot, cnt
 
 
+@functools.partial(jax.jit, static_argnames=("topk",))
+def eval_ranking_epoch_scan(
+    params: MFParams,
+    batches: Batch,       # repro.eval.ranking.pack_ranking_batches output
+    t_p: jax.Array,
+    t_q: jax.Array,
+    hist: Optional[jax.Array] = None,
+    *,
+    topk: int,
+) -> Dict[str, jax.Array]:
+    """Ranking-metrics variant of :func:`eval_epoch_scan`: HR@K / NDCG@K /
+    recall@K sums over pre-packed user batches, one compiled scan.
+
+    Each step scores its user batch against the full catalog with the
+    masked (rank-truncated) formulation — the same math the serving layouts
+    bake in, so at equal thresholds the resulting rankings are the engine's
+    — takes ``lax.top_k``, and folds the batch through
+    :func:`repro.eval.ranking.ranking_counts`.  The per-user additive
+    constant (user bias + global mean) is omitted: it never changes a
+    ranking.  Item ranks reduce once outside the scan.  ``batches`` comes
+    from :func:`repro.eval.ranking.pack_ranking_batches`; divide the metric
+    sums by ``weight_sum`` for means (``RankingReport`` semantics).
+    """
+    from repro.eval.ranking import ranking_counts
+
+    k = params.p.shape[1]
+    r_i = effective_ranks(params.q, t_q)
+    qm = params.q.astype(jnp.float32) * rank_mask(r_i, k)
+    item_bias = (
+        None if params.item_bias is None
+        else params.item_bias[:, 0].astype(jnp.float32)
+    )
+
+    def body(carry, batch):
+        u = batch["user"]
+        h = None if hist is None else hist[u]
+        pu = _user_vector(params, u, h)
+        r_u = effective_ranks(pu, t_p)
+        pm = pu.astype(jnp.float32) * rank_mask(r_u, k)
+        scores = jnp.dot(pm, qm.T, preferred_element_type=jnp.float32)
+        if item_bias is not None:
+            scores = scores + item_bias[None, :]
+        _, idx = jax.lax.top_k(scores, topk)
+        counts = ranking_counts(
+            idx, batch["relevant"], batch["n_valid"], batch.get("weight")
+        )
+        return (
+            {key: carry[key] + counts[key] for key in carry},
+            None,
+        )
+
+    init = {
+        key: jnp.zeros((), jnp.float32)
+        for key in ("hr_sum", "ndcg_sum", "recall_sum", "weight_sum")
+    }
+    sums, _ = jax.lax.scan(body, init, batches)
+    return sums
+
+
 # ---------------------------------------------------------------------------
 # Owner-compute distributed step (§Perf iteration for the paper's model)
 # ---------------------------------------------------------------------------

@@ -48,6 +48,8 @@ class TrainConfig:
     eval_batch_size: int = 8192
     max_hist: int = 32                 # svd++ implicit history length
     rearrange: bool = True             # Alg. 1; False = ablation (§Repro)
+    ranking_topk: int = 0              # >0: per-epoch HR/NDCG/recall@K too
+    ranking_max_users: Optional[int] = 512   # eval-user cap for ranking
     checkpoint_dir: Optional[str] = None
     checkpoint_every_epochs: int = 0   # 0 = only final
     keep_checkpoints: int = 3
@@ -55,6 +57,14 @@ class TrainConfig:
 
 @dataclasses.dataclass
 class EpochRecord:
+    """One epoch's logged measurements (``DPMFTrainer.history`` entries).
+
+    The ranking fields are NaN unless ``TrainConfig.ranking_topk > 0`` —
+    they come from ``mf.eval_ranking_epoch_scan`` over the test split, so
+    the accuracy trajectory carries the served quantity (top-k quality),
+    not only the paper's rating error.
+    """
+
     epoch: int
     wall_time_s: float
     train_abs_err: float
@@ -62,6 +72,9 @@ class EpochRecord:
     work_fraction: float   # mean k_eff / k — the work-proportional cost
     t_p: float
     t_q: float
+    hr: float = float("nan")       # HR@K at ranking_topk
+    ndcg: float = float("nan")     # NDCG@K
+    recall: float = float("nan")   # recall@K
 
 
 class DPMFTrainer:
@@ -98,7 +111,14 @@ class DPMFTrainer:
                 if test_ds is not None
                 else None
             )
-            self._hist_dev = None if self.hist is None else jnp.asarray(self.hist)
+        self._hist_dev = None if self.hist is None else jnp.asarray(self.hist)
+        self._packed_ranking = None
+        if config.ranking_topk > 0 and test_ds is not None:
+            from repro.eval import ranking as ranking_eval
+
+            self._packed_ranking = ranking_eval.pack_ranking_batches(
+                test_ds, batch_size=256, max_users=config.ranking_max_users
+            )
 
         rng = jax.random.PRNGKey(config.seed)
         self.params = mf.init_params(
@@ -277,6 +297,7 @@ class DPMFTrainer:
         wall = time.perf_counter() - start
 
         test_mae = self.evaluate(t_p, t_q) if self.test_ds is not None else float("nan")
+        ranking = self.evaluate_ranking(t_p, t_q)
         record = EpochRecord(
             epoch=self.epoch,
             wall_time_s=wall,
@@ -285,6 +306,11 @@ class DPMFTrainer:
             work_fraction=work,
             t_p=float(t_p),
             t_q=float(t_q),
+            **(
+                {"hr": ranking.hr, "ndcg": ranking.ndcg,
+                 "recall": ranking.recall}
+                if ranking is not None else {}
+            ),
         )
         self.history.append(record)
 
@@ -334,6 +360,27 @@ class DPMFTrainer:
             total = total + s
             count = count + c
         return float(total) / max(float(count), 1.0)
+
+    def evaluate_ranking(self, t_p=None, t_q=None):
+        """Test-split HR/NDCG/recall@``ranking_topk`` at the given (default:
+        current) thresholds, as a :class:`~repro.eval.ranking.RankingReport`.
+        Returns None unless ``TrainConfig.ranking_topk > 0`` and a test
+        split exists.  Runs as one compiled scan
+        (``mf.eval_ranking_epoch_scan``) over batches packed at init."""
+        if self._packed_ranking is None:
+            return None
+        from repro.eval import ranking as ranking_eval
+
+        t_p = self.t_p if t_p is None else t_p
+        t_q = self.t_q if t_q is None else t_q
+        sums = mf.eval_ranking_epoch_scan(
+            self.params, self._packed_ranking, t_p, t_q, self._hist_dev,
+            topk=self.config.ranking_topk,
+        )
+        return ranking_eval.report_from_sums(
+            {key: float(value) for key, value in sums.items()},
+            self.config.ranking_topk,
+        )
 
     # -- summary metrics matching the paper's Eqs. 12-14 ---------------------
     def total_train_time(self) -> float:

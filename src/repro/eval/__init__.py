@@ -1,0 +1,43 @@
+"""Evaluation subsystem: the fourth pillar (train → serve → refresh →
+**evaluate**).
+
+Two complementary views of the paper's speed/accuracy trade, measured
+continuously instead of against a stale held-out split:
+
+* :mod:`repro.eval.prequential` — test-then-learn error on the live event
+  stream (windowed / decayed MAE & RMSE, drift hooks for recalibration);
+* :mod:`repro.eval.ranking` — HR@K / NDCG@K / recall@K through the real
+  serving paths, pinned against a brute-force dense oracle, so pruning
+  error is visible as *ranking* degradation, not only rating error.
+"""
+from repro.eval.prequential import (
+    PrequentialEvaluator,
+    PrequentialStats,
+    recalibration_hook,
+)
+from repro.eval.ranking import (
+    PAD_ITEM,
+    RankingReport,
+    dense_topk,
+    evaluate_engine,
+    evaluate_oracle,
+    ndcg_discounts,
+    pack_ranking_batches,
+    ranking_counts,
+    relevance_from_dataset,
+)
+
+__all__ = [
+    "PAD_ITEM",
+    "PrequentialEvaluator",
+    "PrequentialStats",
+    "RankingReport",
+    "dense_topk",
+    "evaluate_engine",
+    "evaluate_oracle",
+    "ndcg_discounts",
+    "pack_ranking_batches",
+    "ranking_counts",
+    "recalibration_hook",
+    "relevance_from_dataset",
+]

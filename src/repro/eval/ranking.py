@@ -1,0 +1,368 @@
+"""Ranking-quality metrics for pruned serving: HR@K / NDCG@K / recall@K.
+
+The paper reports the cost of pruning as a rating-error increase (P_MAE,
+Eq. 13).  A recommender, however, *serves rankings*: what reaches the user
+is the engine's top-k, so the quantity that must stay inside the paper's
+error band is ranking degradation — does the pruned top-k still surface the
+items the user actually interacted with?  This module makes that measurable
+on every path the engine serves from:
+
+* :func:`ranking_counts` — the metric kernel: batched HR@K / NDCG@K /
+  recall@K sums from ``(B, K)`` recommended ids against padded per-user
+  relevance sets, pure ``jnp`` so it runs jitted on device (it is the body
+  of ``mf.eval_ranking_epoch_scan`` and of the engine evaluators below);
+* :func:`dense_topk` — the brute-force oracle: dense (or
+  threshold-masked) scoring of the full catalog + stable argsort, the same
+  reference the serving parity tests pin against.  At thresholds 0 every
+  engine path returns *identical* indices, so engine metrics match oracle
+  metrics exactly — any gap at trained thresholds is pruning, not plumbing;
+* :func:`evaluate_engine` / :func:`evaluate_oracle` — end-to-end: build
+  relevance sets from a held-out :class:`~repro.data.ratings.RatingsDataset`,
+  rank through ``ServingEngine.topk`` (or ``topk_sharded`` on a mesh, or the
+  Pallas kernel path — whatever the engine is configured with) or the
+  oracle, and reduce to one :class:`RankingReport`.
+
+Metric definitions (binary relevance, per evaluated user ``u`` with
+held-out item set ``R_u``; users with empty ``R_u`` are excluded):
+
+* ``HR@K``      — 1 if the top-K contains any item of ``R_u``;
+* ``recall@K``  — ``|topK ∩ R_u| / |R_u|``;
+* ``NDCG@K``    — ``DCG@K / IDCG@K`` with gain ``1 / log2(pos + 2)`` at
+  0-based position ``pos``; ``IDCG@K`` places ``min(K, |R_u|)`` hits at the
+  head, so a user whose whole holdout is retrieved in order scores 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mf
+
+PAD_ITEM = -1  # relevance padding: never equals a valid item id
+
+
+# ---------------------------------------------------------------------------
+# Device-side metric kernel
+# ---------------------------------------------------------------------------
+
+
+def ndcg_discounts(k: int) -> jnp.ndarray:
+    """``(K,)`` DCG position discounts ``1 / log2(pos + 2)``, 0-based."""
+    pos = jnp.arange(k, dtype=jnp.float32)
+    return 1.0 / jnp.log2(pos + 2.0)
+
+
+def ranking_counts(
+    topk_idx: jax.Array,    # (B, K) recommended item ids, best first
+    relevant: jax.Array,    # (B, R) held-out item ids, PAD_ITEM-padded
+    n_valid: jax.Array,     # (B,)   |R_u| per row
+    weight: Optional[jax.Array] = None,  # (B,) 0 masks padding rows
+) -> Dict[str, jax.Array]:
+    """Summed HR@K / NDCG@K / recall@K over a batch — pure jnp, jit-safe.
+
+    Returns ``{"hr_sum", "ndcg_sum", "recall_sum", "weight_sum"}`` scalars;
+    divide the metric sums by ``weight_sum`` for per-user means.  Rows with
+    ``n_valid == 0`` (or zero ``weight``) contribute nothing, so packed
+    batches can pad with inert rows exactly like ``eval_epoch_scan``.
+    """
+    k = topk_idx.shape[-1]
+    w = (
+        jnp.ones(topk_idx.shape[:1], jnp.float32)
+        if weight is None
+        else weight.astype(jnp.float32)
+    )
+    w = w * (n_valid > 0).astype(jnp.float32)
+    # (B, K) hit mask: is the j-th recommendation in the user's holdout?
+    hits = jnp.any(
+        topk_idx[:, :, None] == relevant[:, None, :], axis=-1
+    ).astype(jnp.float32)
+    disc = ndcg_discounts(k)
+    dcg = jnp.sum(hits * disc[None, :], axis=-1)
+    # ideal DCG: all min(K, |R_u|) hits packed at the head
+    ideal = jnp.cumsum(disc)                       # (K,) prefix sums
+    n_ideal = jnp.clip(n_valid, 1, k)              # clip(·,1,·): avoid 0 gather
+    idcg = ideal[n_ideal - 1]
+    hit_count = jnp.sum(hits, axis=-1)
+    safe_valid = jnp.maximum(n_valid.astype(jnp.float32), 1.0)
+    return {
+        "hr_sum": jnp.sum(w * (hit_count > 0).astype(jnp.float32)),
+        "ndcg_sum": jnp.sum(w * dcg / idcg),
+        "recall_sum": jnp.sum(w * hit_count / safe_valid),
+        "weight_sum": jnp.sum(w),
+    }
+
+
+_ranking_counts_jit = jax.jit(ranking_counts)
+
+
+# ---------------------------------------------------------------------------
+# Relevance sets from a held-out ratings split
+# ---------------------------------------------------------------------------
+
+
+def relevance_from_dataset(
+    ds,
+    *,
+    min_rating: Optional[float] = None,
+    max_users: Optional[int] = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-user relevance sets from a held-out split.
+
+    Returns ``(users, relevant, counts)``: the evaluated user ids ``(U,)``,
+    their held-out items ``(U, R)`` padded with :data:`PAD_ITEM`, and the
+    per-user set sizes ``(U,)``.  ``min_rating`` keeps only interactions at
+    or above it (binary-relevance cut); users left with no relevant items
+    are excluded.  ``max_users`` truncates to the first U evaluated users
+    (ascending id) to bound eval cost; None (not 0) means no cap.
+    """
+    if max_users is not None and max_users <= 0:
+        raise ValueError(
+            f"max_users must be positive (or None for no cap), got {max_users}"
+        )
+    user = np.asarray(ds.user, np.int64)
+    item = np.asarray(ds.item, np.int64)
+    if min_rating is not None:
+        keep = np.asarray(ds.rating, np.float32) >= min_rating
+        user, item = user[keep], item[keep]
+    if user.size == 0:
+        return (
+            np.zeros(0, np.int32),
+            np.zeros((0, 1), np.int32),
+            np.zeros(0, np.int32),
+        )
+    order = np.lexsort((item, user))
+    user, item = user[order], item[order]
+    # unique (user, item) pairs — duplicate interactions are one relevance
+    first = np.ones(user.size, bool)
+    first[1:] = (user[1:] != user[:-1]) | (item[1:] != item[:-1])
+    user, item = user[first], item[first]
+    uniq, counts = np.unique(user, return_counts=True)
+    if max_users is not None:
+        uniq, counts = uniq[:max_users], counts[:max_users]
+        keep = user <= uniq[-1]
+        user, item = user[keep], item[keep]
+    width = int(counts.max())
+    relevant = np.full((uniq.size, width), PAD_ITEM, np.int32)
+    starts = np.zeros(uniq.size + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    for row, (lo, hi) in enumerate(zip(starts[:-1], starts[1:])):
+        relevant[row, : hi - lo] = item[lo:hi]
+    return uniq.astype(np.int32), relevant, counts.astype(np.int32)
+
+
+def pack_ranking_batches(
+    ds,
+    batch_size: int,
+    *,
+    min_rating: Optional[float] = None,
+    max_users: Optional[int] = None,
+) -> Dict[str, jnp.ndarray]:
+    """Pre-packed ``(steps, B, ...)`` operands for ``mf.eval_ranking_epoch_scan``.
+
+    The ranking analogue of :func:`repro.data.loader.pack_eval_batches`:
+    evaluated users and their padded relevance sets are uploaded once, with
+    a zero ``weight`` column marking the padded tail, so the whole ranking
+    eval runs as one compiled scan fetched in a single host sync.
+    """
+    users, relevant, counts = relevance_from_dataset(
+        ds, min_rating=min_rating, max_users=max_users
+    )
+    n_users = users.size
+    if n_users == 0:
+        raise ValueError("no users with relevant held-out items to evaluate")
+    batch_size = min(batch_size, n_users)
+    steps = -(-n_users // batch_size)
+    pad = steps * batch_size - n_users
+    users = np.concatenate([users, np.zeros(pad, np.int32)])
+    relevant = np.concatenate(
+        [relevant, np.full((pad, relevant.shape[1]), PAD_ITEM, np.int32)]
+    )
+    counts = np.concatenate([counts, np.zeros(pad, np.int32)])
+    weight = np.concatenate(
+        [np.ones(n_users, np.float32), np.zeros(pad, np.float32)]
+    )
+    return {
+        "user": jnp.asarray(users.reshape(steps, batch_size)),
+        "relevant": jnp.asarray(
+            relevant.reshape(steps, batch_size, relevant.shape[1])
+        ),
+        "n_valid": jnp.asarray(counts.reshape(steps, batch_size)),
+        "weight": jnp.asarray(weight.reshape(steps, batch_size)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Brute-force oracle
+# ---------------------------------------------------------------------------
+
+
+def dense_topk(
+    params: mf.MFParams,
+    user_ids,
+    topk: int,
+    *,
+    t_p=0.0,
+    t_q=0.0,
+    hist: Optional[np.ndarray] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Score-everything-then-argsort reference ranking.
+
+    Materializes the full ``(B, n)`` score matrix (deliberately — this is
+    the baseline the engine replaces) via the masked XLA formulation and
+    takes a *stable* descending argsort, so ties resolve to the lower item
+    index exactly like ``jax.lax.top_k`` and the engine's streaming merges.
+    With ``t_p == t_q == 0`` this is the dense brute-force oracle: every
+    engine path must reproduce its indices bit-for-bit.
+    """
+    users = jnp.asarray(np.asarray(user_ids, np.int32))
+    h = None if hist is None else jnp.asarray(np.asarray(hist)[user_ids])
+    scores = mf.predict_all_items(
+        params, users, t_p, t_q, use_kernel=False, hist=h
+    )
+    idx = jnp.argsort(-scores, axis=1)[:, :topk].astype(jnp.int32)
+    return (
+        np.asarray(jnp.take_along_axis(scores, idx, axis=1)),
+        np.asarray(idx),
+    )
+
+
+# ---------------------------------------------------------------------------
+# End-to-end evaluation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RankingReport:
+    """Mean ranking metrics over the evaluated users (see module docstring
+    for the exact metric definitions)."""
+
+    topk: int
+    users: int      # evaluated users (non-empty relevance sets)
+    hr: float
+    ndcg: float
+    recall: float
+
+    def as_dict(self) -> Dict[str, float]:
+        """Flat summary for JSON reports (bench_eval, launch smoke jobs)."""
+        return {
+            "topk": self.topk,
+            "users": self.users,
+            f"hr_at_{self.topk}": self.hr,
+            f"ndcg_at_{self.topk}": self.ndcg,
+            f"recall_at_{self.topk}": self.recall,
+        }
+
+
+def report_from_sums(sums: Dict[str, float], topk: int) -> RankingReport:
+    """Reduce :func:`ranking_counts`-style metric sums (e.g. the output of
+    ``mf.eval_ranking_epoch_scan``) to a mean :class:`RankingReport`."""
+    denom = max(sums["weight_sum"], 1.0)
+    return RankingReport(
+        topk=topk,
+        users=int(sums["weight_sum"]),
+        hr=sums["hr_sum"] / denom,
+        ndcg=sums["ndcg_sum"] / denom,
+        recall=sums["recall_sum"] / denom,
+    )
+
+
+def _metrics_over_batches(rank_fn, users, relevant, counts, topk, batch_size):
+    """Shared reduction: rank each user batch, accumulate metric sums."""
+    sums = {"hr_sum": 0.0, "ndcg_sum": 0.0, "recall_sum": 0.0, "weight_sum": 0.0}
+    for lo in range(0, users.size, batch_size):
+        hi = min(lo + batch_size, users.size)
+        _, idx = rank_fn(users[lo:hi], topk)
+        out = _ranking_counts_jit(
+            jnp.asarray(np.asarray(idx, np.int32)),
+            jnp.asarray(relevant[lo:hi]),
+            jnp.asarray(counts[lo:hi]),
+        )
+        for key in sums:
+            sums[key] += float(out[key])
+    return report_from_sums(sums, topk)
+
+
+def _resolve_relevance(ds, relevance, min_rating, max_users, num_users):
+    """Relevance triple for the evaluators: the precomputed one, or built
+    from ``ds``; either way filtered to ids the model knows."""
+    if relevance is not None:
+        users, relevant, counts = relevance
+    else:
+        users, relevant, counts = relevance_from_dataset(
+            ds, min_rating=min_rating, max_users=max_users
+        )
+    known = users < num_users
+    return users[known], relevant[known], counts[known]
+
+
+def evaluate_engine(
+    engine,
+    ds=None,
+    topk: int = 10,
+    *,
+    mesh=None,
+    batch_size: int = 256,
+    min_rating: Optional[float] = None,
+    max_users: Optional[int] = None,
+    relevance: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None,
+) -> RankingReport:
+    """Ranking metrics of a live :class:`~repro.serving.engine.ServingEngine`.
+
+    Rankings come from the engine's real serving path — ``topk`` (streaming
+    or Pallas kernel, per the engine's ``use_kernel``), or ``topk_sharded``
+    when ``mesh`` is given — so the measurement includes exactly the pruned
+    layouts production requests see.  Metric sums reduce on device
+    (:func:`ranking_counts`); only the ``(B, topk)`` id matrix crosses the
+    host boundary per batch.  ``relevance`` accepts a precomputed
+    :func:`relevance_from_dataset` triple so repeated evaluations (e.g. a
+    pruned-vs-dense comparison, or a timed benchmark) pack the holdout once
+    instead of re-sorting the dataset per call.
+    """
+    users, relevant, counts = _resolve_relevance(
+        ds, relevance, min_rating, max_users, engine.num_users
+    )
+    if mesh is not None:
+        rank_fn = lambda u, k: engine.topk_sharded(u, k, mesh=mesh)
+    else:
+        rank_fn = engine.topk
+    return _metrics_over_batches(
+        rank_fn, users, relevant, counts, topk, batch_size
+    )
+
+
+def evaluate_oracle(
+    params: mf.MFParams,
+    ds=None,
+    topk: int = 10,
+    *,
+    t_p=0.0,
+    t_q=0.0,
+    hist: Optional[np.ndarray] = None,
+    batch_size: int = 256,
+    min_rating: Optional[float] = None,
+    max_users: Optional[int] = None,
+    relevance: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None,
+) -> RankingReport:
+    """Ranking metrics of the brute-force reference (:func:`dense_topk`).
+
+    At thresholds 0 this is the dense oracle the engine paths are pinned
+    against; at the trained ``(t_p, t_q)`` it isolates what pruning does to
+    ranking quality with no serving machinery in the loop.  ``relevance``
+    takes a precomputed :func:`relevance_from_dataset` triple, as in
+    :func:`evaluate_engine`.
+    """
+    users, relevant, counts = _resolve_relevance(
+        ds, relevance, min_rating, max_users, params.p.shape[0]
+    )
+
+    def rank_fn(u, k):
+        return dense_topk(params, u, k, t_p=t_p, t_q=t_q, hist=hist)
+
+    return _metrics_over_batches(
+        rank_fn, users, relevant, counts, topk, batch_size
+    )

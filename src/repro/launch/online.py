@@ -9,15 +9,17 @@ Runs the full freshness loop the online subsystem exists for:
 2. start the serving engine + async request queue and hammer it from
    ``--clients`` concurrent request threads for the whole run;
 3. stream held-out (or synthetic Poisson) events through the
-   :class:`~repro.online.updater.OnlineUpdater` — pruned row updates only;
+   :class:`~repro.online.updater.OnlineUpdater` — pruned row updates only,
+   each batch scored *prequentially* (test-then-learn, see
+   :mod:`repro.eval.prequential`) before it is applied;
 4. every ``--swap-every`` micro-batches, hot-swap the new factor version
    into the live engine (zero dropped requests) and write an async delta
    checkpoint.
 
 Exit status is non-zero if ANY request failed or was dropped during the run
 — the CI smoke contract.  A JSON report (throughput, swap latency, serving
-percentiles, work fraction, MAE before/after) lands on stdout and, with
-``--json``, on disk.
+percentiles, work fraction, prequential MAE/RMSE trajectory, MAE
+before/after) lands on stdout and, with ``--json``, on disk.
 """
 from __future__ import annotations
 
@@ -30,6 +32,7 @@ import numpy as np
 
 from repro.core.trainer import DPMFTrainer, TrainConfig
 from repro.data.ratings import paper_dataset, train_test_split
+from repro.eval import PrequentialEvaluator, recalibration_hook
 from repro.online import (
     OnlineUpdater,
     PoissonSource,
@@ -124,7 +127,16 @@ def run_online(args) -> dict:
     for t in threads:
         t.start()
 
-    # ---- the update loop ---------------------------------------------------
+    # ---- the update loop: prequential test-then-learn ----------------------
+    # every batch is scored by the pre-update model, THEN applied — the
+    # running MAE/RMSE is an always-fresh accuracy estimate of the online
+    # model, and the drift hook recalibrates off it (not a stale test set)
+    evaluator = PrequentialEvaluator(
+        updater, window=args.prequential_window
+    )
+    evaluator.add_drift_hook(
+        recalibration_hook(updater, min_events=args.prequential_window)
+    )
     swaps = []
     events = 0
     work_fractions = []
@@ -132,7 +144,7 @@ def run_online(args) -> dict:
     for b, batch in enumerate(
         iter_microbatches(source, args.batch_events, max_events=args.events)
     ):
-        metrics = updater.apply(batch)
+        metrics = evaluator.consume(batch)
         events += metrics["events"]
         work_fractions.append(metrics["work_fraction"])
         if (b + 1) % args.swap_every == 0:
@@ -143,6 +155,9 @@ def run_online(args) -> dict:
     swaps.append(publisher.publish())  # final flush
     stream_s = time.perf_counter() - t_stream
     publisher.close()
+    preq = evaluator.stats
+    print(f"# prequential: MAE {preq.mae:.4f} (window {preq.window_mae:.4f},"
+          f" ema {preq.ema_mae:.4f}) over {preq.events} events")
 
     stop.set()
     for t in threads:
@@ -165,6 +180,7 @@ def run_online(args) -> dict:
         "latency_ms_p99": float(np.percentile(lat_ms, 99)),
         "mae_before": mae_before,
         "mae_after": mae_after,
+        "prequential": preq.as_dict(),
         "num_users": engine.num_users,
         "num_items": engine.n_items,
     }
@@ -196,6 +212,8 @@ def main() -> None:
                         help="hot-swap every N micro-batches")
     parser.add_argument("--source", default="replay",
                         choices=["replay", "poisson"])
+    parser.add_argument("--prequential-window", type=int, default=256,
+                        help="windowed prequential MAE/RMSE span (events)")
     parser.add_argument("--new-id-prob", type=float, default=0.02,
                         help="cold-start id probability (poisson source)")
     parser.add_argument("--clients", type=int, default=4,

@@ -34,6 +34,9 @@ from repro.online.updater import OnlineUpdater, PublishSnapshot
 
 @dataclasses.dataclass
 class SwapReport:
+    """What one :meth:`SnapshotPublisher.publish` did (kept on
+    ``publisher.reports`` and aggregated by the launchers/benches)."""
+
     version: int
     swap_s: float               # wall time of the double-buffered swap
     touched_users: int

@@ -29,6 +29,8 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class Event:
+    """One interaction record on the stream's simulated clock."""
+
     user: int
     item: int
     rating: float

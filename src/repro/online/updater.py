@@ -181,14 +181,18 @@ class OnlineUpdater:
     # -- properties ----------------------------------------------------------
     @property
     def num_users(self) -> int:
+        """Current user-table rows (grows with cold-start events)."""
         return self.params.p.shape[0]
 
     @property
     def num_items(self) -> int:
+        """Current catalog size (grows with cold-start events)."""
         return self.params.q.shape[0]
 
     @property
     def mean_work_fraction(self) -> float:
+        """Mean executed share of dense MACs over the updater's lifetime —
+        the online analogue of the trainer's per-epoch work_fraction."""
         return self._work_sum / max(self.batches_applied, 1)
 
     @property

@@ -48,6 +48,7 @@ class LRUCache:
         self.misses = 0
 
     def get(self, key: Hashable):
+        """Return the cached value (refreshing its recency) or None."""
         with self._lock:
             if key in self._data:
                 self._data.move_to_end(key)
@@ -57,6 +58,8 @@ class LRUCache:
             return None
 
     def put(self, key: Hashable, value: Any) -> None:
+        """Insert/refresh ``key``, evicting the least-recent past capacity
+        (a zero-capacity cache silently drops every put)."""
         if self.capacity <= 0:
             return
         with self._lock:
@@ -122,6 +125,8 @@ class MicroBatcher:
         self._next_ticket = 0
 
     def submit(self, user_id: int) -> int:
+        """Enqueue one user's request; returns the ticket to look up in the
+        next :meth:`drain`'s result dict."""
         # Validate here, where only the offending request fails — a bad id
         # surfacing inside drain() would take every queued ticket with it.
         uid = int(user_id)

@@ -392,48 +392,64 @@ class ServingEngine:
     def from_checkpoint(
         cls, directory: str, *, step: Optional[int] = None, **kwargs
     ) -> "ServingEngine":
+        """Build an engine from a trainer checkpoint directory: restores the
+        full ``MFParams`` plus the trained thresholds
+        (:func:`load_mf_checkpoint`); ``kwargs`` pass to the constructor."""
         params, t_p, t_q, _, _ = load_mf_checkpoint(directory, step=step)
         return cls(params, t_p, t_q, **kwargs)
 
     # -- versioned state accessors ------------------------------------------
     @property
     def version(self) -> int:
+        """Monotonic version of the currently served snapshot (0 at load;
+        each :meth:`swap` increments it)."""
         return self._snap.version
 
     @property
     def params(self) -> mf.MFParams:
+        """Factor tables of the current snapshot."""
         return self._snap.params
 
     @property
     def t_p(self):
+        """User-side pruning threshold of the current snapshot."""
         return self._snap.t_p
 
     @property
     def t_q(self):
+        """Item-side pruning threshold of the current snapshot."""
         return self._snap.t_q
 
     @property
     def r_i(self):
+        """(n,) per-item effective ranks of the current snapshot."""
         return self._snap.r_i
 
     @property
     def num_users(self) -> int:
+        """User-table rows of the current snapshot (valid request ids are
+        ``[0, num_users)``)."""
         return self._snap.num_users
 
     @property
     def n_items(self) -> int:
+        """Catalog size of the current snapshot."""
         return self._snap.n_items
 
     @property
     def k(self) -> int:
+        """Latent dimension."""
         return self._snap.k
 
     @property
     def user_history(self) -> Optional[np.ndarray]:
+        """(m, H) SVD++ implicit-history matrix, or None for non-SVD++."""
         return self._snap.user_history
 
     @property
     def vector_cache(self) -> LRUCache:
+        """Hot-user vector LRU of the current snapshot (SVD++ only holds
+        entries; other variants use a zero-capacity cache)."""
         return self._snap.cache
 
     # -- hot swap ------------------------------------------------------------

@@ -137,10 +137,14 @@ class RequestQueue:
     # -- lifecycle -----------------------------------------------------------
     @property
     def closed(self) -> bool:
+        """True once :meth:`close` ran — the queue rejects new submits and
+        the engine's ``start()`` may build a fresh one."""
         with self._cond:
             return self._closed
 
     def start(self) -> None:
+        """Launch the scheduler thread (idempotent; ``start=False``
+        constructions call this, or drive :meth:`drain_once` manually)."""
         if self._thread is not None:
             return
         self._thread = threading.Thread(

@@ -1,0 +1,76 @@
+"""Documentation gates as tests: the public API of the serving/online/eval
+trees stays >= 80% docstring-covered, and intra-repo markdown links in
+README/docs/ROADMAP resolve — the same checks the CI docs job runs via
+``tools/check_docs.py``."""
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+from check_docs import check_links, doc_coverage  # noqa: E402
+
+GATED_TREES = [
+    os.path.join(REPO, "src", "repro", tree)
+    for tree in ("serving", "online", "eval")
+]
+LINKED_DOCS = [
+    os.path.join(REPO, name)
+    for name in ("README.md", "ROADMAP.md", "docs")
+]
+
+
+def test_docstring_coverage_gate():
+    documented, total, missing = doc_coverage(GATED_TREES)
+    assert total > 0
+    pct = 100.0 * documented / total
+    assert pct >= 80.0, (
+        f"public-API docstring coverage {pct:.1f}% < 80%; undocumented:\n"
+        + "\n".join(missing)
+    )
+
+
+def test_markdown_links_resolve():
+    broken = check_links(LINKED_DOCS)
+    assert not broken, "broken intra-repo links:\n" + "\n".join(broken)
+
+
+def test_link_checker_catches_breakage(tmp_path):
+    doc = tmp_path / "doc.md"
+    doc.write_text(
+        "[ok](doc.md) [web](https://example.com) [anchor](#x) "
+        "[bad](missing.md)"
+    )
+    broken = check_links([str(doc)])
+    assert broken == [f"{doc}: missing.md"]
+
+
+def test_coverage_counts_public_defs_only(tmp_path):
+    mod = tmp_path / "mod.py"
+    mod.write_text(
+        '"""module doc."""\n'
+        "def documented():\n"
+        '    """yes."""\n'
+        "def undocumented():\n"
+        "    pass\n"
+        "def _private():\n"
+        "    pass\n"
+        "class C:\n"
+        '    """doc."""\n'
+        "    def method(self):\n"
+        "        pass\n"
+    )
+    documented, total, missing = doc_coverage([str(mod)])
+    # module + documented() + undocumented() + C + C.method
+    assert total == 5
+    assert documented == 3
+    assert {m.rsplit(" ", 1)[1] for m in missing} == {
+        "undocumented", "C.method",
+    }
+
+
+@pytest.mark.parametrize("tree", GATED_TREES)
+def test_gated_trees_exist(tree):
+    assert os.path.isdir(tree)

@@ -1,0 +1,264 @@
+"""Prequential test-then-learn evaluation: ordering (an event never scores
+itself), exact agreement with an offline recompute, event-granular window
+semantics, EMA decay, drift hooks, and cold-start scoring."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import mf, threshold
+from repro.data import synthetic_ratings
+from repro.eval import PrequentialEvaluator, recalibration_hook
+from repro.eval.prequential import _EventWindow
+from repro.online import (
+    Event,
+    EventBatch,
+    IteratorSource,
+    OnlineUpdater,
+    ReplaySource,
+    iter_microbatches,
+)
+
+
+def _updater(m=40, n=200, k=8, lr=0.1, variant="funk", seed=0, **kwargs):
+    params = mf.init_params(jax.random.PRNGKey(seed), m, n, k,
+                            variant=variant, global_mean=3.0)
+    if variant == "svdpp":
+        kwargs.setdefault(
+            "user_history", np.full((m, 4), n, np.int32)  # all padding
+        )
+    return OnlineUpdater(params, t_p=0.0, t_q=0.0, lr=lr, **kwargs)
+
+
+def _batch(users, items, ratings):
+    return EventBatch(
+        user=np.asarray(users, np.int32),
+        item=np.asarray(items, np.int32),
+        rating=np.asarray(ratings, np.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# test-then-learn ordering
+# ---------------------------------------------------------------------------
+
+
+def test_event_never_influences_its_own_prediction():
+    upd = _updater(lr=0.5)  # big lr: pre/post predictions differ clearly
+    ev = PrequentialEvaluator(upd)
+    batch = _batch([3], [7], [5.0])
+    pre_pred, _ = mf.predict_pairs(
+        upd.params, jnp.asarray([3]), jnp.asarray([7]), 0.0, 0.0
+    )
+    pre_err = abs(5.0 - float(pre_pred[0]))
+    metrics = ev.consume(batch)
+    assert metrics["mae"] == pytest.approx(pre_err, abs=1e-6)
+    # the model DID move — scoring the same event again gives a new error
+    post_pred, _ = mf.predict_pairs(
+        upd.params, jnp.asarray([3]), jnp.asarray([7]), 0.0, 0.0
+    )
+    post_err = abs(5.0 - float(post_pred[0]))
+    assert abs(post_err - pre_err) > 1e-4
+    assert post_err < pre_err  # and toward the rating
+
+
+def test_svdpp_history_appended_after_scoring():
+    """The SVD++ implicit-set append is part of the update: the scored
+    prediction must use the PRE-event history (here: empty -> p_u alone)."""
+    upd = _updater(variant="svdpp", lr=0.3)
+    ev = PrequentialEvaluator(upd)
+    u, i = 5, 9
+    empty_hist = jnp.asarray(np.full((1, 4), upd.num_items, np.int32))
+    pre_pred, _ = mf.predict_pairs(
+        upd.params, jnp.asarray([u]), jnp.asarray([i]), 0.0, 0.0,
+        hist=empty_hist,
+    )
+    metrics = ev.consume(_batch([u], [i], [4.0]))
+    assert metrics["mae"] == pytest.approx(
+        abs(4.0 - float(pre_pred[0])), abs=1e-6
+    )
+    assert i in upd.user_history[u]  # appended, but only after scoring
+
+
+def test_cold_start_ids_are_scored_on_fresh_rows():
+    upd = _updater(m=10, n=20)
+    ev = PrequentialEvaluator(upd)
+    metrics = ev.consume(_batch([25], [40], [3.0]))  # both ids unseen
+    assert upd.num_users >= 26 and upd.num_items >= 41
+    assert np.isfinite(metrics["mae"])
+    assert ev.stats.events == 1
+
+
+# ---------------------------------------------------------------------------
+# offline recompute agreement (the acceptance bar: 1e-6)
+# ---------------------------------------------------------------------------
+
+
+def test_cumulative_mae_matches_offline_recompute():
+    ds = synthetic_ratings(num_users=30, num_items=120, num_ratings=900,
+                           seed=1)
+    upd = _updater(m=30, n=120, lr=0.05)
+    ev = PrequentialEvaluator(upd, window=64)
+    abs_sum = sq_sum = 0.0
+    count = 0
+    for batch in iter_microbatches(ReplaySource(ds, epochs=1), 64):
+        # offline recompute: same pruned forward pass, captured BEFORE the
+        # updater applies the batch
+        pred, _ = mf.predict_pairs(
+            upd.params, jnp.asarray(batch.user), jnp.asarray(batch.item),
+            upd.t_p, upd.t_q,
+        )
+        err = np.asarray(batch.rating, np.float64) - np.asarray(
+            pred, np.float64
+        )
+        abs_sum += float(np.abs(err).sum())
+        sq_sum += float((err * err).sum())
+        count += len(batch)
+        ev.consume(batch)
+    stats = ev.stats
+    assert stats.events == count == len(ds)
+    assert stats.mae == pytest.approx(abs_sum / count, abs=1e-6)
+    assert stats.rmse == pytest.approx(np.sqrt(sq_sum / count), abs=1e-6)
+
+
+def test_score_only_does_not_move_the_model():
+    upd = _updater()
+    ev = PrequentialEvaluator(upd)
+    p_before = np.asarray(upd.params.p).copy()
+    ev.score(_batch([1, 2], [3, 4], [5.0, 1.0]))
+    np.testing.assert_array_equal(p_before, np.asarray(upd.params.p))
+    assert ev.stats.events == 2
+    assert upd.events_seen == 0
+
+
+# ---------------------------------------------------------------------------
+# window + decay semantics
+# ---------------------------------------------------------------------------
+
+
+def test_event_window_is_event_granular():
+    win = _EventWindow(5)
+    win.extend(np.asarray([1.0, 2.0, 3.0]), np.zeros(3))
+    assert win.count == 3
+    assert win.means()[0] == pytest.approx(2.0)
+    win.extend(np.asarray([4.0, 5.0, 6.0]), np.zeros(3))  # evicts 1.0
+    assert win.count == 5
+    assert win.means()[0] == pytest.approx((2 + 3 + 4 + 5 + 6) / 5)
+    win.extend(np.arange(10, 17, dtype=np.float64), np.zeros(7))  # overflow
+    assert win.count == 5
+    assert win.means()[0] == pytest.approx((12 + 13 + 14 + 15 + 16) / 5)
+
+
+def test_window_forgets_old_errors_but_cumulative_remembers():
+    # lr=0: the model never moves, so errors are fully controlled by the
+    # ratings we synthesize from the model's own predictions
+    upd = _updater(lr=0.0)
+    ev = PrequentialEvaluator(upd, window=50, half_life_events=10.0)
+
+    def stream(n_events, offset, seed):
+        rng = np.random.default_rng(seed)
+        users = rng.integers(0, upd.num_users, n_events)
+        items = rng.integers(0, upd.num_items, n_events)
+        pred, _ = mf.predict_pairs(
+            upd.params, jnp.asarray(users, dtype=jnp.int32),
+            jnp.asarray(items, dtype=jnp.int32), 0.0, 0.0,
+        )
+        return _batch(users, items, np.asarray(pred) + offset)
+
+    for _ in range(4):
+        ev.consume(stream(25, 2.0, 7))     # phase 1: |err| = 2 exactly
+    assert ev.stats.window_mae == pytest.approx(2.0, abs=1e-5)
+    ev.consume(stream(25, 0.0, 8))         # phase 2: 50 zero-error events
+    ev.consume(stream(25, 0.0, 9))
+    stats = ev.stats
+    assert stats.window_events == 50
+    assert stats.window_mae == pytest.approx(0.0, abs=1e-6)   # window forgot
+    assert stats.mae == pytest.approx(2.0 * 100 / 150, abs=1e-5)  # lifetime
+    # EMA with a 10-event half-life has decayed ~2^-5 over phase 2 but not
+    # to zero — strictly between the window and the cumulative view
+    assert 0.0 < stats.ema_mae < stats.mae
+
+
+def test_ema_half_life():
+    upd = _updater(lr=0.0)
+    ev = PrequentialEvaluator(upd, half_life_events=100.0)
+    # constant-error stream: every view must agree (bias-corrected EMA too)
+    pred, _ = mf.predict_pairs(
+        upd.params, jnp.asarray([0]), jnp.asarray([0]), 0.0, 0.0
+    )
+    batch = _batch([0], [0], [float(pred[0]) + 1.5])
+    for _ in range(30):
+        ev.score(batch)
+    assert ev.stats.ema_mae == pytest.approx(1.5, abs=1e-6)
+    assert ev.stats.mae == pytest.approx(1.5, abs=1e-6)
+
+
+def test_bad_constructor_args():
+    upd = _updater()
+    with pytest.raises(ValueError):
+        PrequentialEvaluator(upd, window=0)
+    with pytest.raises(ValueError):
+        PrequentialEvaluator(upd, half_life_events=0.0)
+
+
+# ---------------------------------------------------------------------------
+# drift hooks
+# ---------------------------------------------------------------------------
+
+
+def test_recalibration_hook_fires_on_degradation():
+    m, n, k = 60, 300, 8
+    params = mf.init_params(jax.random.PRNGKey(3), m, n, k,
+                            init_method="libmf")
+    rate = 0.3
+    t_p, t_q = threshold.thresholds_from_matrices(params.p, params.q, rate)
+    upd = OnlineUpdater(params, t_p=t_p, t_q=t_q, lr=0.0,
+                        pruning_rate=rate)
+    ev = PrequentialEvaluator(upd, window=20, half_life_events=200.0)
+    hook = recalibration_hook(upd, degradation=1.5, min_events=40,
+                              cooldown_events=10)
+    ev.add_drift_hook(hook)
+
+    def batch(offset, seed):
+        rng = np.random.default_rng(seed)
+        users = rng.integers(0, m, 20)
+        items = rng.integers(0, n, 20)
+        pred, _ = mf.predict_pairs(
+            upd.params, jnp.asarray(users, dtype=jnp.int32),
+            jnp.asarray(items, dtype=jnp.int32), upd.t_p, upd.t_q,
+        )
+        return _batch(users, items, np.asarray(pred) + offset)
+
+    for s in range(4):
+        ev.consume(batch(0.1, s))     # healthy baseline
+    assert not hook.fired
+    ev.consume(batch(5.0, 99))        # windowed error spikes 50x
+    assert hook.fired                  # recalibration keyed off prequential
+    snap = upd.snapshot()
+    assert snap.full_rebuild           # thresholds re-solved + rearranged
+
+
+def test_hooks_called_with_stats_after_each_consume():
+    upd = _updater()
+    seen = []
+    ev = PrequentialEvaluator(upd, drift_hooks=[lambda s: seen.append(s)])
+    ev.consume(_batch([0, 1], [2, 3], [3.0, 4.0]))
+    ev.consume(_batch([2], [4], [2.0]))
+    assert [s.events for s in seen] == [2, 3]
+
+
+# ---------------------------------------------------------------------------
+# stream plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_consume_reports_update_and_eval_metrics():
+    upd = _updater()
+    ev = PrequentialEvaluator(upd)
+    source = IteratorSource([Event(1, 2, 4.0), Event(3, 4, 2.0)])
+    for batch in iter_microbatches(source, 2):
+        metrics = ev.consume(batch)
+    assert {"mae", "rmse", "events", "abs_err", "work_fraction"} <= set(
+        metrics
+    )
+    assert upd.events_seen == 2

@@ -1,0 +1,174 @@
+"""Documentation gates: docstring coverage + intra-repo link integrity.
+
+Two checks, both dependency-free (stdlib ``ast`` + ``re``) so they run in
+any environment the test suite runs in — the same gates the CI ``docs`` job
+enforces:
+
+* **docstring coverage** (interrogate-style): every module, public class,
+  and public function/method under the given source trees should carry a
+  docstring; the gate fails below ``--min-coverage`` percent.  Private
+  names (leading ``_``, dunders included) and nested defs are exempt —
+  the gate is about the *public API surface*.
+
+      python tools/check_docs.py --min-coverage 80 \
+          src/repro/serving src/repro/online src/repro/eval
+
+* **link integrity**: every relative ``[text](path)`` markdown link in the
+  given files/directories must resolve to an existing file in the repo
+  (anchors are stripped; absolute URLs are ignored).
+
+      python tools/check_docs.py --links README.md ROADMAP.md docs
+
+Both can run in one invocation; exit status is non-zero if either fails.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import sys
+from typing import Iterator, List, Tuple
+
+
+# ---------------------------------------------------------------------------
+# docstring coverage
+# ---------------------------------------------------------------------------
+
+
+def _python_files(paths: List[str]) -> Iterator[str]:
+    """Yield .py files under each path (files pass through as-is)."""
+    for path in paths:
+        if os.path.isfile(path):
+            yield path
+            continue
+        for root, _, names in sorted(os.walk(path)):
+            for name in sorted(names):
+                if name.endswith(".py"):
+                    yield os.path.join(root, name)
+
+
+def _public_defs(tree: ast.Module) -> Iterator[Tuple[str, ast.AST]]:
+    """Walk module/class bodies (not nested functions) yielding the public
+    definitions whose docstrings the gate counts."""
+    yield "module", tree
+    stack = [(None, node) for node in tree.body]
+    while stack:
+        prefix, node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if not node.name.startswith("_"):
+                yield _qual(prefix, node.name), node
+        elif isinstance(node, ast.ClassDef):
+            if not node.name.startswith("_"):
+                yield _qual(prefix, node.name), node
+                stack.extend(
+                    (_qual(prefix, node.name), child) for child in node.body
+                )
+
+
+def _qual(prefix, name: str) -> str:
+    return f"{prefix}.{name}" if prefix else name
+
+
+def doc_coverage(paths: List[str]) -> Tuple[int, int, List[str]]:
+    """Return ``(documented, total, missing)`` over the public definitions
+    of every Python file under ``paths``; ``missing`` holds
+    ``file:line name`` strings for each undocumented definition."""
+    documented = total = 0
+    missing: List[str] = []
+    for filename in _python_files(paths):
+        with open(filename) as f:
+            tree = ast.parse(f.read(), filename=filename)
+        for name, node in _public_defs(tree):
+            total += 1
+            if ast.get_docstring(node):
+                documented += 1
+            else:
+                line = getattr(node, "lineno", 1)
+                missing.append(f"{filename}:{line} {name}")
+    return documented, total, missing
+
+
+# ---------------------------------------------------------------------------
+# markdown link integrity
+# ---------------------------------------------------------------------------
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def _markdown_files(paths: List[str]) -> Iterator[str]:
+    for path in paths:
+        if os.path.isfile(path):
+            yield path
+            continue
+        for root, _, names in sorted(os.walk(path)):
+            for name in sorted(names):
+                if name.endswith(".md"):
+                    yield os.path.join(root, name)
+
+
+def check_links(paths: List[str]) -> List[str]:
+    """Return ``file: target`` strings for every relative markdown link
+    that does not resolve to an existing file or directory."""
+    broken: List[str] = []
+    for filename in _markdown_files(paths):
+        base = os.path.dirname(os.path.abspath(filename))
+        with open(filename) as f:
+            text = f.read()
+        for match in _LINK_RE.finditer(text):
+            target = match.group(1)
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:
+                continue
+            resolved = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(resolved):
+                broken.append(f"{filename}: {match.group(1)}")
+    return broken
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main() -> int:
+    """Run the configured gates; returns the process exit status."""
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("paths", nargs="*",
+                        help="source trees for the docstring-coverage gate")
+    parser.add_argument("--min-coverage", type=float, default=80.0,
+                        help="minimum docstring coverage percent")
+    parser.add_argument("--links", nargs="*", default=None, metavar="PATH",
+                        help="markdown files/dirs for the link gate")
+    args = parser.parse_args()
+    failed = False
+
+    if args.paths:
+        documented, total, missing = doc_coverage(args.paths)
+        pct = 100.0 * documented / max(total, 1)
+        print(f"docstring coverage: {documented}/{total} = {pct:.1f}% "
+              f"(gate: {args.min_coverage:.0f}%)")
+        if pct < args.min_coverage:
+            failed = True
+            print("undocumented public definitions:")
+            for entry in missing:
+                print(f"  {entry}")
+
+    if args.links is not None:
+        broken = check_links(args.links or ["."])
+        if broken:
+            failed = True
+            print("broken intra-repo markdown links:")
+            for entry in broken:
+                print(f"  {entry}")
+        else:
+            print("markdown links: all intra-repo targets resolve")
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
