@@ -1,0 +1,234 @@
+"""Serving fleet: routing policies, rolling refresh, delta compression.
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet [--full]
+
+Four claims, checked then timed:
+
+1. **lossless delta compression shrinks the wire** — one publish's
+   touched-row payload, compressed (byte-shuffle + DEFLATE) vs raw bytes;
+   the codec round trip is bit-exact (asserted) and its throughput is
+   timed;
+2. **cache-aware routing keeps replica caches hot** — the same
+   hot-user-skewed traffic through an affinity router vs a random router
+   over the same fleet (per-replica cache capacity sized *below* the hot
+   set, so random routing thrashes): hot-user cache hit rate must be
+   higher under affinity;
+3. **router throughput** — the same request mix through one engine vs a
+   routed local fleet (recorded, not asserted: in one CPU process the
+   replicas share cores, so this measures routing overhead, not scale-out);
+4. **rolling refresh doesn't drop requests** — latency p50/p99 of
+   concurrent traffic while the publisher ships rolling delta updates
+   across the fleet; zero failed requests asserted, every replica must
+   converge to the final published version.
+
+Emits the ``name,us_per_call,derived`` CSV contract and writes
+``BENCH_fleet.json`` (summary schema documented in
+``docs/architecture.md``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import jax
+
+from benchmarks.common import emit, reset_records, write_json
+from repro.core import mf
+from repro.distributed.compression import compress_array, decompress_array
+from repro.online import OnlineUpdater, PoissonSource, SnapshotPublisher, iter_microbatches
+from repro.serving import ServingEngine
+from repro.serving.fleet import ServingFleet, make_message
+
+
+def _hot_traffic(rng, num_users, n_requests, hot_users, hot_frac=0.8):
+    """Request stream where ``hot_frac`` of requests hit the hot set."""
+    hot = rng.random(n_requests) < hot_frac
+    users = rng.integers(0, num_users, n_requests)
+    users[hot] = hot_users[rng.integers(0, len(hot_users), int(hot.sum()))]
+    return users
+
+
+def _drive(frontend, users, topk, clients=8, timeout=60.0):
+    """Submit every user id through ``clients`` threads; returns
+    (wall_seconds, latencies_ms, failures)."""
+    latencies = np.empty(len(users))
+    failures = []
+
+    def one(iu):
+        i, u = iu
+        t0 = time.perf_counter()
+        try:
+            frontend.submit(int(u), topk, timeout=timeout).result(timeout)
+            latencies[i] = (time.perf_counter() - t0) * 1e3
+        except Exception as exc:  # noqa: BLE001 - any failure is a drop
+            latencies[i] = np.nan
+            failures.append(repr(exc))
+
+    start = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=clients) as pool:
+        list(pool.map(one, enumerate(users)))
+    return time.perf_counter() - start, latencies, failures
+
+
+def run(*, full: bool = False, smoke: bool = False) -> None:
+    """Run the fleet suite at smoke/default/full scale."""
+    reset_records()
+    if smoke:
+        m, n, k = 400, 3000, 16
+        n_requests, replicas = 200, 2
+        hot_set, cache_size = 96, 48
+        stream_batches = 4
+    elif full:
+        m, n, k = 8000, 60000, 32
+        n_requests, replicas = 2000, 4
+        hot_set, cache_size = 512, 128
+        stream_batches = 12
+    else:
+        m, n, k = 2000, 20000, 24
+        n_requests, replicas = 800, 3
+        hot_set, cache_size = 256, 96
+        stream_batches = 8
+    topk = 10
+    rng = np.random.default_rng(0)
+    summary = {}
+
+    # ---- 1. delta compression: wire bytes, ratio, round-trip ---------------
+    params = mf.init_params(jax.random.PRNGKey(0), m, n, k)
+    upd = OnlineUpdater(params, None, 0.0, 0.0, batch_size=256, seed=3)
+    src = PoissonSource(m, n, rate=1e4, seed=3)
+    for batch in iter_microbatches(src, 256, max_events=1024):
+        upd.apply(batch)
+    snap = upd.snapshot()
+    msg = make_message(snap, 1, 0, full=False, compress=True)
+    ratio = msg.raw_bytes / max(msg.wire_bytes, 1)
+    emit("fleet_delta_wire_KB", msg.wire_bytes / 1024.0,
+         f"raw_KB={msg.raw_bytes / 1024.0:.1f} ratio={ratio:.2f}")
+    rows = np.asarray(snap.params.q[:1024])
+    reps = 5
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        c = compress_array(rows)
+    t_c = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        back = decompress_array(c)
+    t_d = (time.perf_counter() - t0) / reps
+    assert np.array_equal(back, rows), "lossless codec must round-trip bit-exact"
+    emit("fleet_compress_MBps", rows.nbytes / t_c / 1e6 if t_c else 0.0,
+         f"decompress_MBps={rows.nbytes / t_d / 1e6:.0f}")
+    summary["wire_bytes"] = int(msg.wire_bytes)
+    summary["raw_bytes"] = int(msg.raw_bytes)
+    summary["compression_ratio"] = round(ratio, 3)
+
+    # ---- 2. affinity vs random routing: hot-user cache hit rate ------------
+    # SVD++ so the per-replica hot-user LRU is live; capacity below the hot
+    # set means a replica can only stay warm if the router keeps sending it
+    # the same users.
+    sv_params = mf.init_params(
+        jax.random.PRNGKey(1), m, n, k, variant="svdpp"
+    )
+    history = rng.integers(0, n, (m, 8)).astype(np.int32)
+    hot_users = rng.choice(m, hot_set, replace=False)
+    users = _hot_traffic(rng, m, n_requests, hot_users)
+    hit_rates = {}
+    for policy in ("affinity", "random"):
+        fleet = ServingFleet(
+            sv_params, 0.0, 0.0,
+            replicas=replicas, backend="local", user_history=history,
+            engine_kwargs={"cache_size": cache_size},
+            queue_kwargs={"linger_ms": 0.5},
+            router_kwargs={"policy": policy},
+        )
+        wall, lat, failures = _drive(fleet, users, topk)
+        stats = fleet.stats()
+        hits = sum(r["cache_hits"] for r in stats["replicas"])
+        misses = sum(r["cache_misses"] for r in stats["replicas"])
+        fleet.close()
+        assert not failures, f"{policy}: dropped requests {failures[:3]}"
+        rate = hits / max(hits + misses, 1)
+        hit_rates[policy] = rate
+        emit(f"fleet_route_{policy}_req_s", len(users) / wall,
+             f"cache_hit_rate={rate:.3f}")
+    summary["cache_hit_rate_affinity"] = round(hit_rates["affinity"], 4)
+    summary["cache_hit_rate_random"] = round(hit_rates["random"], 4)
+    summary["affinity_beats_random"] = bool(
+        hit_rates["affinity"] > hit_rates["random"]
+    )
+
+    # ---- 3. router throughput vs single engine -----------------------------
+    base = mf.init_params(jax.random.PRNGKey(2), m, n, k, variant="bias",
+                          global_mean=3.5)
+    mix = rng.integers(0, m, n_requests)
+    engine = ServingEngine(base, 0.0, 0.0)
+    engine.start(linger_ms=0.5)
+    engine.topk(mix[:8], topk)  # warm a bucket
+    wall_1, lat_1, failures = _drive(engine, mix, topk)
+    engine.stop()
+    assert not failures
+    emit("fleet_single_engine_req_s", n_requests / wall_1,
+         f"p99_ms={np.nanpercentile(lat_1, 99):.2f}")
+    fleet = ServingFleet(base, 0.0, 0.0, replicas=replicas, backend="local",
+                         queue_kwargs={"linger_ms": 0.5})
+    wall_r, lat_r, failures = _drive(fleet, mix, topk)
+    fleet.close()
+    assert not failures
+    emit("fleet_routed_req_s", n_requests / wall_r,
+         f"replicas={replicas} p99_ms={np.nanpercentile(lat_r, 99):.2f}")
+    summary["single_engine_req_s"] = round(n_requests / wall_1, 1)
+    summary["routed_req_s"] = round(n_requests / wall_r, 1)
+    summary["replicas"] = replicas
+
+    # ---- 4. rolling refresh under load -------------------------------------
+    upd = OnlineUpdater(base, None, 0.0, 0.0, batch_size=256, seed=5)
+    fleet = ServingFleet(base, 0.0, 0.0, replicas=replicas, backend="local",
+                         queue_kwargs={"linger_ms": 0.5})
+    pub = SnapshotPublisher(None, upd, compress=True)
+    pub.subscribe(fleet.router)
+    src = PoissonSource(m, n, rate=1e4, seed=5)
+    batches = list(iter_microbatches(src, 256,
+                                     max_events=256 * stream_batches))
+    swap_ms = []
+
+    def refresher():
+        for batch in batches:
+            upd.apply(batch)
+            t0 = time.perf_counter()
+            pub.publish()
+            swap_ms.append((time.perf_counter() - t0) * 1e3)
+
+    worker = __import__("threading").Thread(target=refresher, daemon=True)
+    worker.start()
+    wall, lat, failures = _drive(fleet, mix, topk)
+    worker.join(timeout=300)
+    versions = [r.version for r in fleet.replicas]
+    fleet.close()
+    assert not failures, f"rolling refresh dropped requests: {failures[:3]}"
+    assert all(v == pub.version for v in versions), (
+        f"fleet diverged: {versions} != published v{pub.version}"
+    )
+    emit("fleet_rolling_p99_ms", float(np.nanpercentile(lat, 99)),
+         f"p50_ms={np.nanpercentile(lat, 50):.2f} swaps={len(swap_ms)}")
+    emit("fleet_rolling_swap_ms_p50", float(np.percentile(swap_ms, 50)),
+         f"max={max(swap_ms):.1f}")
+    summary["rolling_p99_ms"] = round(float(np.nanpercentile(lat, 99)), 3)
+    summary["rolling_swaps"] = len(swap_ms)
+    summary["rolling_dropped"] = 0
+    summary["final_versions"] = versions
+    summary["zero_dropped"] = True
+
+    write_json("fleet", summary)
+
+
+def main() -> None:
+    """CLI entry point."""
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--full", action="store_true")
+    parser.add_argument("--smoke", action="store_true")
+    args = parser.parse_args()
+    run(full=args.full, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

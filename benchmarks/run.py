@@ -27,7 +27,7 @@ def main() -> None:
     parser.add_argument("--only", default=None,
                         help="comma-separated subset: "
                              "figures,kernels,roofline,serving,online,"
-                             "training,eval")
+                             "training,eval,fleet")
     parser.add_argument("--json-dir", default=None,
                         help="directory for the BENCH_<suite>.json reports "
                              "(default: $BENCH_JSON_DIR or CWD)")
@@ -39,6 +39,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_eval,
+        bench_fleet,
         bench_kernels,
         bench_online,
         bench_paper_figures,
@@ -56,6 +57,7 @@ def main() -> None:
         "online": bench_online.run,
         "training": bench_training.run,
         "eval": bench_eval.run,
+        "fleet": bench_fleet.run,
     }
     selected = (
         {s.strip() for s in args.only.split(",")} if args.only else set(suites)

@@ -20,6 +20,14 @@ Exit status is non-zero if ANY request failed or was dropped during the run
 — the CI smoke contract.  A JSON report (throughput, swap latency, serving
 percentiles, work fraction, prequential MAE/RMSE trajectory, MAE
 before/after) lands on stdout and, with ``--json``, on disk.
+
+With ``--replicas N`` (N > 1) the serving side becomes a fleet
+(``repro.serving.fleet``): N replica engines behind the cache-aware
+router, subscribed to the publisher's replication bus — every swap ships
+a compressed versioned delta and applies it **rolling** (one replica at a
+time), while the client threads keep hammering the router.  The same
+zero-failed-requests exit contract holds, plus the report asserts every
+replica converged to the published version.
 """
 from __future__ import annotations
 
@@ -68,16 +76,39 @@ def run_online(args) -> dict:
     updater = OnlineUpdater.from_trainer(
         trainer, batch_size=max(args.batch_events, 64)
     )
-    engine = ServingEngine(
-        trainer.params, trainer.t_p, trainer.t_q,
+    engine_kwargs = dict(
         use_kernel=True if args.use_kernel else None,
-        user_history=trainer.hist,
         block_n=args.block_n,
     )
+    fleet = None
+    if args.replicas > 1:
+        from repro.serving.fleet import ServingFleet
+
+        fleet = ServingFleet(
+            trainer.params, trainer.t_p, trainer.t_q,
+            replicas=args.replicas,
+            backend=args.replica_backend,
+            user_history=trainer.hist,
+            engine_kwargs=engine_kwargs,
+            queue_kwargs={"linger_ms": 1.0},
+            router_kwargs={"policy": args.routing},
+        )
+        frontend = fleet
+        engine = None
+        print(f"# fleet: {args.replicas} {args.replica_backend} replicas, "
+              f"routing={args.routing}")
+    else:
+        engine = ServingEngine(
+            trainer.params, trainer.t_p, trainer.t_q,
+            user_history=trainer.hist, **engine_kwargs,
+        )
+        frontend = engine
     publisher = SnapshotPublisher(
         engine, updater,
         checkpoint_dir=(args.ckpt + "/online") if args.ckpt else None,
     )
+    if fleet is not None:
+        publisher.subscribe(fleet.router)
 
     if args.source == "replay":
         source = ReplaySource(stream_ds, epochs=None, shuffle=True,
@@ -90,15 +121,17 @@ def run_online(args) -> dict:
             rating_min=ds.rating_min, rating_max=ds.rating_max,
         )
 
-    # warm the power-of-two buckets queue batches can land in, so the first
-    # in-flight requests measure serving, not compiles
-    warm_users = np.arange(min(engine.num_users, 8), dtype=np.int32)
-    for b in (1, 2, 4, 8):
-        if b <= len(warm_users):
-            engine.topk(warm_users[:b], args.topk)
+    if engine is not None:
+        # warm the power-of-two buckets queue batches can land in, so the
+        # first in-flight requests measure serving, not compiles
+        warm_users = np.arange(min(engine.num_users, 8), dtype=np.int32)
+        for b in (1, 2, 4, 8):
+            if b <= len(warm_users):
+                engine.topk(warm_users[:b], args.topk)
+        engine.start(linger_ms=1.0)
 
     # ---- concurrent request traffic over the whole stream window ----------
-    engine.start(linger_ms=1.0)
+    num_users = frontend.num_users
     stop = threading.Event()
     latencies: list = []
     failures: list = []
@@ -108,10 +141,10 @@ def run_online(args) -> dict:
     def client(seed: int) -> None:
         rng = np.random.default_rng(seed)
         while not stop.is_set():
-            user = int(rng.integers(0, engine.num_users))
+            user = int(rng.integers(0, num_users))
             t0 = time.perf_counter()
             try:
-                engine.submit(user, args.topk, timeout=30.0).result(timeout=60)
+                frontend.submit(user, args.topk, timeout=30.0).result(timeout=60)
                 dt = time.perf_counter() - t0
                 with lock:
                     ok[0] += 1
@@ -162,7 +195,11 @@ def run_online(args) -> dict:
     stop.set()
     for t in threads:
         t.join(timeout=120)
-    engine.stop()
+    fleet_stats = None if fleet is None else fleet.stats()
+    if engine is not None:
+        engine.stop()
+    else:
+        fleet.close()
 
     mae_after = updater.evaluate(test_ds)
     lat_ms = np.asarray(latencies) * 1e3 if latencies else np.zeros(1)
@@ -171,7 +208,9 @@ def run_online(args) -> dict:
         "event_rate_per_s": events / max(stream_s, 1e-9),
         "mean_work_fraction": float(np.mean(work_fractions)),
         "swaps": len(swaps),
-        "final_version": engine.version,
+        "final_version": (
+            engine.version if engine is not None else publisher.version
+        ),
         "swap_ms_p50": float(np.percentile([s.swap_s * 1e3 for s in swaps], 50)),
         "swap_ms_max": float(max(s.swap_s * 1e3 for s in swaps)),
         "requests_ok": ok[0],
@@ -181,9 +220,32 @@ def run_online(args) -> dict:
         "mae_before": mae_before,
         "mae_after": mae_after,
         "prequential": preq.as_dict(),
-        "num_users": engine.num_users,
-        "num_items": engine.n_items,
+        "num_users": num_users,
+        "num_items": updater.num_items,
     }
+    if fleet_stats is not None:
+        replica_versions = {
+            r["replica_id"]: r["version"] for r in fleet_stats["replicas"]
+        }
+        stale = [
+            rid for rid, v in replica_versions.items()
+            if v != publisher.version
+        ]
+        report.update({
+            "replicas": args.replicas,
+            "replica_backend": args.replica_backend,
+            "routing": fleet_stats["policy"],
+            "affinity_hits": fleet_stats["affinity_hits"],
+            "replica_versions": replica_versions,
+            "publisher_lag": publisher.lag(),
+            "wire_bytes_total": int(sum(s.wire_bytes for s in swaps)),
+            "wire_raw_bytes_total": int(sum(s.wire_raw_bytes for s in swaps)),
+        })
+        if stale:
+            failures.append(
+                f"replicas did not converge to v{publisher.version}: {stale}"
+            )
+            report["requests_failed"] = len(failures)
     if failures:
         report["failure_samples"] = failures[:5]
     return report
@@ -218,6 +280,16 @@ def main() -> None:
                         help="cold-start id probability (poisson source)")
     parser.add_argument("--clients", type=int, default=4,
                         help="concurrent request threads during the stream")
+    parser.add_argument("--replicas", type=int, default=1,
+                        help="serve through a fleet of N replica engines on "
+                             "the replication bus (1 = single engine)")
+    parser.add_argument("--replica-backend", choices=("local", "process"),
+                        default="local",
+                        help="fleet replicas in-process or as spawned "
+                             "multiprocessing children")
+    parser.add_argument("--routing", choices=("affinity", "least", "random"),
+                        default="affinity",
+                        help="fleet routing policy (see serving/fleet/router)")
     parser.add_argument("--topk", type=int, default=10)
     parser.add_argument("--block-n", type=int, default=1024)
     parser.add_argument("--use-kernel", action="store_true",

@@ -20,6 +20,13 @@ Traffic modes on top of the one-shot lookup:
 * ``--http PORT`` — a minimal event-loop server: every connection submits to
   the queue and blocks on its future, so concurrent HTTP clients coalesce
   into shared scoring launches.  ``GET /recommend?user=3&topk=10``.
+
+With ``--replicas N`` (N > 1) the same traffic modes run against a serving
+*fleet* instead of a single engine: N replica engines
+(``--replica-backend local`` in-process, ``process`` as spawned children)
+behind the cache-aware router (``repro.serving.fleet``), so ``--http``
+becomes the router's HTTP frontend and ``--concurrent`` measures routed
+throughput.  ``--routing`` selects the policy (affinity/least/random).
 """
 from __future__ import annotations
 
@@ -37,46 +44,70 @@ from repro.serving import (
 )
 
 
-def run_concurrent(engine: ServingEngine, n_requests: int, clients: int,
+def _shutdown(frontend) -> None:
+    """Graceful drain for either frontend kind: ``ServingEngine.stop`` or
+    ``ServingFleet.close`` — both complete in-flight requests first."""
+    if isinstance(frontend, ServingEngine):
+        frontend.stop()
+    else:
+        frontend.close()
+
+
+def run_concurrent(frontend, n_requests: int, clients: int,
                    topk: int, timeout: float) -> None:
-    """Drive the async queue from ``clients`` submitter threads."""
+    """Drive the async frontend (one engine, or a routed fleet) from
+    ``clients`` submitter threads."""
     from concurrent.futures import ThreadPoolExecutor
 
-    queue = engine.start(linger_ms=1.0, max_pending=max(1024, n_requests))
+    queue = None
     rng = np.random.default_rng(0)
-    users = rng.integers(0, engine.num_users, n_requests)
-    # warm every power-of-two bucket a batch can land in
-    for b in (1, 2, 4, 8, 16, 32, 64):
-        if b <= min(engine.max_batch, n_requests):
-            engine.topk(users[:b], topk)
+    users = rng.integers(0, frontend.num_users, n_requests)
+    if isinstance(frontend, ServingEngine):
+        queue = frontend.start(linger_ms=1.0,
+                               max_pending=max(1024, n_requests))
+        # warm every power-of-two bucket a batch can land in
+        for b in (1, 2, 4, 8, 16, 32, 64):
+            if b <= min(frontend.max_batch, n_requests):
+                frontend.topk(users[:b], topk)
 
     latencies = np.empty(n_requests)
 
     def client(i_u):
         i, u = i_u
         t0 = time.perf_counter()
-        engine.submit(int(u), topk, timeout=timeout).result(timeout=timeout)
+        frontend.submit(int(u), topk, timeout=timeout).result(timeout=timeout)
         latencies[i] = time.perf_counter() - t0
 
     start = time.perf_counter()
     with ThreadPoolExecutor(max_workers=clients) as pool:
         list(pool.map(client, enumerate(users)))
     wall = time.perf_counter() - start
-    engine.stop()
+    stats = None if queue is not None else frontend.stats()
+    _shutdown(frontend)
     p50, p99 = np.percentile(latencies * 1e3, [50, 99])
-    print(f"concurrent: {n_requests} requests, {clients} clients in "
-          f"{wall:.3f}s ({n_requests / wall:.1f} req/s; p50 {p50:.2f} ms, "
-          f"p99 {p99:.2f} ms; {queue.batches_served} launches, "
-          f"mean batch {queue.requests_served / queue.batches_served:.1f})")
+    line = (f"concurrent: {n_requests} requests, {clients} clients in "
+            f"{wall:.3f}s ({n_requests / wall:.1f} req/s; p50 {p50:.2f} ms, "
+            f"p99 {p99:.2f} ms")
+    if queue is not None:
+        line += (f"; {queue.batches_served} launches, mean batch "
+                 f"{queue.requests_served / queue.batches_served:.1f})")
+    else:
+        line += (f"; routed over {len(stats['replicas'])} replicas, "
+                 f"policy={stats['policy']}, "
+                 f"affinity hits {stats['affinity_hits']})")
+    print(line)
 
 
-def run_http(engine: ServingEngine, port: int, topk_default: int,
+def run_http(frontend, port: int, topk_default: int,
              timeout: float) -> None:
-    """Blocking HTTP front end over the async queue (stdlib only)."""
+    """Blocking HTTP front end over the async queue — or, for a fleet, over
+    the router (stdlib only).  Shutdown drains: in-flight requests complete
+    before the process exits."""
     from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
     from urllib.parse import parse_qs, urlparse
 
-    engine.start(linger_ms=1.0)
+    if isinstance(frontend, ServingEngine):
+        frontend.start(linger_ms=1.0)
 
     class Handler(BaseHTTPRequestHandler):
         def log_message(self, fmt, *args):  # quiet access log
@@ -98,7 +129,7 @@ def run_http(engine: ServingEngine, port: int, topk_default: int,
             try:
                 user = int(qs["user"][0])
                 topk = int(qs.get("topk", [topk_default])[0])
-                scores, items = engine.submit(
+                scores, items = frontend.submit(
                     user, topk, timeout=timeout
                 ).result(timeout=timeout)
             except (KeyError, ValueError, IndexError) as exc:
@@ -124,7 +155,7 @@ def run_http(engine: ServingEngine, port: int, topk_default: int,
         pass
     finally:
         server.server_close()
-        engine.stop()
+        _shutdown(frontend)
 
 
 def main() -> None:
@@ -150,6 +181,17 @@ def main() -> None:
     parser.add_argument("--history", default=None,
                         help="(.npy) padded per-user item-history matrix for "
                              "SVD++ checkpoints (see data.build_user_history)")
+    parser.add_argument("--replicas", type=int, default=1,
+                        help="serve through a fleet of N replica engines "
+                             "behind the cache-aware router (1 = single "
+                             "engine, the classic path)")
+    parser.add_argument("--replica-backend", choices=("local", "process"),
+                        default="local",
+                        help="fleet replicas in-process or as spawned "
+                             "multiprocessing children")
+    parser.add_argument("--routing", choices=("affinity", "least", "random"),
+                        default="affinity",
+                        help="fleet routing policy (see serving/fleet/router)")
     args = parser.parse_args()
 
     params, t_p, t_q, _, meta = load_mf_checkpoint(args.ckpt)
@@ -158,12 +200,13 @@ def main() -> None:
         print("# warning: SVD++ checkpoint served without --history — "
               "implicit factors contribute nothing (user vectors fall back "
               "to p alone)")
-    engine = ServingEngine(
-        params, t_p, t_q,
+    engine_kwargs = dict(
         max_batch=args.max_batch,
         use_kernel=True if args.use_kernel else None,
-        user_history=user_history,
         allow_missing_history=True,
+    )
+    engine = ServingEngine(
+        params, t_p, t_q, user_history=user_history, **engine_kwargs
     )
     variant = (
         "svdpp" if params.implicit is not None
@@ -173,8 +216,24 @@ def main() -> None:
     print(f"# loaded step {meta.get('step')} variant={variant} "
           f"({engine.num_users} users x {engine.n_items} items, k={engine.k})")
 
+    frontend = engine
+    if args.replicas > 1:
+        from repro.serving.fleet import ServingFleet
+
+        frontend = ServingFleet(
+            params, t_p, t_q,
+            replicas=args.replicas,
+            backend=args.replica_backend,
+            user_history=user_history,
+            engine_kwargs=engine_kwargs,
+            queue_kwargs={"linger_ms": 1.0},
+            router_kwargs={"policy": args.routing},
+        )
+        print(f"# fleet: {args.replicas} {args.replica_backend} replicas, "
+              f"routing={args.routing}")
+
     if args.http:
-        return run_http(engine, args.http, args.topk, args.timeout)
+        return run_http(frontend, args.http, args.topk, args.timeout)
 
     recs = engine.recommend(args.users, topk=args.topk)
     print(json.dumps({str(u): r for u, r in zip(args.users, recs)}, indent=2))
@@ -192,8 +251,10 @@ def main() -> None:
               f"({args.batched_requests / dt:.1f} req/s)")
 
     if args.concurrent:
-        run_concurrent(engine, args.concurrent, args.clients, args.topk,
+        run_concurrent(frontend, args.concurrent, args.clients, args.topk,
                        args.timeout)
+    elif frontend is not engine:
+        frontend.close()
 
 
 if __name__ == "__main__":

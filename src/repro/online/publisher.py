@@ -1,4 +1,4 @@
-"""Versioned factor publication: updater -> serving engine, without downtime.
+"""Versioned factor publication: updater -> serving engine(s), without downtime.
 
 :class:`SnapshotPublisher` drains the updater's accumulated delta
 (:meth:`OnlineUpdater.snapshot`) and pushes it into a running
@@ -8,6 +8,18 @@ version they started on; the hot-user LRU and the catalog tile layouts are
 invalidated/patched for the touched rows only (a full rebuild only after
 threshold recalibration, a latent rearrange, or catalog growth).
 
+The publisher is also the **replication bus** for a serving fleet
+(``serving/fleet``): :meth:`subscribe` registers any sink exposing
+``apply_update(msg) -> ack`` (a replica, or a router fanning out to many),
+and every :meth:`publish` ships one versioned
+:class:`~repro.serving.fleet.bus.DeltaMessage` — touched rows only,
+losslessly compressed, ``kind=full`` after recalibration — to each
+subscriber **in order** (rolling: at most one replica is mid-swap at any
+instant, so the fleet never dips below N-1 fully-live replicas).  Acked
+versions are tracked per subscriber; a subscriber that falls behind
+(missed/failed delivery) is healed by forcing the next publish to
+``kind=full``, which its version gate can always apply.
+
 Durability rides along as **delta checkpoints**: instead of serializing the
 full factor tables per swap, the publisher writes only the touched rows
 (plus thresholds and bookkeeping) through the existing
@@ -16,13 +28,16 @@ overlaps the next update batches exactly as training checkpoints overlap
 epochs.  ``kind=full`` checkpoints are written whenever a delta cannot
 describe the change (recalibration permuted the latent axis).
 :func:`fold_deltas` replays a delta chain over a base checkpoint and
-returns the reconstructed state — the restart path for an online job.
+returns the reconstructed state — the restart path for an online job and
+the catch-up path for a replica joining the fleet late.  Checkpoint steps
+and wire versions share one number line: a replica reconstructed by
+:func:`fold_deltas` at step ``v`` can join the live bus at version ``v``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -38,21 +53,29 @@ class SwapReport:
     ``publisher.reports`` and aggregated by the launchers/benches)."""
 
     version: int
-    swap_s: float               # wall time of the double-buffered swap
+    swap_s: float               # wall time of the swap + rolling fan-out
     touched_users: int
     touched_items: int
     full_rebuild: bool
     events_seen: int
     checkpoint_step: Optional[int] = None
+    kind: str = "delta"                       # wire/checkpoint payload kind
+    acked: Optional[Dict[str, int]] = None    # per-subscriber acked version
+    wire_bytes: int = 0                       # compressed message payload
+    wire_raw_bytes: int = 0                   # uncompressed equivalent
 
 
 class SnapshotPublisher:
-    """Publish updater snapshots into a live engine, optionally checkpointing.
+    """Publish updater snapshots into live engines, optionally checkpointing.
 
-    ``checkpoint_dir`` enables async delta checkpoints (one per publish,
-    step = engine version, ``keep`` retention on top of whatever full
-    checkpoints the chain needs).  The publisher never stops the engine:
-    :meth:`publish` is safe under concurrent request traffic.
+    ``engine`` is the co-located primary (swapped directly, no serialization)
+    and may be ``None`` for a fleet-only topology where every engine is a
+    subscriber.  ``checkpoint_dir`` enables async delta checkpoints (one per
+    publish, step = publish version, ``keep`` retention on top of whatever
+    full checkpoints the chain needs).  ``compress`` turns lossless
+    byte-shuffle+DEFLATE row compression on for shipped messages (bit-exact;
+    see ``distributed/compression.py``).  The publisher never stops an
+    engine: :meth:`publish` is safe under concurrent request traffic.
     """
 
     def __init__(
@@ -62,10 +85,12 @@ class SnapshotPublisher:
         *,
         checkpoint_dir: Optional[str] = None,
         keep: int = 8,
+        compress: bool = True,
     ):
         self.engine = engine
         self.updater = updater
         self.keep = keep
+        self.compress = compress
         self._ckpt = (
             ckpt_lib.AsyncCheckpointer(checkpoint_dir, keep=keep)
             if checkpoint_dir
@@ -85,58 +110,135 @@ class SnapshotPublisher:
             if frontier is not None:
                 self._last_step = frontier
                 self._force_full_next = True
+        # Wire versions share the checkpoint step number line (0 when no
+        # chain exists yet), so fold_deltas-reconstructed replicas can join
+        # the live bus without translation.
+        self._version = self._last_step
+        self.subscribers: List = []
+        self.acked: Dict[str, int] = {}
         self.reports: list = []
 
+    # -- replication bus ------------------------------------------------------
+    @property
+    def version(self) -> int:
+        """Version of the most recently published snapshot (and the step of
+        its checkpoint, when checkpointing is on)."""
+        return self._version
+
+    def subscribe(self, sink, *, name: Optional[str] = None):
+        """Register a replication sink: anything exposing
+        ``apply_update(msg)`` returning either an acked version (int) or a
+        ``{replica_id: version}`` dict (a router fanning out to a fleet).
+        Sinks are shipped to in subscription order — the rolling order.
+        A sink whose current version is behind the bus (a late joiner that
+        caught up from checkpoints, or a fresh replica at version 0) is
+        healed by the next publish going out ``kind=full``.  Returns the
+        sink for chaining."""
+        self.subscribers.append(sink)
+        sink_name = name or getattr(sink, "replica_id", None)
+        if sink_name is not None:
+            self.acked[sink_name] = int(getattr(sink, "version", 0))
+        return sink
+
+    def lag(self) -> int:
+        """Worst-case subscriber staleness in publish versions (0 = every
+        subscriber acked the latest publish)."""
+        if not self.acked:
+            return 0
+        return self._version - min(self.acked.values())
+
+    def _record_ack(self, sink, ack) -> None:
+        if isinstance(ack, dict):
+            for rid, v in ack.items():
+                self.acked[str(rid)] = int(v)
+        else:
+            name = getattr(sink, "replica_id", None)
+            self.acked[str(name) if name is not None else f"sink{id(sink)}"] = int(ack)
+
     def publish(self) -> SwapReport:
-        """One snapshot -> swap -> (async) checkpoint cycle."""
+        """One snapshot -> swap -> rolling fan-out -> (async) checkpoint
+        cycle."""
         snap = self.updater.snapshot()
-        start = time.perf_counter()
-        version = self.engine.swap(
-            snap.params,
-            snap.t_p,
-            snap.t_q,
-            touched_users=None if snap.full_rebuild else snap.touched_users,
-            touched_items=None if snap.full_rebuild else snap.touched_items,
-            touched_implicit_items=snap.touched_implicit_items,
-            user_history=snap.user_history,
+        self._version += 1
+        version = self._version
+        # A full payload is needed whenever a row delta cannot describe the
+        # change (recalibration), the chain restarts (first post-resume
+        # checkpoint), retention would orphan the delta chain, or a
+        # subscriber is behind by more than this one delta (gap: its gate
+        # would buffer the delta forever).
+        full = (
+            snap.full_rebuild
+            or self._force_full_next
+            or (
+                self._ckpt is not None
+                and version - self._last_full_step >= max(self.keep - 1, 1)
+            )
+            or any(a < version - 1 for a in self.acked.values())
         )
+
+        start = time.perf_counter()
+        engine_version = None
+        if self.engine is not None:
+            engine_version = self.engine.swap(
+                snap.params,
+                snap.t_p,
+                snap.t_q,
+                touched_users=None if snap.full_rebuild else snap.touched_users,
+                touched_items=None if snap.full_rebuild else snap.touched_items,
+                touched_implicit_items=snap.touched_implicit_items,
+                user_history=snap.user_history,
+            )
+
+        msg = None
+        acked = None
+        if self.subscribers:
+            from repro.serving.fleet import bus
+
+            msg = bus.make_message(
+                snap, version, version - 1,
+                full=full, compress=self.compress,
+            )
+            # Rolling: ship to one subscriber at a time, in order, waiting
+            # for each ack — at most one replica is mid-swap at any instant.
+            for sink in self.subscribers:
+                self._record_ack(sink, sink.apply_update(msg))
+            acked = dict(self.acked)
         swap_s = time.perf_counter() - start
+
         step = None
         if self._ckpt is not None:
-            step = self._last_step + 1
-            # Keep-N retention deletes the oldest steps; a delta whose
-            # predecessors were GC'd is unusable.  Writing a full anchor at
-            # least every keep-1 publishes guarantees the surviving window
-            # always contains one, so fold_deltas always has a valid chain.
-            full = (
-                snap.full_rebuild
-                or self._force_full_next
-                or step - self._last_full_step >= max(self.keep - 1, 1)
-            )
+            step = version
             self._ckpt.save(
                 step,
                 _delta_tree(snap, full=full),
                 metadata={
                     "kind": "full" if full else "delta",
                     "prev_step": self._last_step,
-                    "version": version,
+                    "version": (
+                        engine_version if engine_version is not None else version
+                    ),
                     "events_seen": snap.events_seen,
+                    "snapshot_id": snap.snapshot_id,
                     "num_users": snap.params.p.shape[0],
                     "num_items": snap.params.q.shape[0],
                 },
             )
             self._last_step = step
-            self._force_full_next = False
             if full:
                 self._last_full_step = step
+        self._force_full_next = False
         report = SwapReport(
-            version=version,
+            version=engine_version if engine_version is not None else version,
             swap_s=swap_s,
             touched_users=len(snap.touched_users),
             touched_items=len(snap.touched_items),
             full_rebuild=snap.full_rebuild,
             events_seen=snap.events_seen,
             checkpoint_step=step,
+            kind="full" if full else "delta",
+            acked=acked,
+            wire_bytes=0 if msg is None else msg.wire_bytes,
+            wire_raw_bytes=0 if msg is None else msg.raw_bytes,
         )
         self.reports.append(report)
         return report
@@ -148,7 +250,7 @@ class SnapshotPublisher:
 
 
 # ---------------------------------------------------------------------------
-# Delta checkpoint format
+# Delta checkpoint format (shared with the wire format in serving/fleet/bus)
 # ---------------------------------------------------------------------------
 
 
@@ -158,7 +260,8 @@ def _delta_tree(snap: PublishSnapshot, *, full: bool) -> dict:
     ``kind=delta``: touched row indices + their current values — O(touched)
     bytes.  ``kind=full``: the whole params — required after a
     recalibration/rearrange (a row delta cannot express a latent-axis
-    permutation) and written periodically as a retention anchor.
+    permutation) and written periodically as a retention anchor.  The same
+    tree, flattened, is the fleet wire format (``fleet/bus.make_message``).
     """
     params = snap.params
     if full:
@@ -225,6 +328,58 @@ def _grow_like(params: mf.MFParams, num_users: int, num_items: int) -> mf.MFPara
     return out
 
 
+def apply_delta_tree(
+    params: mf.MFParams,
+    t_p,
+    t_q,
+    history: Optional[np.ndarray],
+    tree: dict,
+    *,
+    kind: str,
+    num_users: int,
+    num_items: int,
+) -> Tuple[mf.MFParams, jnp.ndarray, jnp.ndarray, Optional[np.ndarray]]:
+    """Fold one delta/full payload tree into ``(params, t_p, t_q, history)``.
+
+    The single applier both readers share: :func:`fold_deltas` feeds it
+    checkpoint trees off disk, the fleet's replicas
+    (``serving/fleet/bus.apply_message``) feed it decompressed wire
+    payloads — so a replica that replays the chain and a replica that
+    followed the live bus end bitwise identical.
+    """
+    if kind == "full":
+        params = mf.params_from_flat(tree)
+    else:
+        params = _grow_like(params, num_users, num_items)
+        u = jnp.asarray(tree["user_idx"], jnp.int32)
+        i = jnp.asarray(tree["item_idx"], jnp.int32)
+        params = params._replace(
+            p=params.p.at[u].set(jnp.asarray(tree["p_rows"])),
+            q=params.q.at[i].set(jnp.asarray(tree["q_rows"])),
+        )
+        if "user_bias_rows" in tree and params.user_bias is not None:
+            params = params._replace(
+                user_bias=params.user_bias.at[u].set(
+                    jnp.asarray(tree["user_bias_rows"])
+                ),
+                item_bias=params.item_bias.at[i].set(
+                    jnp.asarray(tree["item_bias_rows"])
+                ),
+            )
+        if "implicit_idx" in tree and params.implicit is not None:
+            y = jnp.asarray(tree["implicit_idx"], jnp.int32)
+            params = params._replace(
+                implicit=params.implicit.at[y].set(
+                    jnp.asarray(tree["implicit_rows"])
+                )
+            )
+    t_p = jnp.asarray(tree["t_p"], jnp.float32)
+    t_q = jnp.asarray(tree["t_q"], jnp.float32)
+    if "user_history" in tree:
+        history = np.asarray(tree["user_history"])
+    return params, t_p, t_q, history
+
+
 def fold_deltas(
     directory: str,
     params: mf.MFParams,
@@ -238,8 +393,10 @@ def fold_deltas(
 
     Steps are applied ascending, skipping anything at or below ``from_step``.
     Returns ``(params, t_p, t_q, user_history, last_step)`` — the state a
-    restarted online job resumes from.  The base state comes from the
-    training checkpoint (``serving.load_mf_checkpoint``).
+    restarted online job resumes from, and the state a replica joining the
+    fleet late catches up to (its version gate then starts at ``last_step``).
+    The base state comes from the training checkpoint
+    (``serving.load_mf_checkpoint``).
 
     Keep-N retention may have deleted old deltas; replay therefore anchors
     on the latest surviving ``kind=full`` checkpoint (which subsumes
@@ -268,39 +425,11 @@ def fold_deltas(
                     f"{prev} but replay state is at {last} (retention "
                     "deleted intermediate deltas?)"
                 )
-        if kind == "full":
-            params = mf.params_from_flat(tree)
-        else:
-            params = _grow_like(
-                params, int(meta["num_users"]), int(meta["num_items"])
-            )
-            u = jnp.asarray(tree["user_idx"], jnp.int32)
-            i = jnp.asarray(tree["item_idx"], jnp.int32)
-            params = params._replace(
-                p=params.p.at[u].set(jnp.asarray(tree["p_rows"])),
-                q=params.q.at[i].set(jnp.asarray(tree["q_rows"])),
-            )
-            if "user_bias_rows" in tree and params.user_bias is not None:
-                params = params._replace(
-                    user_bias=params.user_bias.at[u].set(
-                        jnp.asarray(tree["user_bias_rows"])
-                    ),
-                    item_bias=params.item_bias.at[i].set(
-                        jnp.asarray(tree["item_bias_rows"])
-                    ),
-                )
-            if "implicit_idx" in tree and params.implicit is not None:
-                y = jnp.asarray(tree["implicit_idx"], jnp.int32)
-                params = params._replace(
-                    implicit=params.implicit.at[y].set(
-                        jnp.asarray(tree["implicit_rows"])
-                    )
-                )
-        t_p = jnp.asarray(tree["t_p"], jnp.float32)
-        t_q = jnp.asarray(tree["t_q"], jnp.float32)
-        if "user_history" in tree:
-            history = np.asarray(tree["user_history"])
+        params, t_p, t_q, history = apply_delta_tree(
+            params, t_p, t_q, history, tree,
+            kind=kind,
+            num_users=int(meta.get("num_users", params.p.shape[0])),
+            num_items=int(meta.get("num_items", params.q.shape[0])),
+        )
         last = step
     return params, t_p, t_q, history, last
-
-

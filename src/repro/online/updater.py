@@ -53,6 +53,7 @@ class PublishSnapshot:
     user_history: Optional[np.ndarray]
     full_rebuild: bool          # thresholds/permutation/geometry changed
     events_seen: int            # cumulative over the updater's lifetime
+    snapshot_id: int = 0        # monotonic per updater; publisher/bus audit
 
 
 class OnlineUpdater:
@@ -157,6 +158,7 @@ class OnlineUpdater:
         self._touched_implicit: Set[int] = set()
         self._layout_dirty = False
         self.events_seen = 0
+        self.snapshots_taken = 0
         self.batches_applied = 0
         self._work_sum = 0.0
         self._abs_err_sum = 0.0
@@ -535,6 +537,7 @@ class OnlineUpdater:
         """Freeze the accumulated delta for publication and reset the
         touched-row bookkeeping.  The history matrix is copied so the
         updater can keep appending while the engine serves the snapshot."""
+        self.snapshots_taken += 1
         snap = PublishSnapshot(
             params=self.params,
             t_p=self.t_p,
@@ -557,6 +560,7 @@ class OnlineUpdater:
             ),
             full_rebuild=self._layout_dirty,
             events_seen=self.events_seen,
+            snapshot_id=self.snapshots_taken,
         )
         self._touched_users.clear()
         self._touched_items.clear()

@@ -368,6 +368,7 @@ class ServingEngine:
         self._sharded_fns = {}
         self._queue = None  # async frontend, created by start()/submit()
         self._queue_lock = threading.Lock()  # guards _queue transitions
+        self._stopping = False               # stop() drain in progress
         self._swap_lock = threading.Lock()   # serializes swap() builders
 
     @staticmethod
@@ -919,21 +920,44 @@ class ServingEngine:
         inside a deadline bucket (lower = sooner; see ``serving/queue.py``).
         Starts a default queue on first use; call :meth:`start` first to
         configure it.  Safe from any thread (first-submit races resolve to
-        one shared queue)."""
+        one shared queue).  While :meth:`stop` is draining, new submits are
+        rejected with ``RuntimeError`` — they must NOT resurrect a fresh
+        queue mid-shutdown (the pre-fix behaviour: a zombie queue nobody
+        owned, whose futures stranded forever at process exit)."""
         with self._queue_lock:
+            if self._stopping:
+                raise RuntimeError("engine is stopping; request rejected")
             if self._queue is None or self._queue.closed:
                 self._start_locked()
             queue = self._queue
         return queue.submit(user_id, topk, timeout=timeout, priority=priority)
 
-    def stop(self) -> None:
-        """Drain and stop the async pipeline.  Idempotent: a second stop (or
-        stop before any start) is a no-op; :meth:`start`/:meth:`submit` work
-        again afterwards."""
+    @property
+    def queue_depth(self) -> int:
+        """Requests currently queued or being scored by the async frontend
+        (0 when no queue is attached) — the fleet router's load signal."""
         with self._queue_lock:
+            queue = self._queue
+        return 0 if queue is None or queue.closed else queue.depth
+
+    def stop(self) -> None:
+        """Drain and stop the async pipeline: every request already accepted
+        completes (scored, expired, or failed — never stranded) before this
+        returns.  Concurrent :meth:`submit` calls during the drain are
+        rejected instead of auto-starting a new queue.  Idempotent: a second
+        stop (or stop before any start) is a no-op; :meth:`start` /
+        :meth:`submit` work again afterwards."""
+        with self._queue_lock:
+            if self._stopping:
+                return  # another thread's stop() owns the drain
             queue, self._queue = self._queue, None
-        if queue is not None:
-            queue.close()  # outside the lock: close() joins the scheduler
+            self._stopping = True
+        try:
+            if queue is not None:
+                queue.close()  # outside the lock: close() joins the scheduler
+        finally:
+            with self._queue_lock:
+                self._stopping = False
 
     # -- convenience ---------------------------------------------------------
     def recommend(self, user_ids, topk: int = 10):

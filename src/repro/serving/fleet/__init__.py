@@ -1,0 +1,48 @@
+"""Multi-replica serving fleet: replicated engines behind a cache-aware
+router, refreshed by compressed delta replication.
+
+Layers (each its own module):
+
+* :mod:`~repro.serving.fleet.bus` — the wire format
+  (:class:`~repro.serving.fleet.bus.DeltaMessage`: the delta-checkpoint
+  tree, flattened and losslessly compressed) and the per-replica
+  :class:`~repro.serving.fleet.bus.VersionGate` (idempotent, monotonic,
+  out-of-order-safe application).
+* :mod:`~repro.serving.fleet.replica` —
+  :class:`~repro.serving.fleet.replica.LocalReplica` (in-process) and
+  :class:`~repro.serving.fleet.replica.ProcessReplica`
+  (``multiprocessing``-spawned), one engine + queue + gate each.
+* :mod:`~repro.serving.fleet.router` —
+  :class:`~repro.serving.fleet.router.Router` (queue-depth load balancing,
+  hot-user affinity, priority classes, rolling refresh) and the
+  :class:`~repro.serving.fleet.router.ServingFleet` facade.
+
+Import layering: this package may import :mod:`repro.online` (the
+publisher owns the delta format); nothing in :mod:`repro.online` or the
+core :mod:`repro.serving` modules imports the fleet.
+"""
+from repro.serving.fleet.bus import (
+    DeltaMessage,
+    EngineDeltaSink,
+    VersionGate,
+    apply_message,
+    make_message,
+    state_from_message,
+    state_message,
+)
+from repro.serving.fleet.replica import LocalReplica, ProcessReplica
+from repro.serving.fleet.router import Router, ServingFleet
+
+__all__ = [
+    "DeltaMessage",
+    "EngineDeltaSink",
+    "VersionGate",
+    "apply_message",
+    "make_message",
+    "state_from_message",
+    "state_message",
+    "LocalReplica",
+    "ProcessReplica",
+    "Router",
+    "ServingFleet",
+]

@@ -1,0 +1,306 @@
+"""Replication wire format + per-replica version gating.
+
+One :class:`DeltaMessage` is one published snapshot on the wire: the same
+touched-rows-only tree the delta checkpoints store (``kind=full`` carries
+the whole params), flattened to ``{key: array}`` exactly as the
+checkpointer's npz payload and losslessly compressed per array
+(byte-shuffle + DEFLATE, ``distributed/compression.py``) — so a replica
+that decompresses a message and a replica that replays the checkpoint
+chain run the **same** applier (:func:`repro.online.publisher.apply_delta_tree`)
+over the **same** bytes and end bitwise identical.
+
+Delivery over processes is at-least-once and unordered in general; each
+replica therefore fronts its engine with a :class:`VersionGate`:
+
+* duplicate / stale (``version <= current``): acked, not applied —
+  idempotent.
+* in-order delta (``prev_version == current``): applied, then any buffered
+  successors chain-apply.
+* out-of-order delta (gap): buffered until the chain fills in, or until a
+  ``kind=full`` message fast-forwards past it.
+* ``kind=full``: always applicable — the heal path for any replica that
+  fell behind (the publisher forces one when it sees a lagging ack).
+
+:class:`EngineDeltaSink` is the gate bound to one
+:class:`~repro.serving.engine.ServingEngine`: an accepted message folds
+into host state and hot-swaps in via ``engine.swap`` (incremental,
+touched-rows-only, unless the message says ``full_rebuild``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.core import mf
+from repro.distributed.compression import (
+    CompressedArray,
+    compress_array,
+    decompress_array,
+)
+from repro.online import publisher as publisher_lib
+from repro.online.updater import PublishSnapshot
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaMessage:
+    """One versioned snapshot publication on the replication bus.
+
+    ``tree`` is the flattened delta/full checkpoint payload
+    (``{key: CompressedArray | np.ndarray}``); ``kind`` says how to apply
+    it ("delta" scatters touched rows, "full" rebuilds params wholesale).
+    ``full_rebuild`` is deliberately separate from ``kind``: a periodic
+    retention-anchor full still describes a touched-rows-only *change*, so
+    replicas apply it with an incremental layout patch — only a genuine
+    recalibration/rearrange (``full_rebuild=True``) forces the engine to
+    rebuild layouts and drop its hot-user cache.  Everything here pickles
+    (numpy + bytes only), so a message crosses a ``multiprocessing`` pipe
+    as-is.
+    """
+
+    version: int
+    prev_version: int
+    kind: str                       # "delta" | "full"
+    full_rebuild: bool
+    num_users: int
+    num_items: int
+    touched_users: np.ndarray
+    touched_items: np.ndarray
+    touched_implicit_items: np.ndarray
+    tree: Dict[str, object]         # CompressedArray or raw np.ndarray
+    events_seen: int = 0
+    snapshot_id: int = 0
+
+    @property
+    def wire_bytes(self) -> int:
+        """Payload bytes as shipped (compressed where compression won)."""
+        return sum(
+            v.nbytes if isinstance(v, CompressedArray) else int(np.asarray(v).nbytes)
+            for v in self.tree.values()
+        )
+
+    @property
+    def raw_bytes(self) -> int:
+        """Payload bytes before compression (the apples-to-apples baseline
+        for the compression ratio in ``BENCH_fleet.json``)."""
+        return sum(
+            v.raw_nbytes if isinstance(v, CompressedArray) else int(np.asarray(v).nbytes)
+            for v in self.tree.values()
+        )
+
+
+def _flat_payload(tree: dict, *, compress: bool) -> Dict[str, object]:
+    """Flatten a delta/full checkpoint tree to the wire ``{key: payload}``
+    dict (same keys as the checkpoint npz), compressing each array."""
+    flat = ckpt_lib._flatten_with_paths(tree)
+    if compress:
+        return {key: compress_array(arr) for key, arr in flat}
+    return {key: np.asarray(arr) for key, arr in flat}
+
+
+def _unflatten_payload(payload: Dict[str, object]) -> Dict[str, np.ndarray]:
+    return {
+        key: decompress_array(v) if isinstance(v, CompressedArray) else np.asarray(v)
+        for key, v in payload.items()
+    }
+
+
+def make_message(
+    snap: PublishSnapshot,
+    version: int,
+    prev_version: int,
+    *,
+    full: bool,
+    compress: bool = True,
+) -> DeltaMessage:
+    """Serialize one updater snapshot for the bus.
+
+    The payload tree is exactly what the delta checkpoint for this publish
+    stores (``publisher._delta_tree``), so wire version ``v`` and
+    checkpoint step ``v`` describe identical bytes.
+    """
+    tree = publisher_lib._delta_tree(snap, full=full)
+    return DeltaMessage(
+        version=int(version),
+        prev_version=int(prev_version),
+        kind="full" if full else "delta",
+        full_rebuild=bool(snap.full_rebuild),
+        num_users=int(snap.params.p.shape[0]),
+        num_items=int(snap.params.q.shape[0]),
+        touched_users=np.asarray(snap.touched_users, np.int64),
+        touched_items=np.asarray(snap.touched_items, np.int64),
+        touched_implicit_items=np.asarray(snap.touched_implicit_items, np.int64),
+        tree=_flat_payload(tree, compress=compress),
+        events_seen=int(snap.events_seen),
+        snapshot_id=int(snap.snapshot_id),
+    )
+
+
+def state_message(
+    params: mf.MFParams,
+    t_p,
+    t_q,
+    *,
+    user_history: Optional[np.ndarray] = None,
+    version: int = 0,
+    compress: bool = True,
+) -> DeltaMessage:
+    """A ``kind=full`` message carrying an entire model state — the
+    bootstrap payload a :class:`~repro.serving.fleet.replica.ProcessReplica`
+    is spawned with, and the catch-up payload for tests."""
+    tree = {"params": params, "t_p": np.float32(t_p), "t_q": np.float32(t_q)}
+    if user_history is not None:
+        tree["user_history"] = np.asarray(user_history)
+    return DeltaMessage(
+        version=int(version),
+        prev_version=int(version),
+        kind="full",
+        full_rebuild=True,
+        num_users=int(params.p.shape[0]),
+        num_items=int(params.q.shape[0]),
+        touched_users=np.empty(0, np.int64),
+        touched_items=np.empty(0, np.int64),
+        touched_implicit_items=np.empty(0, np.int64),
+        tree=_flat_payload(tree, compress=compress),
+    )
+
+
+def state_from_message(msg: DeltaMessage):
+    """Reconstruct ``(params, t_p, t_q, user_history)`` from a ``kind=full``
+    message — the inverse of :func:`state_message`."""
+    if msg.kind != "full":
+        raise ValueError("state_from_message needs a kind=full message")
+    return publisher_lib.apply_delta_tree(
+        None, 0.0, 0.0, None, _unflatten_payload(msg.tree),
+        kind="full", num_users=msg.num_users, num_items=msg.num_items,
+    )
+
+
+def apply_message(
+    params: Optional[mf.MFParams],
+    t_p,
+    t_q,
+    history: Optional[np.ndarray],
+    msg: DeltaMessage,
+) -> Tuple[mf.MFParams, object, object, Optional[np.ndarray]]:
+    """Decompress a message and fold it into ``(params, t_p, t_q,
+    history)`` — the wire-side twin of the checkpoint fold in
+    :func:`repro.online.publisher.fold_deltas` (both call
+    ``apply_delta_tree``, so the results are bitwise identical)."""
+    return publisher_lib.apply_delta_tree(
+        params, t_p, t_q, history, _unflatten_payload(msg.tree),
+        kind=msg.kind, num_users=msg.num_users, num_items=msg.num_items,
+    )
+
+
+class VersionGate:
+    """Idempotent, monotonic delta admission for one replica.
+
+    ``offer`` returns the replica's version after considering the message —
+    the ack the publisher tracks.  Application happens through ``apply_fn``
+    (called with each admitted message, oldest first); the gate guarantees
+    ``apply_fn`` sees every version at most once, in order, with no gaps.
+    Thread-safe: the publisher's rolling fan-out and a catch-up path may
+    race on one replica.
+    """
+
+    def __init__(self, apply_fn: Callable[[DeltaMessage], None], *, version: int = 0,
+                 max_buffer: int = 64):
+        self._apply = apply_fn
+        self.version = int(version)
+        self._pending: Dict[int, DeltaMessage] = {}  # keyed by prev_version
+        self._max_buffer = max_buffer
+        self._lock = threading.Lock()
+        self.applied = 0
+        self.duplicates = 0
+        self.buffered = 0
+
+    def offer(self, msg: DeltaMessage) -> int:
+        """Consider one delivery; returns the current version (the ack)."""
+        with self._lock:
+            if msg.version <= self.version:
+                self.duplicates += 1      # duplicate or stale: ack, drop
+                return self.version
+            if msg.kind == "full" or msg.prev_version == self.version:
+                self._apply_chain(msg)
+            else:
+                # gap: hold until the missing predecessor (or a full) lands
+                self._pending[msg.prev_version] = msg
+                self.buffered += 1
+                if len(self._pending) > self._max_buffer:
+                    oldest = min(self._pending)
+                    del self._pending[oldest]
+            return self.version
+
+    def _apply_chain(self, msg: DeltaMessage) -> None:
+        self._apply(msg)
+        self.version = msg.version
+        self.applied += 1
+        while self.version in self._pending:
+            nxt = self._pending.pop(self.version)
+            if nxt.version <= self.version:
+                continue
+            self._apply(nxt)
+            self.version = nxt.version
+            self.applied += 1
+        # anything a full fast-forwarded past is now stale
+        self._pending = {
+            base: m for base, m in self._pending.items() if m.version > self.version
+        }
+
+
+class EngineDeltaSink:
+    """A :class:`VersionGate` bound to one live engine.
+
+    Admitted messages fold into host-side ``(params, t_p, t_q, history)``
+    and hot-swap in via ``engine.swap`` — incremental (touched rows patch
+    the layouts, hot-user cache keeps warm entries) unless the message
+    carries ``full_rebuild``.  ``apply_update`` is the subscriber interface
+    :meth:`repro.online.publisher.SnapshotPublisher.subscribe` expects.
+    """
+
+    def __init__(self, engine, *, user_history: Optional[np.ndarray] = None,
+                 version: int = 0, replica_id: Optional[str] = None):
+        self.engine = engine
+        self.replica_id = replica_id
+        self._history = None if user_history is None else np.asarray(user_history)
+        self._gate = VersionGate(self._apply_one, version=version)
+
+    @property
+    def version(self) -> int:
+        """Version of the snapshot the engine currently serves."""
+        return self._gate.version
+
+    @property
+    def gate(self) -> VersionGate:
+        """The underlying gate (stats: applied/duplicates/buffered)."""
+        return self._gate
+
+    def apply_update(self, msg: DeltaMessage) -> int:
+        """Offer one delivery to the gate; returns the acked version."""
+        return self._gate.offer(msg)
+
+    def _apply_one(self, msg: DeltaMessage) -> None:
+        # a full that fast-forwards over a version gap replaced MORE than
+        # this publish's touched rows relative to what this replica serves
+        # (missed deltas, or an arbitrary cold state) — the touched-rows
+        # layout patch is only sound for the sequential next version
+        sequential = msg.prev_version == self._gate.version
+        params, t_p, t_q, history = apply_message(
+            self.engine.params, self.engine.t_p, self.engine.t_q,
+            self._history, msg,
+        )
+        self._history = history
+        if msg.full_rebuild or (msg.kind == "full" and not sequential):
+            self.engine.swap(params, t_p, t_q, user_history=history)
+        else:
+            self.engine.swap(
+                params, t_p, t_q,
+                touched_users=msg.touched_users,
+                touched_items=msg.touched_items,
+                touched_implicit_items=msg.touched_implicit_items,
+                user_history=history,
+            )

@@ -1,0 +1,392 @@
+"""Fleet replicas: one serving engine + queue + version gate per replica.
+
+Two implementations of the same contract (``replica_id``, ``version``,
+``submit() -> Future``, ``apply_update(msg) -> ack``, ``depth()``,
+``stats()``, ``close()``):
+
+* :class:`LocalReplica` — everything in this process.  What CI exercises
+  for the replication/ routing logic, what the benches use to measure
+  routing policies without IPC noise, and the building block the process
+  replica runs inside its child.
+
+* :class:`ProcessReplica` — a ``multiprocessing`` (spawn) child running a
+  ``LocalReplica``, talked to over a duplex pipe.  Spawn (not fork) so the
+  child re-imports cleanly next to JAX's threadpools — the only mode safe
+  on CPU CI.  The child bootstraps either from a ``kind=full``
+  :class:`~repro.serving.fleet.bus.DeltaMessage` or from a checkpoint
+  directory (training base + ``fold_deltas`` over the online delta chain —
+  the late-join path, which leaves the replica at the chain's last version
+  so the live bus can resume with deltas).
+
+Requests return ``concurrent.futures.Future`` either way; for process
+replicas a reader thread resolves them from pipe replies, so the router
+never blocks on a slow replica.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import threading
+from concurrent.futures import Future
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.fleet import bus
+
+
+class LocalReplica:
+    """One in-process replica: engine + started request queue + gated sink."""
+
+    def __init__(
+        self,
+        replica_id: str,
+        params,
+        t_p=0.0,
+        t_q=0.0,
+        *,
+        user_history: Optional[np.ndarray] = None,
+        base_version: int = 0,
+        engine_kwargs: Optional[dict] = None,
+        queue_kwargs: Optional[dict] = None,
+    ):
+        from repro.serving.engine import ServingEngine
+
+        self.replica_id = replica_id
+        self.engine = ServingEngine(
+            params, t_p, t_q, user_history=user_history, **(engine_kwargs or {})
+        )
+        self.queue = self.engine.start(**(queue_kwargs or {}))
+        self._sink = bus.EngineDeltaSink(
+            self.engine,
+            user_history=user_history,
+            version=base_version,
+            replica_id=replica_id,
+        )
+
+    @property
+    def version(self) -> int:
+        """Replication version this replica currently serves."""
+        return self._sink.version
+
+    @property
+    def num_users(self) -> int:
+        """User-table rows of the served snapshot."""
+        return self.engine.num_users
+
+    def submit(self, user_id: int, topk: int = 10, *, timeout=None,
+               priority: int = 0) -> Future:
+        """Enqueue one request on this replica's queue."""
+        return self.engine.submit(user_id, topk, timeout=timeout,
+                                  priority=priority)
+
+    def apply_update(self, msg: bus.DeltaMessage) -> int:
+        """Offer a bus message to the version gate; returns the ack.
+
+        The hot swap happens under live traffic: requests in flight finish
+        on the old snapshot, the queue never pauses."""
+        return self._sink.apply_update(msg)
+
+    def depth(self) -> int:
+        """Queued + in-scoring requests — the router's load signal."""
+        return self.engine.queue_depth
+
+    def stats(self) -> Dict[str, Any]:
+        """Counters for benches/CI: version, load, cache hit rate, queue."""
+        cache = self.engine.vector_cache
+        gate = self._sink.gate
+        return {
+            "replica_id": self.replica_id,
+            "version": self.version,
+            "depth": self.depth(),
+            "num_users": self.engine.num_users,
+            "n_items": self.engine.n_items,
+            "requests_served": self.queue.requests_served,
+            "batches_served": self.queue.batches_served,
+            "expired": self.queue.expired,
+            "cache_hits": cache.hits,
+            "cache_misses": cache.misses,
+            "updates_applied": gate.applied,
+            "updates_duplicate": gate.duplicates,
+            "updates_buffered": gate.buffered,
+        }
+
+    def close(self) -> None:
+        """Drain the queue (every accepted request completes) and stop."""
+        self.engine.stop()
+
+
+# ---------------------------------------------------------------------------
+# Process replicas
+# ---------------------------------------------------------------------------
+
+
+def _child_bootstrap(init: dict):
+    """Build the child's initial ``(params, t_p, t_q, history, version)``
+    from the spawn payload: a full message, or checkpoint dirs to fold."""
+    if "msg" in init:
+        m = init["msg"]
+        params, t_p, t_q, history = bus.state_from_message(m)
+        return params, t_p, t_q, history, int(m.version)
+    from repro.online.publisher import fold_deltas
+    from repro.serving.engine import load_mf_checkpoint
+
+    params, t_p, t_q, _, _ = load_mf_checkpoint(init["checkpoint"])
+    version = 0
+    history = None
+    if init.get("online_dir"):
+        params, t_p, t_q, history, version = fold_deltas(
+            init["online_dir"], params, t_p, t_q
+        )
+    return params, t_p, t_q, history, version
+
+
+def _replica_main(conn, replica_id: str, init: dict,
+                  engine_kwargs: Optional[dict],
+                  queue_kwargs: Optional[dict]) -> None:
+    """Child process entry: run a :class:`LocalReplica`, serve the pipe.
+
+    Protocol (parent -> child): ``("submit", rid, user, topk, timeout,
+    priority)``, ``("update", msg)``, ``("stats",)``, ``("close",)``.
+    Child -> parent: ``("ready", version, num_users)``, ``("result", rid,
+    scores, items)``, ``("error", rid, repr)``, ``("ack", version, ack)``,
+    ``("stats", dict)``, ``("bye",)``.
+    """
+    send_lock = threading.Lock()
+
+    def send(*payload):
+        with send_lock:  # queue scheduler + pipe loop both reply
+            try:
+                conn.send(payload)
+            except (BrokenPipeError, OSError):
+                pass
+
+    try:
+        params, t_p, t_q, history, version = _child_bootstrap(init)
+        replica = LocalReplica(
+            replica_id, params, t_p, t_q,
+            user_history=history, base_version=version,
+            engine_kwargs=engine_kwargs, queue_kwargs=queue_kwargs,
+        )
+    except Exception as exc:  # surface the spawn failure to the parent
+        send("error", -1, f"{type(exc).__name__}: {exc}")
+        conn.close()
+        return
+    send("ready", replica.version, replica.num_users)
+
+    def reply(rid: int, fut: Future) -> None:
+        try:
+            scores, items = fut.result()
+            send("result", rid, np.asarray(scores), np.asarray(items))
+        except Exception as exc:
+            send("error", rid, f"{type(exc).__name__}: {exc}")
+
+    try:
+        while True:
+            try:
+                op, *rest = conn.recv()
+            except (EOFError, OSError):
+                break
+            if op == "submit":
+                rid, user, topk, timeout, priority = rest
+                try:
+                    fut = replica.submit(int(user), int(topk),
+                                         timeout=timeout, priority=priority)
+                except Exception as exc:
+                    send("error", rid, f"{type(exc).__name__}: {exc}")
+                else:
+                    fut.add_done_callback(
+                        lambda f, rid=rid: reply(rid, f)
+                    )
+            elif op == "update":
+                (msg,) = rest
+                try:
+                    ack = replica.apply_update(msg)
+                except Exception as exc:
+                    send("error", -1, f"{type(exc).__name__}: {exc}")
+                else:
+                    send("ack", msg.version, ack)
+            elif op == "stats":
+                send("stats", replica.stats())
+            elif op == "close":
+                replica.close()  # drains: every queued future resolves+sends
+                send("bye")
+                break
+    finally:
+        conn.close()
+
+
+class ProcessReplica:
+    """Parent-side handle to a replica running in a spawned child process.
+
+    Bootstrap with either ``init_msg`` (a ``kind=full``
+    :class:`~repro.serving.fleet.bus.DeltaMessage`; build one with
+    ``bus.state_message``) or ``checkpoint=...`` (+ optional
+    ``online_dir=...`` to fold the delta chain — the late-join catch-up).
+    ``submit`` returns a local Future resolved by the reader thread;
+    ``apply_update`` blocks for the child's ack (the publisher's rolling
+    fan-out needs the ack before moving to the next replica).
+    """
+
+    def __init__(
+        self,
+        replica_id: str,
+        *,
+        init_msg: Optional[bus.DeltaMessage] = None,
+        checkpoint: Optional[str] = None,
+        online_dir: Optional[str] = None,
+        engine_kwargs: Optional[dict] = None,
+        queue_kwargs: Optional[dict] = None,
+        start_timeout: float = 180.0,
+    ):
+        if (init_msg is None) == (checkpoint is None):
+            raise ValueError("pass exactly one of init_msg / checkpoint")
+        init = {"msg": init_msg} if init_msg is not None else {
+            "checkpoint": checkpoint, "online_dir": online_dir,
+        }
+        self.replica_id = replica_id
+        ctx = mp.get_context("spawn")
+        self._conn, child_conn = ctx.Pipe()
+        self._proc = ctx.Process(
+            target=_replica_main,
+            args=(child_conn, replica_id, init, engine_kwargs, queue_kwargs),
+            daemon=True,
+        )
+        self._proc.start()
+        child_conn.close()
+        self._lock = threading.Lock()          # pipe writes
+        self._futs: Dict[int, Future] = {}
+        self._futs_lock = threading.Lock()
+        self._next_rid = 0
+        self._acks: Dict[int, int] = {}
+        self._ack_event = threading.Condition()
+        self._stats: Optional[dict] = None
+        self._stats_event = threading.Event()
+        self._ready = threading.Event()
+        self._bye = threading.Event()
+        self.version = 0
+        self.num_users = 0
+        self._spawn_error: Optional[str] = None
+        self._reader = threading.Thread(
+            target=self._read_loop, name=f"fleet-{replica_id}-reader",
+            daemon=True,
+        )
+        self._reader.start()
+        if not self._ready.wait(start_timeout):
+            self._proc.terminate()
+            raise TimeoutError(f"replica {replica_id} did not come up")
+        if self._spawn_error is not None:
+            raise RuntimeError(
+                f"replica {replica_id} failed to start: {self._spawn_error}"
+            )
+
+    def _read_loop(self) -> None:
+        while True:
+            try:
+                op, *rest = self._conn.recv()
+            except (EOFError, OSError):
+                break
+            if op == "ready":
+                self.version, self.num_users = rest
+                self._ready.set()
+            elif op == "result":
+                rid, scores, items = rest
+                fut = self._pop_fut(rid)
+                if fut is not None:
+                    fut.set_result((scores, items))
+            elif op == "error":
+                rid, text = rest
+                if rid == -1 and not self._ready.is_set():
+                    self._spawn_error = text
+                    self._ready.set()
+                    continue
+                fut = self._pop_fut(rid)
+                if fut is not None:
+                    fut.set_exception(RuntimeError(text))
+            elif op == "ack":
+                version, ack = rest
+                with self._ack_event:
+                    self._acks[version] = ack
+                    self._ack_event.notify_all()
+            elif op == "stats":
+                (self._stats,) = rest
+                self._stats_event.set()
+            elif op == "bye":
+                self._bye.set()
+        # pipe gone: fail anything still outstanding
+        with self._futs_lock:
+            leftovers, self._futs = list(self._futs.values()), {}
+        for fut in leftovers:
+            if not fut.done():
+                fut.set_exception(RuntimeError("replica process exited"))
+        self._bye.set()
+
+    def _pop_fut(self, rid: int) -> Optional[Future]:
+        with self._futs_lock:
+            return self._futs.pop(rid, None)
+
+    def _send(self, *payload) -> None:
+        with self._lock:
+            self._conn.send(payload)
+
+    def submit(self, user_id: int, topk: int = 10, *, timeout=None,
+               priority: int = 0) -> Future:
+        """Forward one request to the child; the reader thread resolves the
+        returned Future from the pipe reply."""
+        fut: Future = Future()
+        with self._futs_lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._futs[rid] = fut
+        try:
+            self._send("submit", rid, int(user_id), int(topk), timeout,
+                       int(priority))
+        except (BrokenPipeError, OSError):
+            self._pop_fut(rid)
+            fut.set_exception(RuntimeError("replica process exited"))
+        return fut
+
+    def apply_update(self, msg: bus.DeltaMessage, *, timeout: float = 180.0) -> int:
+        """Ship a bus message and block for the child's ack (its version
+        after gating) — the rolling fan-out's synchronization point."""
+        self._send("update", msg)
+        with self._ack_event:
+            if not self._ack_event.wait_for(
+                lambda: msg.version in self._acks, timeout
+            ):
+                raise TimeoutError(
+                    f"replica {self.replica_id}: no ack for v{msg.version}"
+                )
+            ack = self._acks.pop(msg.version)
+        self.version = max(self.version, ack)
+        return ack
+
+    def depth(self) -> int:
+        """Requests submitted here and not yet resolved — the parent-side
+        load proxy (no pipe round-trip, so the router can poll it hot)."""
+        with self._futs_lock:
+            return len(self._futs)
+
+    def stats(self, *, timeout: float = 60.0) -> Dict[str, Any]:
+        """Fetch the child's counter snapshot over the pipe."""
+        self._stats_event.clear()
+        self._send("stats")
+        if not self._stats_event.wait(timeout):
+            raise TimeoutError(f"replica {self.replica_id}: stats timed out")
+        return dict(self._stats)
+
+    def close(self, *, timeout: float = 120.0) -> None:
+        """Drain the child (in-flight requests complete and their results
+        flow back), then join the process."""
+        try:
+            self._send("close")
+        except (BrokenPipeError, OSError):
+            pass
+        self._bye.wait(timeout)
+        self._proc.join(timeout)
+        if self._proc.is_alive():
+            self._proc.terminate()
+            self._proc.join(10)
+        try:
+            self._conn.close()
+        except OSError:
+            pass

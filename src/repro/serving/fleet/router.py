@@ -1,0 +1,216 @@
+"""Cache-aware request routing over a fleet of replicas.
+
+The router's job is to keep each replica's hot-user LRU warm: a user's
+cached aggregation vector only pays off if their next request lands on the
+**same** replica.  Policy per request:
+
+* **affinity** (default): pin each user to a replica in an LRU map on
+  first sight (pinned to the then-least-loaded); route repeat users to
+  their pin while its queue depth is within ``overload_slack`` of the
+  least-loaded replica — beyond that, spill to least-loaded and re-pin
+  (a thrashing pin is worse than one cold miss).
+* **deadline/priority class**: requests with ``priority > 0`` are
+  background class — routed purely by least depth and never recorded in
+  the affinity map, so bulk/backfill traffic can neither evict
+  interactive pins nor pollute replica caches with one-shot users.
+* ``policy="least"`` / ``policy="random"`` ignore affinity entirely —
+  the baselines ``benchmarks/bench_fleet.py`` compares against.
+
+:class:`ServingFleet` is the one-call topology: N replicas (in-process or
+spawned) + a router, exposing ``submit``/``apply_update`` so it can be a
+drop-in subscriber for
+:meth:`repro.online.publisher.SnapshotPublisher.subscribe` — the publisher
+ships each version once and the router applies it rollingly, one replica
+at a time, so the fleet never has fewer than N-1 replicas accepting
+requests mid-refresh.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.batching import LRUCache
+from repro.serving.fleet import bus
+from repro.serving.fleet.replica import LocalReplica, ProcessReplica
+
+
+class Router:
+    """Load-balance requests across replicas, cache-affine for hot users."""
+
+    def __init__(
+        self,
+        replicas: List,
+        *,
+        policy: str = "affinity",
+        affinity_capacity: int = 65536,
+        overload_slack: int = 8,
+        seed: int = 0,
+    ):
+        if not replicas:
+            raise ValueError("router needs at least one replica")
+        if policy not in ("affinity", "least", "random"):
+            raise ValueError(f"unknown routing policy {policy!r}")
+        self.replicas = list(replicas)
+        self.policy = policy
+        self.overload_slack = overload_slack
+        self._affinity = LRUCache(affinity_capacity)
+        self._rng = np.random.default_rng(seed)
+        self._lock = threading.Lock()
+        self.routed = 0
+        self.affinity_hits = 0   # repeat user sent to their pinned replica
+        self.affinity_cold = 0   # first-seen user (new pin)
+        self.affinity_spills = 0  # pin overloaded: spilled + re-pinned
+
+    def pick(self, user_id: int, priority: int = 0) -> int:
+        """Choose a replica index for one request (does not submit)."""
+        with self._lock:
+            self.routed += 1
+            depths = [r.depth() for r in self.replicas]
+            least = int(np.argmin(depths))
+            if self.policy == "random":
+                return int(self._rng.integers(len(self.replicas)))
+            if self.policy == "least" or priority > 0:
+                # background class: depth only, never pinned — bulk traffic
+                # must not evict interactive users' affinity entries
+                return least
+            pinned = self._affinity.get(user_id)
+            if pinned is not None:
+                if depths[pinned] <= depths[least] + self.overload_slack:
+                    self.affinity_hits += 1
+                    return pinned
+                self.affinity_spills += 1
+            else:
+                self.affinity_cold += 1
+            self._affinity.put(user_id, least)
+            return least
+
+    def submit(self, user_id: int, topk: int = 10, *, timeout=None,
+               priority: int = 0) -> Future:
+        """Route one request and enqueue it on the chosen replica."""
+        idx = self.pick(int(user_id), priority)
+        return self.replicas[idx].submit(
+            user_id, topk, timeout=timeout, priority=priority
+        )
+
+    @property
+    def version(self) -> int:
+        """Lowest replica version — what the whole fleet is guaranteed to
+        serve at least (the publisher's lag view)."""
+        return min(r.version for r in self.replicas)
+
+    def apply_update(self, msg: bus.DeltaMessage) -> Dict[str, int]:
+        """Rolling refresh: ship ``msg`` to one replica at a time, in
+        order, waiting for each ack before the next — at most one replica
+        is mid-swap at any instant, the rest keep serving.  Returns
+        ``{replica_id: acked_version}`` (the dict-ack form the publisher's
+        subscriber bookkeeping flattens)."""
+        acks: Dict[str, int] = {}
+        for rep in self.replicas:
+            acks[rep.replica_id] = rep.apply_update(msg)
+        return acks
+
+    def stats(self) -> Dict[str, Any]:
+        """Routing counters + per-replica stats (pipe round-trips for
+        process replicas — don't call on the hot path)."""
+        return {
+            "policy": self.policy,
+            "routed": self.routed,
+            "affinity_hits": self.affinity_hits,
+            "affinity_cold": self.affinity_cold,
+            "affinity_spills": self.affinity_spills,
+            "replicas": [r.stats() for r in self.replicas],
+        }
+
+    def close(self) -> None:
+        """Drain and close every replica (each completes its in-flight
+        requests — the engine/queue graceful-drain contract)."""
+        for rep in self.replicas:
+            rep.close()
+
+
+class ServingFleet:
+    """N replicas + a router, built from one model state.
+
+    ``backend="local"`` runs every replica in-process (CI, benches);
+    ``backend="process"`` spawns each as a ``multiprocessing`` child
+    bootstrapped from a ``kind=full`` bus message of the given state.
+    The fleet object quacks like a replica (``submit`` / ``apply_update``
+    / ``version`` / ``stats`` / ``close``), so
+    ``publisher.subscribe(fleet.router)`` wires live replication and
+    ``fleet.submit(user)`` serves — see the router quickstart in README.
+    """
+
+    def __init__(
+        self,
+        params,
+        t_p=0.0,
+        t_q=0.0,
+        *,
+        replicas: int = 2,
+        backend: str = "local",
+        user_history: Optional[np.ndarray] = None,
+        base_version: int = 0,
+        engine_kwargs: Optional[dict] = None,
+        queue_kwargs: Optional[dict] = None,
+        router_kwargs: Optional[dict] = None,
+    ):
+        if replicas < 1:
+            raise ValueError("fleet needs at least one replica")
+        if backend not in ("local", "process"):
+            raise ValueError(f"unknown fleet backend {backend!r}")
+        self.backend = backend
+        members: List = []
+        if backend == "process":
+            boot = bus.state_message(
+                params, t_p, t_q, user_history=user_history,
+                version=base_version,
+            )
+            for i in range(replicas):
+                members.append(ProcessReplica(
+                    f"r{i}", init_msg=boot,
+                    engine_kwargs=engine_kwargs, queue_kwargs=queue_kwargs,
+                ))
+        else:
+            for i in range(replicas):
+                members.append(LocalReplica(
+                    f"r{i}", params, t_p, t_q,
+                    user_history=user_history, base_version=base_version,
+                    engine_kwargs=engine_kwargs, queue_kwargs=queue_kwargs,
+                ))
+        self.router = Router(members, **(router_kwargs or {}))
+
+    @property
+    def replicas(self) -> List:
+        """The replica handles, in rolling order."""
+        return self.router.replicas
+
+    @property
+    def version(self) -> int:
+        """Lowest replica version (see :attr:`Router.version`)."""
+        return self.router.version
+
+    @property
+    def num_users(self) -> int:
+        """User-table rows replicas currently serve (min across fleet)."""
+        return min(r.num_users for r in self.replicas)
+
+    def submit(self, user_id: int, topk: int = 10, *, timeout=None,
+               priority: int = 0) -> Future:
+        """Route + enqueue one request (see :meth:`Router.submit`)."""
+        return self.router.submit(user_id, topk, timeout=timeout,
+                                  priority=priority)
+
+    def apply_update(self, msg: bus.DeltaMessage) -> Dict[str, int]:
+        """Rolling refresh across the fleet (see :meth:`Router.apply_update`)."""
+        return self.router.apply_update(msg)
+
+    def stats(self) -> Dict[str, Any]:
+        """Router + per-replica counters (see :meth:`Router.stats`)."""
+        return self.router.stats()
+
+    def close(self) -> None:
+        """Drain and shut down every replica."""
+        self.router.close()

@@ -125,6 +125,7 @@ class RequestQueue:
         self._heap: List[_Pending] = []
         self._seq = itertools.count()
         self._closed = False
+        self._scoring = 0  # requests inside the current scoring launch
         # bench / observability counters
         self.requests_served = 0
         self.batches_served = 0
@@ -171,6 +172,13 @@ class RequestQueue:
         else:
             while self.drain_once():
                 pass
+            with self._cond:  # anything left is expired-only residue: fail it
+                for req in self._heap:
+                    _fail(
+                        req.future,
+                        RequestTimeout("queue closed before request was scheduled"),
+                    )
+                self._heap.clear()
 
     def __enter__(self) -> "RequestQueue":
         return self
@@ -181,6 +189,14 @@ class RequestQueue:
     def __len__(self) -> int:
         with self._cond:
             return len(self._heap)
+
+    @property
+    def depth(self) -> int:
+        """Requests queued plus in the current scoring launch — the load
+        signal the fleet router balances on (a replica whose scheduler is
+        mid-launch is busier than its heap length alone says)."""
+        with self._cond:
+            return len(self._heap) + self._scoring
 
     # -- submission ----------------------------------------------------------
     def submit(
@@ -281,6 +297,15 @@ class RequestQueue:
         return batch
 
     def _serve(self, batch: List[_Pending]) -> None:
+        with self._cond:
+            self._scoring = len(batch)
+        try:
+            self._serve_inner(batch)
+        finally:
+            with self._cond:
+                self._scoring = 0
+
+    def _serve_inner(self, batch: List[_Pending]) -> None:
         topk = batch[0].topk
         users = sorted({req.user_id for req in batch})
         try:
@@ -310,19 +335,34 @@ class RequestQueue:
         return len(batch)
 
     def _loop(self) -> None:
-        while True:
+        try:
+            while True:
+                with self._cond:
+                    while not self._heap and not self._closed:
+                        self._cond.wait()
+                    if self.linger_s > 0 and self._heap and not self._closed:
+                        limit = time.monotonic() + self.linger_s
+                        while len(self._heap) < self.max_batch and not self._closed:
+                            remaining = limit - time.monotonic()
+                            if remaining <= 0:
+                                break
+                            self._cond.wait(remaining)
+                    batch = self._pop_batch()
+                    if not batch and self._closed and not self._heap:
+                        return
+                if batch:
+                    self._serve(batch)
+        finally:
+            # A scheduler that exits for ANY reason (normal drain included)
+            # must leave no pending future behind: anything still queued is
+            # failed loudly rather than stranded forever.  After a normal
+            # drain the heap is empty and this is a no-op.
             with self._cond:
-                while not self._heap and not self._closed:
-                    self._cond.wait()
-                if self.linger_s > 0 and self._heap and not self._closed:
-                    limit = time.monotonic() + self.linger_s
-                    while len(self._heap) < self.max_batch and not self._closed:
-                        remaining = limit - time.monotonic()
-                        if remaining <= 0:
-                            break
-                        self._cond.wait(remaining)
-                batch = self._pop_batch()
-                if not batch and self._closed and not self._heap:
-                    return
-            if batch:
-                self._serve(batch)
+                for req in self._heap:
+                    _fail(
+                        req.future,
+                        RuntimeError("scheduler exited with request pending"),
+                    )
+                self._heap.clear()
+                self._closed = True
+                self._cond.notify_all()
