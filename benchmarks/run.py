@@ -27,7 +27,7 @@ def main() -> None:
     parser.add_argument("--only", default=None,
                         help="comma-separated subset: "
                              "figures,kernels,roofline,serving,online,"
-                             "training,eval,fleet")
+                             "training,eval,fleet,slo")
     parser.add_argument("--json-dir", default=None,
                         help="directory for the BENCH_<suite>.json reports "
                              "(default: $BENCH_JSON_DIR or CWD)")
@@ -45,6 +45,7 @@ def main() -> None:
         bench_paper_figures,
         bench_roofline,
         bench_serving,
+        bench_slo,
         bench_training,
         common,
     )
@@ -58,6 +59,7 @@ def main() -> None:
         "training": bench_training.run,
         "eval": bench_eval.run,
         "fleet": bench_fleet.run,
+        "slo": bench_slo.run,
     }
     selected = (
         {s.strip() for s in args.only.split(",")} if args.only else set(suites)

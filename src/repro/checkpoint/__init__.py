@@ -3,6 +3,9 @@ from repro.checkpoint.checkpoint import (  # noqa: F401
     all_steps,
     elastic_load,
     latest_step,
+    load_metadata,
+    load_raw,
     restore,
     save,
+    step_path,
 )

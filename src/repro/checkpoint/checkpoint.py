@@ -2,9 +2,13 @@
 
 Design constraints for thousand-node deployments:
 
-* **Atomicity** — a checkpoint is written to a temp directory and published
-  with ``os.rename`` (atomic on POSIX), so a preempted writer never leaves a
-  half-checkpoint that a restart could load.
+* **Atomicity** — a checkpoint's payload is written and fsynced into a
+  uniquely-named ``step_X.data.*`` directory, then published by atomically
+  replacing a ``step_X`` symlink (``os.replace``) and fsyncing the parent
+  directory.  A preempted writer never leaves a half-checkpoint, and a
+  reader racing a re-save of the same step never observes the checkpoint
+  missing: superseded payload directories linger until the retention sweep,
+  so a reader that already resolved the link keeps a consistent view.
 * **Resumability** — metadata carries (epoch, step, data seed) so the loader
   replays the exact data order (see data/loader.py).
 * **Keep-N retention** — bounded disk usage under frequent checkpointing.
@@ -46,6 +50,21 @@ def _flatten_with_paths(tree: Pytree) -> List[Tuple[str, np.ndarray]]:
     return out
 
 
+# Unreferenced payload dirs / temp files must outlive any reader that
+# resolved the step symlink before a re-save superseded them; one hour is
+# far beyond any read.  Module constant so tests can force an eager sweep.
+_STALE_SECONDS = 3600.0
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so its entry creations/renames survive a crash."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(
     directory: str,
     step: int,
@@ -54,40 +73,98 @@ def save(
     metadata: Optional[Dict[str, Any]] = None,
     keep: int = 3,
 ) -> str:
-    """Blocking atomic save.  Returns the published checkpoint path."""
+    """Blocking atomic save.  Returns the published checkpoint path.
+
+    Publication is a symlink swap: the payload lands (fsynced) in a
+    uniquely-named ``step_X.data.<nonce>`` directory, then the ``step_X``
+    symlink is atomically repointed with ``os.replace`` and the parent
+    directory fsynced.  Re-saving an existing step therefore never opens a
+    missing-checkpoint window (the old ``rmtree``+``rename`` publish did),
+    and a concurrent reader that already resolved the link keeps reading a
+    complete payload — superseded payload dirs are only collected by the
+    retention sweep once they are ``_STALE_SECONDS`` old.
+    """
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:012d}")
-    tmp = final + f".tmp.{os.getpid()}.{int(time.time() * 1e6)}"
-    os.makedirs(tmp, exist_ok=True)
+    nonce = f"{os.getpid()}.{int(time.time() * 1e6)}"
+    data_name = f"step_{step:012d}.data.{nonce}"
+    data_dir = os.path.join(directory, data_name)
+    os.makedirs(data_dir, exist_ok=True)
 
     arrays = dict(_flatten_with_paths(tree))
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    np.savez(os.path.join(data_dir, "arrays.npz"), **arrays)
     meta = {"step": step, "keys": sorted(arrays), **(metadata or {})}
-    with open(os.path.join(tmp, "metadata.json"), "w") as f:
+    with open(os.path.join(data_dir, "metadata.json"), "w") as f:
         json.dump(meta, f, indent=2, default=str)
     # fsync the payload before publishing so a crash cannot publish garbage.
     for name in ("arrays.npz", "metadata.json"):
-        fd = os.open(os.path.join(tmp, name), os.O_RDONLY)
+        fd = os.open(os.path.join(data_dir, name), os.O_RDONLY)
         try:
             os.fsync(fd)
         finally:
             os.close(fd)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+    _fsync_dir(data_dir)
+
+    if os.path.isdir(final) and not os.path.islink(final):
+        # Legacy layout: step_X is a real directory from an older writer.
+        # Move it aside so the symlink can take the name (one non-atomic
+        # transition per legacy step; the sweep collects the remains).
+        os.rename(final, os.path.join(directory, f"{data_name}.legacy"))
+    link_tmp = os.path.join(directory, f"step_{step:012d}.lnk.{nonce}")
+    os.symlink(data_name, link_tmp)  # relative target: dir stays relocatable
+    os.replace(link_tmp, final)      # atomic publish / re-publish
+    _fsync_dir(directory)
     _garbage_collect(directory, keep)
     return final
+
+
+def _remove_step(directory: str, step: int) -> None:
+    """Retire one published step: drop the symlink first (readers stop
+    resolving to the payload), then the payload it referenced."""
+    path = os.path.join(directory, f"step_{step:012d}")
+    if os.path.islink(path):
+        target = os.path.join(directory, os.readlink(path))
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+        shutil.rmtree(target, ignore_errors=True)
+    else:
+        shutil.rmtree(path, ignore_errors=True)
 
 
 def _garbage_collect(directory: str, keep: int) -> None:
     steps = all_steps(directory)
     for step in steps[:-keep] if keep > 0 else []:
-        shutil.rmtree(os.path.join(directory, f"step_{step:012d}"), ignore_errors=True)
-    # stale temp dirs from crashed writers
+        _remove_step(directory, step)
+    # payload dirs still referenced by a live step symlink must survive
+    live = set()
+    for step in all_steps(directory):
+        path = os.path.join(directory, f"step_{step:012d}")
+        if os.path.islink(path):
+            live.add(os.readlink(path))
+    # stale leftovers: crashed-writer temp dirs/links and payload dirs a
+    # re-save superseded — swept only once old enough that no reader can
+    # still hold a resolved path into them
+    now = time.time()
     for name in os.listdir(directory):
-        if ".tmp." in name:
-            path = os.path.join(directory, name)
-            if time.time() - os.path.getmtime(path) > 3600:
+        stale = ".tmp." in name or ".lnk." in name or (
+            ".data." in name and name not in live
+        )
+        if not stale:
+            continue
+        path = os.path.join(directory, name)
+        try:
+            age = now - os.lstat(path).st_mtime
+        except OSError:
+            continue
+        if age > _STALE_SECONDS:
+            if os.path.islink(path):
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+            else:
                 shutil.rmtree(path, ignore_errors=True)
 
 
@@ -116,7 +193,8 @@ def step_path(directory: str, step: int) -> str:
 
 
 def load_metadata(directory: str, step: int) -> Dict[str, Any]:
-    with open(os.path.join(step_path(directory, step), "metadata.json")) as f:
+    base = os.path.realpath(step_path(directory, step))
+    with open(os.path.join(base, "metadata.json")) as f:
         return json.load(f)
 
 
@@ -134,9 +212,13 @@ def load_raw(
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory}")
+    # resolve the step symlink ONCE so metadata and arrays come from the
+    # same payload even while a concurrent writer re-publishes the step
+    base = os.path.realpath(step_path(directory, step))
     if metadata is None:
-        metadata = load_metadata(directory, step)
-    with np.load(os.path.join(step_path(directory, step), "arrays.npz")) as data:
+        with open(os.path.join(base, "metadata.json")) as f:
+            metadata = json.load(f)
+    with np.load(os.path.join(base, "arrays.npz")) as data:
         arrays = {key: data[key] for key in data.files}
     return arrays, metadata
 

@@ -79,6 +79,10 @@ def threshold_for_rate(stats: MatrixStats, rate: float | jax.Array) -> jax.Array
     """
     x = solve_x(stats.mu, stats.sigma, rate)
     t = stats.sigma * x + stats.mu
+    # rate <= 0 must yield T == 0.0 *exactly*, not the bisection's float
+    # residue: serving treats T == 0 as "pruning disabled" and the SLO
+    # controller's relax-to-floor path relies on bit-exact dense parity.
+    t = jnp.where(jnp.asarray(rate, jnp.float32) <= 0.0, 0.0, t)
     return jnp.maximum(t, 0.0)
 
 

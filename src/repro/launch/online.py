@@ -17,7 +17,12 @@ Runs the full freshness loop the online subsystem exists for:
    checkpoint.
 
 Exit status is non-zero if ANY request failed or was dropped during the run
-— the CI smoke contract.  A JSON report (throughput, swap latency, serving
+— the CI smoke contract.  ``--slo-p99-ms BUDGET`` additionally arms the
+SLO-aware degradation loop (:mod:`repro.serving.slo`): the controller ticks
+inside the update loop, adapts pruning thresholds to hold serving p99 under
+the budget (pinning them through publishes), relaxes when the prequential
+drift hook reports quality pressure, and the run exits non-zero if the
+steady-state p99 still violates the budget.  A JSON report (throughput, swap latency, serving
 percentiles, work fraction, prequential MAE/RMSE trajectory, MAE
 before/after) lands on stdout and, with ``--json``, on disk.
 
@@ -48,7 +53,12 @@ from repro.online import (
     SnapshotPublisher,
     iter_microbatches,
 )
-from repro.serving import ServingEngine
+from repro.serving import (
+    LatencyWindow,
+    ServingEngine,
+    SLOConfig,
+    SLOController,
+)
 
 
 def run_online(args) -> dict:
@@ -121,6 +131,7 @@ def run_online(args) -> dict:
             rating_min=ds.rating_min, rating_max=ds.rating_max,
         )
 
+    queue = None
     if engine is not None:
         # warm the power-of-two buckets queue batches can land in, so the
         # first in-flight requests measure serving, not compiles
@@ -128,7 +139,28 @@ def run_online(args) -> dict:
         for b in (1, 2, 4, 8):
             if b <= len(warm_users):
                 engine.topk(warm_users[:b], args.topk)
-        engine.start(linger_ms=1.0)
+        queue = engine.start(linger_ms=1.0)
+
+    # ---- SLO-aware degradation loop (off unless --slo-p99-ms > 0) ---------
+    controller = None
+    if args.slo_p99_ms > 0:
+        slo_config = SLOConfig(
+            p99_budget_ms=args.slo_p99_ms, max_rate=args.slo_max_rate
+        )
+        if engine is not None:
+            # queue supplies all load signals: latency window, depth, expiry
+            controller = SLOController(
+                engine, config=slo_config, queue=queue, publisher=publisher
+            )
+        else:
+            # process replicas own their queues; observe latency client-side
+            controller = SLOController(
+                config=slo_config, window=LatencyWindow(),
+                router=fleet.router, publisher=publisher,
+                params_fn=lambda: updater.params,
+            )
+        print(f"# slo: p99 budget {args.slo_p99_ms} ms, floor rate "
+              f"{controller.floor_rate:.3f}, max rate {args.slo_max_rate}")
 
     # ---- concurrent request traffic over the whole stream window ----------
     num_users = frontend.num_users
@@ -146,6 +178,10 @@ def run_online(args) -> dict:
             try:
                 frontend.submit(user, args.topk, timeout=30.0).result(timeout=60)
                 dt = time.perf_counter() - t0
+                if controller is not None and controller.queue is None:
+                    # fleet path: the queue lives in the replicas, so the
+                    # controller's latency window is fed client-side
+                    controller.window.record(dt)
                 with lock:
                     ok[0] += 1
                     latencies.append(dt)
@@ -170,6 +206,9 @@ def run_online(args) -> dict:
     evaluator.add_drift_hook(
         recalibration_hook(updater, min_events=args.prequential_window)
     )
+    if controller is not None:
+        # quality guardrail: prequential drift makes the next tick relax
+        evaluator.add_drift_hook(controller.quality_hook())
     swaps = []
     events = 0
     work_fractions = []
@@ -180,6 +219,8 @@ def run_online(args) -> dict:
         metrics = evaluator.consume(batch)
         events += metrics["events"]
         work_fractions.append(metrics["work_fraction"])
+        if controller is not None:
+            controller.maybe_tick()
         if (b + 1) % args.swap_every == 0:
             info = updater.maybe_recalibrate()  # no-op within drift budget
             if info:
@@ -223,6 +264,14 @@ def run_online(args) -> dict:
         "num_users": num_users,
         "num_items": updater.num_items,
     }
+    if controller is not None:
+        # steady-state view: the back half of completions, after the
+        # controller has had the whole stream window to settle
+        steady = lat_ms[len(lat_ms) // 2:]
+        steady_p99 = float(np.percentile(steady, 99)) if steady.size else 0.0
+        report["slo"] = controller.report()
+        report["steady_p99_ms"] = steady_p99
+        report["slo_violated"] = bool(steady_p99 > args.slo_p99_ms)
     if fleet_stats is not None:
         replica_versions = {
             r["replica_id"]: r["version"] for r in fleet_stats["replicas"]
@@ -296,6 +345,14 @@ def main() -> None:
                         help="force the Pallas kernel path (default: TPU only)")
     parser.add_argument("--ckpt", default=None,
                         help="checkpoint dir (training + online deltas)")
+    parser.add_argument("--slo-p99-ms", type=float, default=0.0,
+                        help="enable the SLO-aware pruning controller with "
+                             "this p99 latency budget in ms (0 = off); the "
+                             "run exits non-zero if the steady-state p99 "
+                             "still violates the budget")
+    parser.add_argument("--slo-max-rate", type=float, default=0.8,
+                        help="ceiling on the controller's effective pruning "
+                             "rate (the quality floor)")
     parser.add_argument("--seed", type=int, default=0)
     parser.add_argument("--json", default=None, metavar="PATH",
                         help="also write the run report to PATH")
@@ -309,6 +366,11 @@ def main() -> None:
     if report["requests_failed"]:
         raise SystemExit(
             f"{report['requests_failed']} requests failed during the run"
+        )
+    if report.get("slo_violated"):
+        raise SystemExit(
+            f"SLO violated: steady-state p99 {report['steady_p99_ms']:.2f} ms"
+            f" > budget {args.slo_p99_ms:.2f} ms"
         )
 
 

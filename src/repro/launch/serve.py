@@ -21,6 +21,13 @@ Traffic modes on top of the one-shot lookup:
   the queue and blocks on its future, so concurrent HTTP clients coalesce
   into shared scoring launches.  ``GET /recommend?user=3&topk=10``.
 
+``--slo-p99-ms BUDGET`` arms the SLO-aware degradation loop for
+``--concurrent`` runs: an :class:`~repro.serving.slo.SLOController`
+observes client latency and queue depth while the load runs and adapts the
+pruning thresholds (up to ``--slo-max-rate``) to hold p99 under the
+budget; the process exits non-zero if the steady-state p99 (back half of
+the run) still violates it.
+
 With ``--replicas N`` (N > 1) the same traffic modes run against a serving
 *fleet* instead of a single engine: N replica engines
 (``--replica-backend local`` in-process, ``process`` as spawned children)
@@ -32,16 +39,45 @@ from __future__ import annotations
 
 import argparse
 import json
+import threading
 import time
 
 import numpy as np
 
 from repro.serving import (
+    LatencyWindow,
     QueueFullError,
     RequestTimeout,
     ServingEngine,
+    SLOConfig,
+    SLOController,
     load_mf_checkpoint,
 )
+
+
+def build_slo_controller(frontend, params, *, p99_budget_ms: float,
+                         max_rate: float, tick_ms: float) -> SLOController:
+    """Attach an :class:`SLOController` to either frontend kind.
+
+    Latency is observed client-side (one shared :class:`LatencyWindow` the
+    traffic loop records into), which works uniformly for a single engine
+    and for process-replica fleets where the queue lives in a child."""
+    config = SLOConfig(
+        p99_budget_ms=p99_budget_ms,
+        max_rate=max_rate,
+        tick_interval_s=tick_ms / 1e3,
+    )
+    window = LatencyWindow()
+    if isinstance(frontend, ServingEngine):
+        return SLOController(
+            frontend, config=config, window=window,
+            depth_fn=lambda: frontend.queue_depth,
+        )
+    return SLOController(
+        config=config, window=window, router=frontend.router,
+        depth_fn=lambda: sum(r.depth() for r in frontend.router.replicas),
+        params_fn=lambda: params,
+    )
 
 
 def _shutdown(frontend) -> None:
@@ -54,9 +90,14 @@ def _shutdown(frontend) -> None:
 
 
 def run_concurrent(frontend, n_requests: int, clients: int,
-                   topk: int, timeout: float) -> None:
+                   topk: int, timeout: float,
+                   controller: SLOController | None = None) -> dict:
     """Drive the async frontend (one engine, or a routed fleet) from
-    ``clients`` submitter threads."""
+    ``clients`` submitter threads.  With a ``controller`` the loop records
+    client-observed latency into its window and ticks it continuously, so
+    the pruning thresholds adapt while the load runs; the returned report
+    includes the controller state and the steady-state p99 (second half of
+    the run, after the control loop has had time to converge)."""
     from concurrent.futures import ThreadPoolExecutor
 
     queue = None
@@ -71,17 +112,41 @@ def run_concurrent(frontend, n_requests: int, clients: int,
                 frontend.topk(users[:b], topk)
 
     latencies = np.empty(n_requests)
+    done = [0]  # completion order, distinct from submission index i
+    done_lock = threading.Lock()
+    order = np.empty(n_requests)
 
     def client(i_u):
         i, u = i_u
         t0 = time.perf_counter()
         frontend.submit(int(u), topk, timeout=timeout).result(timeout=timeout)
-        latencies[i] = time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        latencies[i] = dt
+        if controller is not None:
+            controller.window.record(dt)
+        with done_lock:
+            order[done[0]] = dt
+            done[0] += 1
+
+    stop_tick = threading.Event()
+
+    def ticker():
+        while not stop_tick.is_set():
+            controller.maybe_tick()
+            stop_tick.wait(controller.config.tick_interval_s / 4)
+
+    tick_thread = None
+    if controller is not None:
+        tick_thread = threading.Thread(target=ticker, daemon=True)
+        tick_thread.start()
 
     start = time.perf_counter()
     with ThreadPoolExecutor(max_workers=clients) as pool:
         list(pool.map(client, enumerate(users)))
     wall = time.perf_counter() - start
+    if tick_thread is not None:
+        stop_tick.set()
+        tick_thread.join(10)
     stats = None if queue is not None else frontend.stats()
     _shutdown(frontend)
     p50, p99 = np.percentile(latencies * 1e3, [50, 99])
@@ -96,6 +161,36 @@ def run_concurrent(frontend, n_requests: int, clients: int,
                  f"policy={stats['policy']}, "
                  f"affinity hits {stats['affinity_hits']})")
     print(line)
+
+    report = {
+        "requests": n_requests,
+        "wall_s": wall,
+        "req_per_s": n_requests / wall,
+        "p50_ms": float(p50),
+        "p99_ms": float(p99),
+    }
+    if controller is not None:
+        # judge the SLO on the back half of completions: the front half is
+        # the controller still hunting for an operating point
+        steady = order[n_requests // 2:done[0]]
+        steady_p99 = (
+            float(np.percentile(steady * 1e3, 99)) if steady.size
+            else float("nan")
+        )
+        report["slo"] = controller.report()
+        report["steady_p99_ms"] = steady_p99
+        report["slo_violated"] = bool(
+            np.isfinite(steady_p99)
+            and steady_p99 > controller.config.p99_budget_ms
+        )
+        print(f"slo: steady-state p99 {steady_p99:.2f} ms vs budget "
+              f"{controller.config.p99_budget_ms:.2f} ms "
+              f"({'VIOLATED' if report['slo_violated'] else 'ok'}); "
+              f"rate {report['slo']['applied_rate']}, "
+              f"{report['slo']['degrades']} degrades / "
+              f"{report['slo']['relaxes']} relaxes over "
+              f"{report['slo']['ticks']} ticks")
+    return report
 
 
 def run_http(frontend, port: int, topk_default: int,
@@ -192,6 +287,16 @@ def main() -> None:
     parser.add_argument("--routing", choices=("affinity", "least", "random"),
                         default="affinity",
                         help="fleet routing policy (see serving/fleet/router)")
+    parser.add_argument("--slo-p99-ms", type=float, default=0.0,
+                        help="enable the SLO controller with this p99 "
+                             "latency budget (ms) for --concurrent; the "
+                             "process exits non-zero if the steady-state "
+                             "p99 still violates the budget (0 = off)")
+    parser.add_argument("--slo-max-rate", type=float, default=0.8,
+                        help="ceiling on the controller's effective pruning "
+                             "rate (the quality floor)")
+    parser.add_argument("--slo-tick-ms", type=float, default=100.0,
+                        help="controller tick interval (ms)")
     args = parser.parse_args()
 
     params, t_p, t_q, _, meta = load_mf_checkpoint(args.ckpt)
@@ -251,8 +356,26 @@ def main() -> None:
               f"({args.batched_requests / dt:.1f} req/s)")
 
     if args.concurrent:
-        run_concurrent(frontend, args.concurrent, args.clients, args.topk,
-                       args.timeout)
+        controller = None
+        if args.slo_p99_ms > 0:
+            controller = build_slo_controller(
+                frontend, params,
+                p99_budget_ms=args.slo_p99_ms,
+                max_rate=args.slo_max_rate,
+                tick_ms=args.slo_tick_ms,
+            )
+            print(f"# slo: p99 budget {args.slo_p99_ms} ms, floor rate "
+                  f"{controller.floor_rate:.3f}, max rate "
+                  f"{args.slo_max_rate}")
+        report = run_concurrent(frontend, args.concurrent, args.clients,
+                                args.topk, args.timeout,
+                                controller=controller)
+        if report.get("slo_violated"):
+            raise SystemExit(
+                f"SLO violated: steady-state p99 "
+                f"{report['steady_p99_ms']:.2f} ms > budget "
+                f"{args.slo_p99_ms:.2f} ms"
+            )
     elif frontend is not engine:
         frontend.close()
 

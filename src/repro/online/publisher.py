@@ -117,6 +117,13 @@ class SnapshotPublisher:
         self.subscribers: List = []
         self.acked: Dict[str, int] = {}
         self.reports: list = []
+        # SLO serving-threshold pin (set_serving_thresholds): while set,
+        # the primary engine swaps in with THESE thresholds instead of the
+        # snapshot's model thresholds, so a publish cannot silently revert
+        # the controller's degradation.  Checkpoints and wire messages keep
+        # the model values — durability records the model, not the runtime
+        # load response (subscriber sinks pin their own override).
+        self._serving_thresholds: Optional[Tuple[float, float]] = None
 
     # -- replication bus ------------------------------------------------------
     @property
@@ -139,6 +146,19 @@ class SnapshotPublisher:
         if sink_name is not None:
             self.acked[sink_name] = int(getattr(sink, "version", 0))
         return sink
+
+    def set_serving_thresholds(self, t_p, t_q) -> None:
+        """Pin the serving thresholds the primary engine swaps in with —
+        the :class:`~repro.serving.slo.SLOController` hook.  Overrides the
+        snapshot's model thresholds on every subsequent :meth:`publish`
+        until :meth:`clear_serving_thresholds`; keeping engine and override
+        thresholds equal also preserves the incremental ``same_geometry``
+        swap fast path between controller moves."""
+        self._serving_thresholds = (float(t_p), float(t_q))
+
+    def clear_serving_thresholds(self) -> None:
+        """Unpin: the next publish reverts to the snapshot's thresholds."""
+        self._serving_thresholds = None
 
     def lag(self) -> int:
         """Worst-case subscriber staleness in publish versions (0 = every
@@ -178,11 +198,14 @@ class SnapshotPublisher:
 
         start = time.perf_counter()
         engine_version = None
+        pin = self._serving_thresholds
+        serve_t_p = snap.t_p if pin is None else jnp.float32(pin[0])
+        serve_t_q = snap.t_q if pin is None else jnp.float32(pin[1])
         if self.engine is not None:
             engine_version = self.engine.swap(
                 snap.params,
-                snap.t_p,
-                snap.t_q,
+                serve_t_p,
+                serve_t_q,
                 touched_users=None if snap.full_rebuild else snap.touched_users,
                 touched_items=None if snap.full_rebuild else snap.touched_items,
                 touched_implicit_items=snap.touched_implicit_items,

@@ -13,3 +13,9 @@ from repro.serving.queue import (  # noqa: F401
     RequestQueue,
     RequestTimeout,
 )
+from repro.serving.slo import (  # noqa: F401
+    LatencyWindow,
+    SLOConfig,
+    SLOController,
+    SLODecision,
+)

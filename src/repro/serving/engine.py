@@ -121,6 +121,7 @@ class _Snapshot:
         user_history: Optional[np.ndarray],
         r_i: Optional[jnp.ndarray] = None,
         user_const: Optional[np.ndarray] = None,
+        compact_latent: bool = False,
     ):
         self.version = version
         self.params = params
@@ -131,6 +132,7 @@ class _Snapshot:
         self.block_n = block_n
         self.cache = cache
         self.user_history = user_history
+        self.compact_latent = compact_latent
 
         # ``r_i``/``user_const`` accept precomputed values so an incremental
         # swap can patch the previous snapshot's at the touched rows instead
@@ -194,10 +196,26 @@ class _Snapshot:
                 )
             return self._shard_layouts[n_model]
 
+    def _compact_k(self) -> int:
+        """Latent columns the streaming layout must keep under compaction:
+        every masked item row is zero beyond its effective rank, so columns
+        past ``max(r_i)`` are zero for the *whole* catalog and can be
+        truncated — this is what turns a tighter threshold into real CPU
+        FLOP savings instead of multiply-by-zero work.  Rounded up to a
+        multiple of 8 so threshold moves land on a handful of compiled
+        shapes instead of retracing per distinct rank."""
+        if not self.compact_latent or float(self.t_q) <= 0.0:
+            return self.k
+        r_max = max(int(jnp.max(self.r_i)), 1) if self.n_items else self.k
+        return min(self.k, ((r_max + 7) // 8) * 8)
+
     def _stream_layout_locked(self):
         # shard_layout holds _build_lock already; inline the lazy build
         if self._stream_layout is None:
             qm = self.params.q.astype(jnp.float32) * rank_mask(self.r_i, self.k)
+            k_eff = self._compact_k()
+            if k_eff < self.k:
+                qm = qm[:, :k_eff]
             self._stream_layout = tile_catalog(
                 qm, self.item_bias_vec, self.block_n
             )
@@ -238,14 +256,22 @@ class _Snapshot:
                 dict(self._kernel_shard_layouts),
             )
 
-    def clone_layouts_from(self, prev: "_Snapshot", touched_items: np.ndarray):
+    def clone_layouts_from(
+        self, prev: "_Snapshot", touched_items: np.ndarray
+    ) -> bool:
         """Carry ``prev``'s built layouts over to this snapshot, patching only
         the rows of ``touched_items`` — valid ONLY when thresholds, the
         catalog size, and the latent permutation are unchanged (the caller
         checks).  This is the double-buffer build of a hot swap: the
         rank/mask compute drops to O(touched * k), but note each ``.at[].set``
         runs outside jit and therefore copies its full buffer — per-swap
-        memory traffic stays O(n * k), only the recompute is saved."""
+        memory traffic stays O(n * k), only the recompute is saved.
+
+        Returns False — meaning "patch unsound, caller must full-rebuild" —
+        when a latent-compacted layout is too narrow for a touched row's new
+        effective rank (online updates grew a factor past the truncation
+        width; the 8-column rounding slack in ``_compact_k`` makes this
+        rare)."""
         k = self.k
         idx = jnp.asarray(touched_items, jnp.int32)
         q_rows = self.params.q[idx]
@@ -254,12 +280,21 @@ class _Snapshot:
         b_rows = self.item_bias_vec[idx]
         stream, kernel, shard, kernel_shard = prev.layouts_view()
 
+        compact_widths = [
+            layout[0].shape[2]
+            for layout in (stream, *shard.values())
+            if layout is not None and layout[0].shape[2] < k
+        ]
+        if compact_widths and int(jnp.max(r_rows)) > min(compact_widths):
+            return False
+
         if stream is not None:
             q_tiles, b_tiles, offs = stream
             block_n = q_tiles.shape[1]
+            kc = q_tiles.shape[2]
             t_idx, slot = idx // block_n, idx % block_n
             self._stream_layout = (
-                q_tiles.at[t_idx, slot].set(qm_rows),
+                q_tiles.at[t_idx, slot].set(qm_rows[:, :kc]),
                 b_tiles.at[t_idx, slot].set(b_rows),
                 offs,
             )
@@ -272,9 +307,10 @@ class _Snapshot:
             )
         for n_model, (q_tiles, b_tiles, offs) in shard.items():
             block_n = q_tiles.shape[1]
+            kc = q_tiles.shape[2]
             t_idx, slot = idx // block_n, idx % block_n
             self._shard_layouts[n_model] = (
-                q_tiles.at[t_idx, slot].set(qm_rows),
+                q_tiles.at[t_idx, slot].set(qm_rows[:, :kc]),
                 b_tiles.at[t_idx, slot].set(b_rows),
                 offs,
             )
@@ -284,6 +320,7 @@ class _Snapshot:
                 rip.at[idx, 0].set(r_rows),
                 biasp.at[idx, 0].set(b_rows),
             )
+        return True
 
     def build_like(self, prev: "_Snapshot"):
         """Eagerly build every layout ``prev`` had built (full rebuild path —
@@ -344,6 +381,7 @@ class ServingEngine:
         cache_size: int = 4096,
         user_history: Optional[np.ndarray] = None,
         allow_missing_history: bool = False,
+        compact_latent: bool = False,
     ):
         self.max_batch = max_batch
         self.block_n = block_n
@@ -352,6 +390,13 @@ class ServingEngine:
         self.use_kernel = use_kernel
         self.interpret = interpret
         self.cache_size = cache_size
+        # ``compact_latent=True`` truncates the streaming layout's latent
+        # axis to the catalog's max effective rank (rounded up to 8): with
+        # pruning on, scoring FLOPs actually drop with the threshold — the
+        # lever the SLO controller degrades along.  Scores can differ from
+        # the full-width path by reduction-order ulps at t > 0 (exact at
+        # t == 0, where no truncation happens), so it is opt-in.
+        self.compact_latent = compact_latent
 
         history = self._resolve_history(
             params, user_history, allow_missing_history
@@ -360,6 +405,7 @@ class ServingEngine:
         self._snap = _Snapshot(
             0, params, t_p, t_q,
             block_n=block_n, cache=cache, user_history=history,
+            compact_latent=compact_latent,
         )
         # Sharded scoring: compiled program per (mesh, topk, kernel-path) —
         # jit caches by function identity, so the shard_map closure must be
@@ -562,11 +608,20 @@ class ServingEngine:
                 user_history=user_history,
                 r_i=r_i_pre,
                 user_const=user_const_pre,
+                compact_latent=self.compact_latent,
             )
 
             if incremental:
                 if idx is not None and idx.size:
-                    new.clone_layouts_from(prev, idx)
+                    if not new.clone_layouts_from(prev, idx):
+                        # a touched row's rank outgrew the compacted latent
+                        # width: the patch would truncate real factors —
+                        # rebuild the layouts at the new width instead
+                        new._stream_layout = None
+                        new._kernel_layout = None
+                        new._shard_layouts = {}
+                        new._kernel_shard_layouts = {}
+                        new.build_like(prev)
                 else:  # nothing touched on the item side: layouts carry over
                     (new._stream_layout, new._kernel_layout,
                      new._shard_layouts,
@@ -696,10 +751,12 @@ class ServingEngine:
         if self.use_kernel:
             return self._topk_block_kernel(snap, pu, topk)
         q_tiles, b_tiles, offs = snap.stream_layout()
-        return stream_topk_tiles(
-            self._masked_user_block(snap, pu), q_tiles, b_tiles, offs,
-            topk=topk,
-        )
+        pm = self._masked_user_block(snap, pu)
+        if q_tiles.shape[2] < pm.shape[1]:
+            # latent-compacted layout: user columns past the catalog's max
+            # effective rank only ever multiply zeros — drop them too
+            pm = pm[:, : q_tiles.shape[2]]
+        return stream_topk_tiles(pm, q_tiles, b_tiles, offs, topk=topk)
 
     def _topk_block_kernel(self, snap: _Snapshot, pu: jnp.ndarray, topk: int):
         qp, rip, biasp = snap.kernel_layout()
@@ -869,6 +926,8 @@ class ServingEngine:
                 pm = pu.astype(jnp.float32)
             else:
                 pm = self._masked_user_block(snap, pu)
+                if layout[0].shape[2] < pm.shape[1]:
+                    pm = pm[:, : layout[0].shape[2]]
             if pad:
                 pm = jnp.pad(pm, ((0, pad), (0, 0)))
             if kernel:

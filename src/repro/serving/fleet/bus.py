@@ -32,6 +32,7 @@ import dataclasses
 import threading
 from typing import Callable, Dict, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt_lib
@@ -268,6 +269,11 @@ class EngineDeltaSink:
         self.replica_id = replica_id
         self._history = None if user_history is None else np.asarray(user_history)
         self._gate = VersionGate(self._apply_one, version=version)
+        # SLO serving-threshold pin: while set, replicated snapshots swap in
+        # with THESE thresholds instead of the message's model thresholds —
+        # otherwise every publish would silently revert the controller's
+        # degradation.  Runtime state only; checkpoints keep model values.
+        self._threshold_override: Optional[Tuple[float, float]] = None
 
     @property
     def version(self) -> int:
@@ -283,6 +289,24 @@ class EngineDeltaSink:
         """Offer one delivery to the gate; returns the acked version."""
         return self._gate.offer(msg)
 
+    def set_thresholds(self, t_p, t_q) -> int:
+        """Pin SLO serving thresholds: swap them into the engine now and
+        keep applying them over the model thresholds of every later
+        replicated snapshot (:class:`SLOController` decisions replicate
+        like any rolling update).  Pass ``None, None`` to unpin.  Returns
+        the replication version (unchanged — thresholds are orthogonal to
+        the snapshot chain)."""
+        if t_p is None and t_q is None:
+            self._threshold_override = None
+        else:
+            self._threshold_override = (float(t_p), float(t_q))
+            self.engine.swap(
+                self.engine.params,
+                jnp.float32(t_p), jnp.float32(t_q),
+                user_history=self.engine.user_history,
+            )
+        return self._gate.version
+
     def _apply_one(self, msg: DeltaMessage) -> None:
         # a full that fast-forwards over a version gap replaced MORE than
         # this publish's touched rows relative to what this replica serves
@@ -294,6 +318,10 @@ class EngineDeltaSink:
             self._history, msg,
         )
         self._history = history
+        if self._threshold_override is not None:
+            # serve with the pinned SLO thresholds, not the model's — the
+            # folded (model) values stay authoritative on the wire/disk
+            t_p, t_q = (jnp.float32(v) for v in self._threshold_override)
         if msg.full_rebuild or (msg.kind == "full" and not sequential):
             self.engine.swap(params, t_p, t_q, user_history=history)
         else:

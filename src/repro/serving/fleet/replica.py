@@ -86,6 +86,11 @@ class LocalReplica:
         on the old snapshot, the queue never pauses."""
         return self._sink.apply_update(msg)
 
+    def set_thresholds(self, t_p, t_q) -> int:
+        """Pin SLO serving thresholds on this replica (see
+        :meth:`~repro.serving.fleet.bus.EngineDeltaSink.set_thresholds`)."""
+        return self._sink.set_thresholds(t_p, t_q)
+
     def depth(self) -> int:
         """Queued + in-scoring requests — the router's load signal."""
         return self.engine.queue_depth
@@ -146,10 +151,11 @@ def _replica_main(conn, replica_id: str, init: dict,
     """Child process entry: run a :class:`LocalReplica`, serve the pipe.
 
     Protocol (parent -> child): ``("submit", rid, user, topk, timeout,
-    priority)``, ``("update", msg)``, ``("stats",)``, ``("close",)``.
+    priority)``, ``("update", msg)``, ``("thresholds", t_p, t_q)``,
+    ``("stats",)``, ``("close",)``.
     Child -> parent: ``("ready", version, num_users)``, ``("result", rid,
     scores, items)``, ``("error", rid, repr)``, ``("ack", version, ack)``,
-    ``("stats", dict)``, ``("bye",)``.
+    ``("tack", ack)``, ``("stats", dict)``, ``("bye",)``.
     """
     send_lock = threading.Lock()
 
@@ -205,6 +211,14 @@ def _replica_main(conn, replica_id: str, init: dict,
                     send("error", -1, f"{type(exc).__name__}: {exc}")
                 else:
                     send("ack", msg.version, ack)
+            elif op == "thresholds":
+                tp, tq = rest
+                try:
+                    ack = replica.set_thresholds(tp, tq)
+                except Exception as exc:
+                    send("error", -1, f"{type(exc).__name__}: {exc}")
+                else:
+                    send("tack", ack)
             elif op == "stats":
                 send("stats", replica.stats())
             elif op == "close":
@@ -261,6 +275,8 @@ class ProcessReplica:
         self._ack_event = threading.Condition()
         self._stats: Optional[dict] = None
         self._stats_event = threading.Event()
+        self._tack: Optional[int] = None
+        self._tack_event = threading.Event()
         self._ready = threading.Event()
         self._bye = threading.Event()
         self.version = 0
@@ -307,6 +323,9 @@ class ProcessReplica:
                 with self._ack_event:
                     self._acks[version] = ack
                     self._ack_event.notify_all()
+            elif op == "tack":
+                (self._tack,) = rest
+                self._tack_event.set()
             elif op == "stats":
                 (self._stats,) = rest
                 self._stats_event.set()
@@ -359,6 +378,20 @@ class ProcessReplica:
             ack = self._acks.pop(msg.version)
         self.version = max(self.version, ack)
         return ack
+
+    def set_thresholds(self, t_p, t_q, *, timeout: float = 120.0) -> int:
+        """Pin SLO serving thresholds in the child and block for its ack —
+        same synchronization discipline as :meth:`apply_update` (the
+        rolling rollout must not move on before the swap lands)."""
+        self._tack_event.clear()
+        tp = None if t_p is None else float(t_p)
+        tq = None if t_q is None else float(t_q)
+        self._send("thresholds", tp, tq)
+        if not self._tack_event.wait(timeout):
+            raise TimeoutError(
+                f"replica {self.replica_id}: threshold swap not acked"
+            )
+        return int(self._tack)
 
     def depth(self) -> int:
         """Requests submitted here and not yet resolved — the parent-side

@@ -68,10 +68,13 @@ class Router:
         """Choose a replica index for one request (does not submit)."""
         with self._lock:
             self.routed += 1
+            if self.policy == "random":
+                # random ignores load entirely — polling depth() on every
+                # replica under the lock (the old behaviour) was pure
+                # per-request overhead and needless lock contention
+                return int(self._rng.integers(len(self.replicas)))
             depths = [r.depth() for r in self.replicas]
             least = int(np.argmin(depths))
-            if self.policy == "random":
-                return int(self._rng.integers(len(self.replicas)))
             if self.policy == "least" or priority > 0:
                 # background class: depth only, never pinned — bulk traffic
                 # must not evict interactive users' affinity entries
@@ -110,6 +113,18 @@ class Router:
         acks: Dict[str, int] = {}
         for rep in self.replicas:
             acks[rep.replica_id] = rep.apply_update(msg)
+        return acks
+
+    def apply_thresholds(self, t_p, t_q) -> Dict[str, int]:
+        """Rolling serving-threshold rollout — the SLO controller's fleet
+        fan-out.  Same one-replica-at-a-time discipline as
+        :meth:`apply_update` (the fleet never dips below N-1 live
+        replicas mid-swap); each replica pins the thresholds in its delta
+        sink so later replicated snapshots keep them.  Returns
+        ``{replica_id: replication_version}`` acks."""
+        acks: Dict[str, int] = {}
+        for rep in self.replicas:
+            acks[rep.replica_id] = rep.set_thresholds(t_p, t_q)
         return acks
 
     def stats(self) -> Dict[str, Any]:

@@ -45,6 +45,8 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from repro.serving.slo import LatencyWindow
+
 _INF = float("inf")
 
 
@@ -65,6 +67,7 @@ class _Pending:
     topk: int = field(compare=False)
     user_id: int = field(compare=False)
     future: Future = field(compare=False)
+    submitted: float = field(compare=False, default=0.0)  # arrival time
 
 
 def _fail(fut: Future, exc: Exception) -> None:
@@ -111,6 +114,7 @@ class RequestQueue:
         max_pending: int = 4096,
         linger_ms: float = 0.0,
         deadline_bucket_ms: float = 50.0,
+        latency_window: int = 2048,
         start: bool = True,
     ):
         if max_pending <= 0:
@@ -131,6 +135,9 @@ class RequestQueue:
         self.batches_served = 0
         self.expired = 0
         self.rejected = 0
+        # per-request submit->completion latency histogram over the last
+        # ``latency_window`` requests — the SLO controller's p50/p99 signal
+        self.latency = LatencyWindow(latency_window)
         self._thread: Optional[threading.Thread] = None
         if start:
             self.start()
@@ -229,6 +236,7 @@ class RequestQueue:
         req = _Pending(
             bucket, int(priority), next(self._seq),
             deadline, int(topk), int(user_id), fut,
+            time.monotonic(),
         )
         with self._cond:
             if self._closed:
@@ -256,6 +264,28 @@ class RequestQueue:
         return fut
 
     # -- scheduling ----------------------------------------------------------
+    def _schedulable_locked(self) -> int:
+        """Requests the next :meth:`_pop_batch` would actually schedule:
+        un-expired entries in the scheduling-order winner's topk bucket.
+        This is what the linger wait must count toward ``max_batch`` —
+        counting raw heap length (the old behaviour) ends the linger early
+        on expired requests and other-bucket requests that cannot join the
+        batch.  Caller holds ``self._cond``."""
+        now = time.monotonic()
+        best: Optional[_Pending] = None
+        for req in self._heap:
+            if req.deadline < now:
+                continue
+            if best is None or req < best:
+                best = req
+        if best is None:
+            return 0
+        win = best.topk
+        return sum(
+            1 for req in self._heap
+            if req.deadline >= now and req.topk == win
+        )
+
     def _pop_batch(self) -> List[_Pending]:
         """Pop the next batch under the lock: the scheduling-order winner
         (deadline bucket, then priority, then arrival) defines the topk
@@ -317,9 +347,11 @@ class RequestQueue:
                 _fail(req.future, exc)
             return
         row = {uid: i for i, uid in enumerate(users)}
+        done = time.monotonic()
         for req in batch:  # deadline order == batch order
             r = row[req.user_id]
             req.future.set_result((scores[r].copy(), idx[r].copy()))
+            self.latency.record(done - req.submitted, priority=req.priority)
         self.requests_served += len(batch)
         self.batches_served += 1
 
@@ -342,7 +374,10 @@ class RequestQueue:
                         self._cond.wait()
                     if self.linger_s > 0 and self._heap and not self._closed:
                         limit = time.monotonic() + self.linger_s
-                        while len(self._heap) < self.max_batch and not self._closed:
+                        while (
+                            self._schedulable_locked() < self.max_batch
+                            and not self._closed
+                        ):
                             remaining = limit - time.monotonic()
                             if remaining <= 0:
                                 break

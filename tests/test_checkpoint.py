@@ -111,22 +111,119 @@ def test_elastic_load_reshards(tmp_path):
 
 def test_crash_leaves_no_partial_checkpoint(tmp_path, monkeypatch):
     """A writer that dies mid-save must not publish a loadable-but-corrupt
-    step (atomic rename contract)."""
+    step (atomic symlink-swap publish contract)."""
     import repro.checkpoint.checkpoint as mod
 
-    real_rename = os.rename
+    real_replace = os.replace
     calls = {"n": 0}
 
-    def exploding_rename(src, dst):
-        if "step_" in os.path.basename(dst) and calls["n"] == 0:
+    def exploding_replace(src, dst):
+        if ".lnk." in os.path.basename(src) and calls["n"] == 0:
             calls["n"] += 1
             raise RuntimeError("simulated preemption mid-publish")
-        return real_rename(src, dst)
+        return real_replace(src, dst)
 
-    monkeypatch.setattr(mod.os, "rename", exploding_rename)
+    monkeypatch.setattr(mod.os, "replace", exploding_replace)
     with pytest.raises(RuntimeError):
         ckpt.save(str(tmp_path), 5, _tree())
     assert ckpt.all_steps(str(tmp_path)) == []  # nothing published
     monkeypatch.undo()
     ckpt.save(str(tmp_path), 5, _tree())
     assert ckpt.all_steps(str(tmp_path)) == [5]
+
+
+def test_resave_never_exposes_missing_checkpoint(tmp_path):
+    """ISSUE-7 bugfix: the old publish (`rmtree(final)` + `rename`) opened
+    a window where the step did not exist.  The symlink-swap publish must
+    keep the step loadable at every instant while a writer re-saves it."""
+    import threading
+
+    directory = str(tmp_path)
+    ckpt.save(directory, 3, _tree(0))
+    stop = threading.Event()
+    writer_error = []
+
+    def writer():
+        i = 1
+        try:
+            while not stop.is_set():
+                ckpt.save(directory, 3, _tree(i % 5), keep=2)
+                i += 1
+        except BaseException as e:  # surfaced in the main thread
+            writer_error.append(e)
+
+    t = threading.Thread(target=writer, daemon=True)
+    t.start()
+    try:
+        deadline = __import__("time").monotonic() + 5.0
+        reads = 0
+        while __import__("time").monotonic() < deadline:
+            arrays, meta = ckpt.load_raw(directory, 3)
+            # payload must be complete AND internally consistent
+            assert meta["step"] == 3
+            assert sorted(arrays) == meta["keys"]
+            reads += 1
+    finally:
+        stop.set()
+        t.join(30)
+    assert not writer_error, writer_error
+    assert reads > 10  # the loop actually raced the writer
+
+
+def test_gc_sweeps_orphans_but_keeps_live_payloads(tmp_path, monkeypatch):
+    import repro.checkpoint.checkpoint as mod
+
+    directory = str(tmp_path)
+    ckpt.save(directory, 1, _tree(0))
+    # superseded payload: re-save the same step (old payload now orphaned)
+    ckpt.save(directory, 1, _tree(1))
+    data_dirs = [n for n in os.listdir(directory) if ".data." in n]
+    assert len(data_dirs) == 2  # old payload lingers for in-flight readers
+    # an eager sweep removes the orphan but never the live payload
+    monkeypatch.setattr(mod, "_STALE_SECONDS", -1.0)
+    ckpt.save(directory, 2, _tree(2))
+    live = {
+        os.readlink(os.path.join(directory, f"step_{s:012d}"))
+        for s in ckpt.all_steps(directory)
+    }
+    remaining = {n for n in os.listdir(directory) if ".data." in n}
+    assert remaining == live
+    restored, meta = ckpt.restore(directory, _tree(), step=1)
+    np.testing.assert_array_equal(
+        np.asarray(restored["a"]), np.asarray(_tree(1)["a"])
+    )
+
+
+def test_retention_removes_link_and_payload(tmp_path):
+    for step in range(5):
+        ckpt.save(str(tmp_path), step, _tree(step), keep=2)
+    assert ckpt.all_steps(str(tmp_path)) == [3, 4]
+    names = os.listdir(str(tmp_path))
+    # retired steps leave no symlink behind (their payloads wait for the
+    # stale sweep only if a re-save superseded them; retention removes both)
+    assert not any(n == "step_000000000000" for n in names)
+    for s in (3, 4):
+        restored, _ = ckpt.restore(str(tmp_path), _tree(), step=s)
+        np.testing.assert_array_equal(
+            np.asarray(restored["a"]), np.asarray(_tree(s)["a"])
+        )
+
+
+def test_legacy_real_directory_step_upgrades_to_symlink(tmp_path):
+    """Directories written by the pre-symlink layout must re-save cleanly."""
+    import json as json_lib
+
+    legacy = tmp_path / "step_000000000007"
+    legacy.mkdir()
+    arrays = {"root": np.arange(3)}
+    np.savez(str(legacy / "arrays.npz"), **arrays)
+    (legacy / "metadata.json").write_text(
+        json_lib.dumps({"step": 7, "keys": ["root"]})
+    )
+    assert ckpt.all_steps(str(tmp_path)) == [7]
+    ckpt.save(str(tmp_path), 7, _tree(2))
+    assert os.path.islink(str(tmp_path / "step_000000000007"))
+    restored, _ = ckpt.restore(str(tmp_path), _tree(), step=7)
+    np.testing.assert_array_equal(
+        np.asarray(restored["a"]), np.asarray(_tree(2)["a"])
+    )

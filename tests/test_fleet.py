@@ -369,6 +369,37 @@ def test_router_random_policy_ignores_affinity():
     assert router.affinity_hits == 0
 
 
+def test_router_random_never_polls_depth():
+    """ISSUE-7 bugfix: random routing must not pay a depth() poll per
+    replica per request — for process replicas that is lock + dict work on
+    the hot path for a signal the policy never reads."""
+
+    class _NoDepth(_StubReplica):
+        def depth(self):
+            raise AssertionError("random policy polled depth()")
+
+    router = Router([_NoDepth("a"), _NoDepth("b")], policy="random", seed=1)
+    picks = {router.pick(u) for u in range(64)}
+    assert picks == {0, 1}
+    # the load-aware policies still read it, of course
+    router_least = Router([_StubReplica("a"), _StubReplica("b", depth=5)],
+                          policy="least")
+    assert router_least.pick(0) == 0
+
+
+def test_router_rolling_threshold_rollout_acks_every_replica():
+    class _ThresholdStub(_StubReplica):
+        def set_thresholds(self, t_p, t_q):
+            self.thresholds = (t_p, t_q)
+            return self.version
+
+    reps = [_ThresholdStub("a"), _ThresholdStub("b")]
+    router = Router(reps)
+    acks = router.apply_thresholds(0.03, 0.04)
+    assert acks == {"a": 0, "b": 0}
+    assert all(r.thresholds == (0.03, 0.04) for r in reps)
+
+
 def test_router_rolling_update_acks_every_replica():
     reps = [_StubReplica("a"), _StubReplica("b"), _StubReplica("c")]
     router = Router(reps)

@@ -496,15 +496,12 @@ def test_delta_chain_gc_anchor_and_break_detection(tmp_path):
     np.testing.assert_array_equal(np.asarray(folded.q),
                                   np.asarray(upd.params.q))
     # sabotage: delete the anchor so the surviving deltas have no base
-    import shutil, os
     fulls = [s for s in steps
-             if __import__("json").load(open(os.path.join(
-                 str(tmp_path / "online"), f"step_{s:012d}",
-                 "metadata.json")))["kind"] == "full"]
+             if ckpt_lib.load_metadata(str(tmp_path / "online"), s)["kind"]
+             == "full"]
     assert fulls, "publisher must have written a periodic full anchor"
     for s in fulls:
-        shutil.rmtree(os.path.join(str(tmp_path / "online"),
-                                   f"step_{s:012d}"))
+        ckpt_lib._remove_step(str(tmp_path / "online"), s)
     with pytest.raises(ValueError, match="chain broken"):
         fold_deltas(str(tmp_path / "online"), params, 0.0, 0.0)
 

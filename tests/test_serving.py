@@ -472,3 +472,101 @@ def test_sharded_topk_kernel_path_4device_mesh():
         got_s, got_i = engine.topk_sharded(users, 7, mesh=mesh)
         assert np.array_equal(want_i, got_i), (shape, names)
         np.testing.assert_allclose(want_s, got_s, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# latent-axis compaction (ISSUE-7: the FLOP-shedding behind SLO degradation)
+# ---------------------------------------------------------------------------
+
+
+def _grid_params(m, n, k, live_cols, seed=0):
+    """Factor tables on the 1/8 grid (exact f32 dot products), with item
+    factors zero beyond ``live_cols`` so effective ranks — and therefore the
+    compacted latent width — are bounded by construction."""
+    rng = np.random.default_rng(seed)
+    p = (rng.integers(-16, 17, (m, k)) / 8.0).astype(np.float32)
+    q = np.zeros((n, k), np.float32)
+    live = (rng.integers(1, 17, (n, live_cols)) / 8.0).astype(np.float32)
+    q[:, :live_cols] = live * rng.choice([-1.0, 1.0], (n, live_cols))
+    return mf.MFParams(jnp.asarray(p), jnp.asarray(q), None, None, None, None)
+
+
+def test_compact_latent_bitwise_equal_and_actually_truncates():
+    """compact_latent=True must serve byte-identical results (grid inputs
+    make exact equality the contract) while the streaming layout really is
+    narrower than k."""
+    k, live = 32, 12
+    params = _grid_params(20, 500, k, live, seed=3)
+    t = 0.05  # every |factor| >= 1/8 > t: ranks == live column count
+    plain = ServingEngine(params, t, t, use_kernel=False, block_n=128)
+    compact = ServingEngine(params, t, t, use_kernel=False, block_n=128,
+                            compact_latent=True)
+    users = np.arange(20)
+    s0, i0 = plain.topk(users, 7)
+    s1, i1 = compact.topk(users, 7)
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+    assert np.array_equal(np.asarray(s0), np.asarray(s1))
+    q_tiles = compact._snap.stream_layout()[0]
+    assert q_tiles.shape[2] == 16   # round8(12) — truncated from 32
+    assert plain._snap.stream_layout()[0].shape[2] == k
+
+
+def test_compact_latent_disabled_at_rate_zero():
+    """t == 0 means pruning disabled: compaction must not alter the layout
+    and serving stays bitwise dense."""
+    params = _grid_params(16, 300, 24, 24, seed=4)
+    compact = ServingEngine(params, 0.0, 0.0, use_kernel=False, block_n=64,
+                            compact_latent=True)
+    assert compact._snap.stream_layout()[0].shape[2] == 24
+    want_s, want_i = _dense_oracle(params, jnp.arange(16), 0.0, 0.0, 5)
+    got_s, got_i = compact.topk(np.arange(16), 5)
+    assert np.array_equal(want_i, np.asarray(got_i))
+    assert np.array_equal(want_s, np.asarray(got_s))
+
+
+def test_compact_swap_rebuilds_when_rank_outgrows_width():
+    """An online update that grows a touched row's effective rank past the
+    compacted width must force a full layout rebuild (a patch would silently
+    truncate the new factors)."""
+    k, live = 32, 12
+    params = _grid_params(20, 500, k, live, seed=5)
+    t = 0.05
+    engine = ServingEngine(params, t, t, use_kernel=False, block_n=128,
+                           compact_latent=True)
+    engine.topk(np.arange(4), 5)  # force the (narrow) layout build
+    assert engine._snap.stream_layout()[0].shape[2] == 16
+    # touched item now uses ALL k latent columns
+    q_new = np.asarray(params.q).copy()
+    q_new[7] = (np.arange(k) % 8 + 1) / 8.0
+    new_params = params._replace(q=jnp.asarray(q_new))
+    engine.swap(new_params, t, t, touched_users=np.array([0]),
+                touched_items=np.array([7]))
+    # the rebuild widened the layout to cover the grown rank
+    assert engine._snap.stream_layout()[0].shape[2] == k
+    fresh = ServingEngine(new_params, t, t, use_kernel=False, block_n=128)
+    s0, i0 = fresh.topk(np.arange(20), 7)
+    s1, i1 = engine.topk(np.arange(20), 7)
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+    assert np.array_equal(np.asarray(s0), np.asarray(s1))
+
+
+def test_compact_swap_patches_when_rank_fits():
+    """Touched rows whose ranks stay inside the compacted width keep the
+    incremental patch path — and results stay bitwise right."""
+    k, live = 32, 12
+    params = _grid_params(20, 500, k, live, seed=6)
+    t = 0.05
+    engine = ServingEngine(params, t, t, use_kernel=False, block_n=128,
+                           compact_latent=True)
+    engine.topk(np.arange(4), 5)
+    q_new = np.asarray(params.q).copy()
+    q_new[3, :10] = (np.arange(10) % 8 + 1) / 8.0  # rank 10 <= width 16
+    new_params = params._replace(q=jnp.asarray(q_new))
+    engine.swap(new_params, t, t, touched_users=np.array([0]),
+                touched_items=np.array([3]))
+    assert engine._snap.stream_layout()[0].shape[2] == 16  # still compact
+    fresh = ServingEngine(new_params, t, t, use_kernel=False, block_n=128)
+    s0, i0 = fresh.topk(np.arange(20), 7)
+    s1, i1 = engine.topk(np.arange(20), 7)
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+    assert np.array_equal(np.asarray(s0), np.asarray(s1))

@@ -382,3 +382,58 @@ def test_engine_submit_passes_priority(engine):
         scores, items = fut.result(timeout=60)
         assert scores.shape == (5,) and items.shape == (5,)
     engine.stop()
+
+
+# ---------------------------------------------------------------------------
+# linger waits for SCHEDULABLE requests, not raw heap length (ISSUE-7 bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_linger_counts_only_schedulable_winning_bucket(engine):
+    """The linger wait must fill the batch with requests that can actually
+    join it.  Before the fix, raw heap length was compared to ``max_batch``,
+    so other-topk-bucket (and expired) entries ended the linger early and
+    the winning bucket launched underfilled."""
+    calls = []
+    real = engine.topk
+
+    def spy(users, topk):
+        calls.append((list(users), topk))
+        return real(users, topk)
+
+    q = RequestQueue(engine, score_fn=spy, max_batch=3, linger_ms=500.0)
+    f0 = q.submit(10, 10, timeout=30.0, priority=0)
+    # two other-bucket requests: with the bug, heap length hits max_batch=3
+    # and the linger ends with the topk=10 bucket holding a single request
+    other = [q.submit(u, 5, timeout=30.0, priority=5) for u in (11, 12)]
+    time.sleep(0.1)
+    late = [q.submit(u, 10, timeout=30.0, priority=0) for u in (13, 14)]
+    for fut in [f0, *other, *late]:
+        fut.result(timeout=60)
+    q.close()
+    first_topk10 = next(c for c in calls if c[1] == 10)
+    assert sorted(first_topk10[0]) == [10, 13, 14], (
+        "linger ended early: winning-bucket batch launched underfilled"
+    )
+
+
+def test_schedulable_locked_ignores_expired_and_other_buckets(engine):
+    """Unit view of the counting rule the linger loop relies on."""
+    q = RequestQueue(engine, start=False, max_batch=8)
+    q.submit(1, 10, timeout=60.0)
+    q.submit(2, 10, timeout=60.0)
+    q.submit(3, 5, timeout=60.0)        # other topk bucket
+    expired = q.submit(4, 10, timeout=1e-9)  # will be expired by now
+    time.sleep(0.01)
+    with q._cond:
+        assert q._schedulable_locked() == 2
+    # all-expired heap counts zero schedulable
+    q2 = RequestQueue(engine, start=False)
+    q2.submit(5, 10, timeout=1e-9)
+    time.sleep(0.01)
+    with q2._cond:
+        assert q2._schedulable_locked() == 0
+    q.close()
+    q2.close()
+    with pytest.raises(RequestTimeout):
+        expired.result(0)

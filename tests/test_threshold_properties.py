@@ -1,0 +1,150 @@
+"""Property tests: the Eq. 7/8 threshold solve round-trips with the
+empirical pruned fraction, and ``rate=0`` means *exact* dense parity on
+every serving path.
+
+The solver fits N(mu, sigma) to the factor matrix and bisects Eq. 8, so
+the round-trip ``rate -> threshold_for_rate -> empirical_pruned_fraction``
+is exact for the fitted normal and approximate for the sample; Gaussian-
+family matrices (dense, near-sparse small-sigma, shifted, column-permuted)
+keep the model error small enough to bound tightly.  A column permutation
+changes nothing the fit sees, so the measured fraction must be exactly
+invariant — that pins the solve to the value *distribution*, not the
+latent layout (rearrangement-safe, which online recalibration relies on).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core import mf
+from repro.core.threshold import (
+    MatrixStats,
+    _pruned_fraction,
+    empirical_pruned_fraction,
+    measure_stats,
+    solve_x,
+    threshold_for_rate,
+)
+from repro.kernels import ops, ref
+from repro.serving import ServingEngine
+
+
+def _gaussian(m, k, mu, sigma, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(mu, sigma, (m, k)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# solver exactness on its own model
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    mu=st.floats(-0.5, 0.5),
+    sigma=st.floats(0.02, 1.0),
+    rate=st.floats(0.01, 0.95),
+)
+def test_solve_x_inverts_pruned_fraction(mu, sigma, rate):
+    """Bisection must land on the x whose fitted-normal pruned mass is the
+    asked rate — the solver is exact on its own model."""
+    x = solve_x(jnp.float32(mu), jnp.float32(sigma), jnp.float32(rate))
+    frac = float(_pruned_fraction(x, jnp.float32(mu), jnp.float32(sigma)))
+    assert frac == pytest.approx(rate, abs=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(rate=st.floats(0.05, 0.9), seed=st.integers(0, 50))
+def test_threshold_rate_roundtrip_dense_gaussian(rate, seed):
+    """rate -> T -> measured fraction round-trips within sampling error on
+    a matrix the fitted normal describes well."""
+    q = _gaussian(512, 64, 0.0, 0.1, seed)
+    t = threshold_for_rate(measure_stats(q), rate)
+    measured = float(empirical_pruned_fraction(q, t))
+    assert measured == pytest.approx(rate, abs=0.03)
+
+
+@pytest.mark.parametrize("mu,sigma,label", [
+    (0.0, 0.1, "centered"),
+    (0.05, 0.1, "shifted"),
+    (0.0, 0.005, "near-sparse"),   # tiny magnitudes: most factors prunable
+    (-0.08, 0.2, "negative-mean"),
+])
+@pytest.mark.parametrize("rate", [0.1, 0.45, 0.8])
+def test_threshold_rate_roundtrip_matrix_families(mu, sigma, label, rate):
+    q = _gaussian(1024, 32, mu, sigma, seed=7)
+    t = threshold_for_rate(measure_stats(q), rate)
+    measured = float(empirical_pruned_fraction(q, t))
+    assert measured == pytest.approx(rate, abs=0.03), label
+
+
+@settings(max_examples=20, deadline=None)
+@given(rate=st.floats(0.05, 0.9), seed=st.integers(0, 20))
+def test_rearranged_matrix_same_threshold_same_fraction(rate, seed):
+    """Column permutation (what online recalibration's rearrange does) must
+    change neither the fitted stats nor the measured pruned fraction."""
+    q = _gaussian(256, 48, 0.01, 0.12, seed)
+    perm = np.random.default_rng(seed + 1).permutation(48)
+    q_re = q[:, perm]
+    s, s_re = measure_stats(q), measure_stats(q_re)
+    np.testing.assert_allclose(float(s.mu), float(s_re.mu), atol=1e-7)
+    np.testing.assert_allclose(float(s.sigma), float(s_re.sigma), atol=1e-7)
+    t = threshold_for_rate(s, rate)
+    assert float(empirical_pruned_fraction(q, t)) == float(
+        empirical_pruned_fraction(q_re, t)
+    )
+
+
+def test_rate_zero_threshold_is_exactly_zero():
+    """Not approximately zero: the serving stack treats T == 0.0 as
+    "pruning disabled" and the SLO relax-to-floor path needs bit-exact
+    dense parity, so the bisection's float residue must be masked out."""
+    for seed in range(5):
+        q = _gaussian(128, 16, 0.02, 0.3, seed)
+        t = threshold_for_rate(measure_stats(q), 0.0)
+        assert float(t) == 0.0
+        assert float(threshold_for_rate(measure_stats(q), -0.1)) == 0.0
+        assert float(empirical_pruned_fraction(q, t)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# rate=0 ==> bitwise dense parity on every serving path
+# ---------------------------------------------------------------------------
+
+
+def _dense_oracle(p, q, topk):
+    scores = np.asarray(p) @ np.asarray(q).T
+    idx = np.argsort(-scores, axis=1, kind="stable")[:, :topk]
+    return np.take_along_axis(scores, idx, axis=1), idx
+
+
+def test_rate_zero_is_bitwise_dense_on_serving_paths():
+    params = mf.init_params(jax.random.PRNGKey(0), 24, 400, 16,
+                            variant="plain")
+    t_p = threshold_for_rate(measure_stats(params.p), 0.0)
+    t_q = threshold_for_rate(measure_stats(params.q), 0.0)
+    users = np.arange(24)
+
+    # streaming scan path
+    engine = ServingEngine(params, t_p, t_q, use_kernel=False, block_n=128)
+    s_stream, i_stream = engine.topk(users, 9)
+    # interpreted Pallas kernel path
+    s_kern, i_kern = ops.pruned_topk(
+        params.p, params.q, t_p, t_q, 9, use_kernel=True, interpret=True
+    )
+    # reference pruned implementation at full ranks
+    from repro.core.ranks import effective_ranks
+    r_u = effective_ranks(params.p, t_p)
+    r_i = effective_ranks(params.q, t_q)
+    assert int(jnp.min(r_u)) == 16 and int(jnp.min(r_i)) == 16  # nothing cut
+    s_ref, i_ref = ref.pruned_topk_ref(params.p, params.q, r_u, r_i, 9)
+
+    _, i_dense = _dense_oracle(params.p, params.q, 9)
+    for name, (s, i) in {
+        "stream": (s_stream, i_stream),
+        "kernel": (s_kern, i_kern),
+        "ref": (s_ref, i_ref),
+    }.items():
+        assert np.array_equal(np.asarray(i), i_dense), name
+        assert np.array_equal(np.asarray(s), np.asarray(s_ref)), name
