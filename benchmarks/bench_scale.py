@@ -1,0 +1,176 @@
+"""Out-of-core data-path benchmarks: the million-user scaling story.
+
+Sweeps the user count upward and trains one epoch per size from an on-disk
+ratings store (``src/repro/store``), recording to ``BENCH_scale.json``:
+
+* **bounded host memory** — the anonymous-RSS delta across the streamed
+  epoch must stay flat as the dataset grows: the prefetch queue depth, not
+  the ratings count, bounds what the training loop keeps resident.  The
+  assertion looks at *anonymous* RSS (``/proc/self/smaps_rollup``), because
+  the store's mmap'd shard pages are reclaimable page cache the kernel
+  drops under pressure — counting them would call a healthy mmap read-path
+  a leak;
+* **streaming tax** — steps/sec of the prefetched slab path vs the
+  all-in-memory device-resident scan (``PackedRatings``) at a size where
+  both fit: the streamed path must hold >= ``MIN_THROUGHPUT_RATIO`` of the
+  in-memory throughput (best-of-N epochs on both sides, so a noisy shared
+  machine measures the pipeline, not the scheduler).
+"""
+from __future__ import annotations
+
+import gc
+import shutil
+import tempfile
+import time
+
+import jax
+
+from benchmarks.common import (
+    anonymous_rss_mb,
+    emit,
+    peak_rss_mb,
+    reset_records,
+    write_json,
+)
+from repro.core.trainer import DPMFTrainer, TrainConfig
+from repro.data import synthetic_ratings
+from repro.store import build_store
+
+MIN_THROUGHPUT_RATIO = 0.8   # streamed vs in-memory steps/sec floor
+FLATNESS_SLACK_MB = 64.0     # allowed anon-RSS delta growth across the sweep
+RATINGS_PER_USER = 10
+
+
+def _cfg(store_dir: str, batch: int, slab_steps: int, k: int) -> TrainConfig:
+    return TrainConfig(
+        k=k, epochs=4, batch_size=batch, pruning_rate=0.5, seed=0,
+        store_dir=store_dir, slab_steps=slab_steps, prefetch_slabs=2,
+    )
+
+
+def _best_epoch_wall(trainer: DPMFTrainer, epochs: int = 3) -> float:
+    """Best steady-state epoch seconds (epoch 0 = compile, excluded)."""
+    times = []
+    for _ in range(epochs):
+        start = time.perf_counter()
+        trainer.run_epoch()
+        times.append(time.perf_counter() - start)
+    return min(times)
+
+
+def run(*, full: bool = False, smoke: bool = False) -> None:
+    reset_records()
+    if smoke:
+        user_sweep, batch, slab_steps, k = [2_000, 8_000], 128, 32, 8
+    elif full:
+        # the headline sweep: O(10^6) user rows streamed from disk
+        user_sweep, batch, slab_steps, k = (
+            [100_000, 400_000, 1_000_000], 4096, 64, 32
+        )
+    else:
+        user_sweep, batch, slab_steps, k = [10_000, 40_000, 160_000], 1024, 64, 16
+
+    workdir = tempfile.mkdtemp(prefix="bench_scale_")
+    deltas = {}
+    streamed_sps = {}
+    try:
+        for users in user_sweep:
+            # ratings rounded to whole slabs so every size compiles the same
+            # (slab_steps, batch) scan — the sweep then measures data-path
+            # memory, not per-size XLA compilation
+            ratings = max(
+                batch * slab_steps,
+                users * RATINGS_PER_USER // (batch * slab_steps)
+                * batch * slab_steps,
+            )
+            ds = synthetic_ratings(users, max(users // 10, 100), ratings,
+                                   seed=0)
+            store_dir = f"{workdir}/store_{users}"
+            build_store(ds, store_dir, shard_rows=1 << 20)
+            del ds
+            gc.collect()
+
+            trainer = DPMFTrainer(_cfg(store_dir, batch, slab_steps, k))
+            trainer.run_epoch()   # compile + calibrate outside the meter
+            gc.collect()
+            anon_before = anonymous_rss_mb()
+            wall = _best_epoch_wall(trainer)
+            gc.collect()
+            anon_after = anonymous_rss_mb()
+            steps = trainer._loader.num_steps
+            delta = max(0.0, anon_after - anon_before)
+            deltas[users] = delta
+            streamed_sps[users] = steps / wall
+            emit(
+                f"scale/streamed/{users}_users",
+                wall / steps * 1e6,
+                f"steps_per_sec={steps / wall:.1f}"
+                f";anon_rss_delta_mb={delta:.1f}"
+                f";ratings={ratings}",
+            )
+            del trainer
+            gc.collect()
+            shutil.rmtree(store_dir, ignore_errors=True)
+
+        # streaming tax vs the all-in-memory scan at the smallest size
+        users = user_sweep[0]
+        ratings = max(
+            batch * slab_steps,
+            users * RATINGS_PER_USER // (batch * slab_steps)
+            * batch * slab_steps,
+        )
+        ds = synthetic_ratings(users, max(users // 10, 100), ratings, seed=0)
+        store_dir = f"{workdir}/store_mem"
+        build_store(ds, store_dir, shard_rows=1 << 20)
+        mem_cfg = TrainConfig(k=k, epochs=4, batch_size=batch,
+                              pruning_rate=0.5, seed=0)
+        mem_trainer = DPMFTrainer(mem_cfg, ds)
+        mem_trainer.run_epoch()
+        mem_wall = _best_epoch_wall(mem_trainer)
+        mem_steps = mem_trainer._packed_train.num_steps
+        mem_sps = mem_steps / mem_wall
+        ratio = streamed_sps[users] / mem_sps
+        emit(
+            "scale/in_memory_baseline",
+            mem_wall / mem_steps * 1e6,
+            f"steps_per_sec={mem_sps:.1f}",
+        )
+        emit(
+            "scale/streaming_throughput_ratio",
+            0.0,
+            f"ratio={ratio:.3f};floor={MIN_THROUGHPUT_RATIO}",
+        )
+
+        flat_growth = deltas[user_sweep[-1]] - deltas[user_sweep[0]]
+        emit(
+            "scale/anon_rss_flatness",
+            0.0,
+            f"growth_mb={flat_growth:.1f};slack_mb={FLATNESS_SLACK_MB}",
+        )
+        write_json("scale", {
+            "config": {"user_sweep": user_sweep, "batch_size": batch,
+                       "slab_steps": slab_steps, "k": k,
+                       "ratings_per_user": RATINGS_PER_USER},
+            "streamed_steps_per_sec": {
+                str(u): s for u, s in streamed_sps.items()
+            },
+            "anon_rss_delta_mb": {str(u): d for u, d in deltas.items()},
+            "anon_rss_growth_mb": flat_growth,
+            "in_memory_steps_per_sec": mem_sps,
+            "streaming_throughput_ratio": ratio,
+            "throughput_floor": MIN_THROUGHPUT_RATIO,
+            "flatness_slack_mb": FLATNESS_SLACK_MB,
+            "peak_rss_mb": peak_rss_mb(),
+        })
+        assert flat_growth <= FLATNESS_SLACK_MB, (
+            f"streamed-epoch anon RSS grew {flat_growth:.1f} MB from "
+            f"{user_sweep[0]} to {user_sweep[-1]} users — the prefetch "
+            f"queue no longer bounds host memory"
+        )
+        assert ratio >= MIN_THROUGHPUT_RATIO, (
+            f"streamed training holds only {ratio:.2f}x of the in-memory "
+            f"scan throughput (floor {MIN_THROUGHPUT_RATIO}x)"
+        )
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+        jax.clear_caches()

@@ -33,6 +33,32 @@ def records() -> List[Dict]:
     return list(_RECORDS)
 
 
+def _proc_status_kb(field: str, path: str = "/proc/self/status") -> float:
+    """Read one kB-valued field from a /proc status-style file (0.0 when the
+    platform doesn't expose it — peak-RSS stamping is best-effort)."""
+    try:
+        with open(path) as f:
+            for line in f:
+                if line.startswith(field + ":"):
+                    return float(line.split()[1])
+    except OSError:
+        pass
+    return 0.0
+
+
+def peak_rss_mb() -> float:
+    """Lifetime peak resident set (VmHWM) of this process, in MiB."""
+    return _proc_status_kb("VmHWM") / 1024.0
+
+
+def anonymous_rss_mb() -> float:
+    """Current *anonymous* resident set in MiB — the part of RSS that is not
+    reclaimable page cache.  File-backed mmap pages (the ratings store's
+    shards) count toward plain RSS but the kernel drops them under pressure,
+    so bounded-memory assertions must look at this number instead."""
+    return _proc_status_kb("Anonymous", "/proc/self/smaps_rollup") / 1024.0
+
+
 def write_json(
     suite: str,
     summary: Optional[Dict] = None,
@@ -41,8 +67,9 @@ def write_json(
 ) -> str:
     """Write ``BENCH_<suite>.json``: every emit record since the last reset
     plus a suite-level ``summary`` dict of headline numbers.  The output
-    directory defaults to ``$BENCH_JSON_DIR`` or the CWD.  Returns the
-    path."""
+    directory defaults to ``$BENCH_JSON_DIR`` or the CWD.  Every report is
+    stamped with the process's peak RSS (``peak_rss_mb``) so the perf
+    trajectory tracks memory alongside time.  Returns the path."""
     directory = directory or os.environ.get("BENCH_JSON_DIR") or "."
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"BENCH_{suite}.json")
@@ -51,6 +78,7 @@ def write_json(
         "unix_time": int(time.time()),
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
+        "peak_rss_mb": peak_rss_mb(),
         "summary": summary or {},
         "records": records(),
     }
@@ -65,6 +93,7 @@ _SCHEMA = {
     "unix_time": int,
     "backend": str,
     "device_count": int,
+    "peak_rss_mb": (int, float),
     "summary": dict,
     "records": list,
 }

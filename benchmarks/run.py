@@ -27,7 +27,7 @@ def main() -> None:
     parser.add_argument("--only", default=None,
                         help="comma-separated subset: "
                              "figures,kernels,roofline,serving,online,"
-                             "training,eval,fleet,slo")
+                             "training,eval,fleet,slo,scale")
     parser.add_argument("--json-dir", default=None,
                         help="directory for the BENCH_<suite>.json reports "
                              "(default: $BENCH_JSON_DIR or CWD)")
@@ -44,6 +44,7 @@ def main() -> None:
         bench_online,
         bench_paper_figures,
         bench_roofline,
+        bench_scale,
         bench_serving,
         bench_slo,
         bench_training,
@@ -60,6 +61,7 @@ def main() -> None:
         "eval": bench_eval.run,
         "fleet": bench_fleet.run,
         "slo": bench_slo.run,
+        "scale": bench_scale.run,
     }
     selected = (
         {s.strip() for s in args.only.split(",")} if args.only else set(suites)

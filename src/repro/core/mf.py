@@ -560,6 +560,58 @@ def _check_owner_compute_opt(opt_name: str) -> None:
         )
 
 
+def _resolve_grad_compression(grad_compression: str, compress_grads: bool) -> str:
+    """Normalize the two compression knobs: the legacy ``compress_grads``
+    bool maps to plain ``"int8"``; the string knob wins when both are set."""
+    if grad_compression == "none" and compress_grads:
+        return "int8"
+    if grad_compression not in ("none", "int8", "int8_ef"):
+        raise ValueError(
+            f"grad_compression must be none|int8|int8_ef, got {grad_compression!r}"
+        )
+    return grad_compression
+
+
+def init_error_feedback_state(
+    params: MFParams, opt_state: MFOptState, mesh=None
+) -> MFOptState:
+    """Attach int8 error-feedback residual tables to ``opt_state``.
+
+    ``grad_compression="int8_ef"`` keeps, per *sender*, the running
+    quantization residual of each collective payload and folds it into the
+    next step's transmission (EF-SGD: the optimizer trajectory converges as
+    if the links were full-precision).  Two residual tables, one per
+    compressed collective, shaped so each mesh rank owns exactly its own
+    sender state:
+
+    * ``opt_state.p["ef_psum"]``: ``(m, n_model * k)`` over ``P(dp,
+      "model")`` — each model rank's untransmitted part of the p-gradient
+      psum, keyed by user row.
+    * ``opt_state.q["ef_gather"]``: ``(n, n_dp * k)`` over ``P("model",
+      dp)`` — each data rank's untransmitted part of the q-delta
+      all-gather, keyed by item row.
+    """
+    from repro.distributed import mesh_compat
+
+    mesh = mesh_compat.resolve_mesh(mesh)
+    if mesh is None:
+        raise ValueError(
+            "init_error_feedback_state needs a mesh: pass mesh= or enter a "
+            "mesh_compat.use_mesh(...) context"
+        )
+    n_dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n_dp *= mesh.shape[a]
+    n_model = mesh.shape["model"]
+    m, k = params.p.shape
+    n = params.q.shape[0]
+    return opt_state._replace(
+        p={**opt_state.p, "ef_psum": jnp.zeros((m, n_model * k), jnp.float32)},
+        q={**opt_state.q, "ef_gather": jnp.zeros((n, n_dp * k), jnp.float32)},
+    )
+
+
 def train_step_shard_map(
     params: MFParams,
     opt_state: MFOptState,
@@ -572,6 +624,7 @@ def train_step_shard_map(
     opt_name: str = "adagrad",
     eps: float = 1e-8,
     compress_grads: bool = False,
+    grad_compression: str = "none",
     mesh=None,
 ) -> Tuple[MFParams, MFOptState, Dict[str, jax.Array]]:
     """DP-MF minibatch step with owner-compute collectives (FunkSVD only).
@@ -591,11 +644,16 @@ def train_step_shard_map(
         (B_loc, k) masked p-deltas cross the links; the q update never
         leaves its owner.
 
-    ``compress_grads`` additionally int8-quantizes the p-gradient psum and
-    the q-delta all-gather payloads (4x fewer bytes on the dominant
-    collectives; per-tensor scales psum'd alongside).  Quantization error is
-    bounded by scale/2 per element; for long runs pair with error feedback
-    at the driver (distributed/compression.py).
+    ``grad_compression="int8"`` (or the legacy ``compress_grads=True``)
+    int8-quantizes the p-gradient psum and the q-delta all-gather payloads
+    (4x fewer bytes on the dominant collectives; per-tensor scales psum'd
+    alongside).  Quantization error is bounded by scale/2 per element.
+    ``"int8_ef"`` adds per-sender error feedback: each rank keeps the
+    residual its quantizer dropped (``init_error_feedback_state`` tables in
+    ``opt_state``) and folds it into the next transmission of the same row
+    — the EF-SGD recipe that keeps long-run convergence at fp32 quality.
+    Duplicate rows in one batch fold their residual deltas additively
+    (the same duplicate-accumulation caveat as the base step).
 
     Collectives drop from O(n*k + B*k) all-reduce bytes to O(B_loc*k) —
     measured in EXPERIMENTS.md §Perf.  Semantics are identical to
@@ -624,8 +682,9 @@ def train_step_shard_map(
     k = params.p.shape[1]
     _check_owner_compute_opt(opt_name)
     adagrad = opt_name == "adagrad"
+    gc = _resolve_grad_compression(grad_compression, compress_grads)
 
-    def body(p_blk, q_blk, acc_p, acc_q, u, i, r, w, t_p, t_q):
+    def body(p_blk, q_blk, acc_p, acc_q, ef_p, ef_q, u, i, r, w, t_p, t_q):
         # block-local coordinates
         dp_idx = jnp.int32(0)
         stride = 1
@@ -666,7 +725,26 @@ def train_step_shard_map(
         g_p_partial = own * pair_mask * wv * (
             lam * p_rows - err[:, None] * q_rows
         )
-        if compress_grads:
+        if gc == "int8_ef":
+            # Sender-side error feedback on the psum: fold this rank's
+            # residual for these user rows into the payload, quantize to a
+            # mesh-common scale (exact int8 summation), and bank what the
+            # quantizer dropped back into the residual table.  The residual
+            # update is a scatter-ADD of (partial - transmitted), so
+            # duplicate batch rows stay deterministic.
+            resid = ef_p[u_loc]
+            target = g_p_partial + resid
+            local_max = jnp.max(jnp.abs(target))
+            scale = jnp.maximum(
+                jax.lax.pmax(local_max, "model"), 1e-12
+            ) / 127.0
+            q8 = jnp.clip(jnp.round(target / scale), -127, 127).astype(jnp.int8)
+            recon = q8.astype(jnp.float32) * scale
+            g_p = jax.lax.psum(q8.astype(jnp.int32), "model").astype(
+                jnp.float32
+            ) * scale
+            ef_p = ef_p.at[u_loc].add(g_p_partial - recon)
+        elif gc == "int8":
             from repro.distributed.compression import compressed_psum
 
             g_p = compressed_psum(g_p_partial, "model")
@@ -701,18 +779,31 @@ def train_step_shard_map(
         # total update.  This moves B*k delta floats instead of the dense
         # (n, k) gradient all-reduce XLA emits for train_step.
         if dp:
-            if compress_grads:
+            if gc in ("int8", "int8_ef"):
                 from repro.distributed.compression import (
                     dequantize_int8,
                     quantize_int8,
                 )
 
-                q8, scale = quantize_int8(dq_rows)
+                if gc == "int8_ef":
+                    # residual rows only exist for items this model rank
+                    # owns; non-owner rows transmit exact zeros as before
+                    payload = jnp.where(
+                        is_local[:, None], dq_rows + ef_q[safe_i], 0.0
+                    )
+                else:
+                    payload = dq_rows
+                q8, scale = quantize_int8(payload)
                 gat_q8 = jax.lax.all_gather(q8, dp)
                 gat_scale = jax.lax.all_gather(scale, dp)
                 gat_dq = dequantize_int8(
                     gat_q8, gat_scale.reshape((-1,) + (1,) * q8.ndim)
                 ).reshape(-1, k)
+                if gc == "int8_ef":
+                    recon = dequantize_int8(q8, scale)
+                    ef_q = ef_q.at[safe_i].add(
+                        jnp.where(is_local[:, None], dq_rows - recon, 0.0)
+                    )
             else:
                 gat_dq = jax.lax.all_gather(dq_rows, dp).reshape(-1, k)
             gat_idx = jax.lax.all_gather(safe_i, dp).reshape(-1)
@@ -741,55 +832,83 @@ def train_step_shard_map(
         denom = jnp.maximum(w_sum, 1e-9)
         abs_err = abs_sum / denom
         work = work_sum / (denom * k)
-        return p_blk, q_blk, acc_p, acc_q, abs_err[None], work[None]
+        return p_blk, q_blk, acc_p, acc_q, ef_p, ef_q, abs_err[None], work[None]
 
     acc_p_in = opt_state.p.get("acc") if adagrad else params.p
     acc_q_in = opt_state.q.get("acc") if adagrad else params.q
+    if gc == "int8_ef":
+        ef_p_in = opt_state.p.get("ef_psum")
+        ef_q_in = opt_state.q.get("ef_gather")
+        if ef_p_in is None or ef_q_in is None:
+            raise ValueError(
+                "grad_compression='int8_ef' needs the residual tables: call "
+                "mf.init_error_feedback_state(params, opt_state, mesh) first"
+            )
+    else:
+        # placeholder operands so every mode shares one shard_map signature;
+        # (n_dp, n_model)-shaped zeros shard to (1, 1) blocks — negligible
+        ef_p_in = jnp.zeros((n_dp, n_model), jnp.float32)
+        ef_q_in = jnp.zeros((n_model, n_dp), jnp.float32)
 
     weight = batch.get("weight")
     if weight is None:
         weight = jnp.ones_like(batch["rating"], dtype=jnp.float32)
-    new_p, new_q, acc_p, acc_q, abs_err, work = mesh_compat.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(
-            P(dp, None), P("model", None), P(dp, None), P("model", None),
-            P(dp), P(dp), P(dp), P(dp), P(), P(),
-        ),
-        out_specs=(
-            P(dp, None), P("model", None), P(dp, None), P("model", None),
-            P(None), P(None),
-        ),
-        check_vma=False,
-    )(
-        params.p, params.q, acc_p_in, acc_q_in,
-        batch["user"], batch["item"], batch["rating"].astype(jnp.float32),
-        weight.astype(jnp.float32),
-        jnp.asarray(t_p, jnp.float32), jnp.asarray(t_q, jnp.float32),
+    new_p, new_q, acc_p, acc_q, ef_p_out, ef_q_out, abs_err, work = (
+        mesh_compat.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(
+                P(dp, None), P("model", None), P(dp, None), P("model", None),
+                P(dp, "model"), P("model", dp),
+                P(dp), P(dp), P(dp), P(dp), P(), P(),
+            ),
+            out_specs=(
+                P(dp, None), P("model", None), P(dp, None), P("model", None),
+                P(dp, "model"), P("model", dp),
+                P(None), P(None),
+            ),
+            check_vma=False,
+        )(
+            params.p, params.q, acc_p_in, acc_q_in, ef_p_in, ef_q_in,
+            batch["user"], batch["item"], batch["rating"].astype(jnp.float32),
+            weight.astype(jnp.float32),
+            jnp.asarray(t_p, jnp.float32), jnp.asarray(t_q, jnp.float32),
+        )
     )
     new_params = params._replace(p=new_p, q=new_q)
-    new_state = (
-        opt_state._replace(p={"acc": acc_p}, q={"acc": acc_q})
-        if adagrad
-        else opt_state
-    )
+    if adagrad or gc == "int8_ef":
+        p_state = dict(opt_state.p)
+        q_state = dict(opt_state.q)
+        if adagrad:
+            p_state["acc"] = acc_p
+            q_state["acc"] = acc_q
+        if gc == "int8_ef":
+            p_state["ef_psum"] = ef_p_out
+            q_state["ef_gather"] = ef_q_out
+        new_state = opt_state._replace(p=p_state, q=q_state)
+    else:
+        new_state = opt_state
     metrics = {"abs_err": abs_err[0], "work_fraction": work[0]}
     return new_params, new_state, metrics
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("lr", "lam", "opt_name", "eps", "compress_grads", "mesh"),
+    static_argnames=(
+        "lr", "lam", "opt_name", "eps", "compress_grads", "grad_compression",
+        "mesh",
+    ),
     donate_argnums=(0, 1),
 )
 def _train_epoch_scan_shard_map(
     params, opt_state, batches, t_p, t_q,
-    *, lr, lam, opt_name, eps, compress_grads, mesh,
+    *, lr, lam, opt_name, eps, compress_grads, grad_compression, mesh,
 ):
     def step(p, s, batch):
         return train_step_shard_map(
             p, s, batch, t_p, t_q, lr=lr, lam=lam, opt_name=opt_name,
-            eps=eps, compress_grads=compress_grads, mesh=mesh,
+            eps=eps, compress_grads=compress_grads,
+            grad_compression=grad_compression, mesh=mesh,
         )
 
     return _epoch_scan(step, params, opt_state, batches)
@@ -807,6 +926,7 @@ def train_epoch_scan_shard_map(
     opt_name: str = "adagrad",
     eps: float = 1e-8,
     compress_grads: bool = False,
+    grad_compression: str = "none",
     mesh=None,
 ) -> Tuple[MFParams, MFOptState, Dict[str, jax.Array]]:
     """Epoch-compiled multi-device training: the owner-compute
@@ -829,5 +949,6 @@ def train_epoch_scan_shard_map(
         params, opt_state, batches,
         jnp.asarray(t_p, jnp.float32), jnp.asarray(t_q, jnp.float32),
         lr=float(lr), lam=float(lam), opt_name=opt_name, eps=float(eps),
-        compress_grads=bool(compress_grads), mesh=mesh,
+        compress_grads=bool(compress_grads),
+        grad_compression=str(grad_compression), mesh=mesh,
     )

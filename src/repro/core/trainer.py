@@ -53,6 +53,13 @@ class TrainConfig:
     checkpoint_dir: Optional[str] = None
     checkpoint_every_epochs: int = 0   # 0 = only final
     keep_checkpoints: int = 3
+    # -- out-of-core streaming (src/repro/store) ----------------------------
+    store_dir: Optional[str] = None    # train from an on-disk RatingsStore
+    slab_steps: int = 256              # steps per streamed slab
+    prefetch_slabs: int = 2            # bounded host prefetch queue depth
+    checkpoint_every_slabs: int = 0    # 0 = no mid-epoch checkpoints
+    # -- distributed gradient exchange (shard_map path) ---------------------
+    grad_compression: str = "none"     # none | int8 | int8_ef
 
 
 @dataclasses.dataclass
@@ -83,28 +90,59 @@ class DPMFTrainer:
     def __init__(
         self,
         config: TrainConfig,
-        train_ds: RatingsDataset,
+        train_ds: Optional[RatingsDataset] = None,
         test_ds: Optional[RatingsDataset] = None,
     ):
         self.config = config
         self.train_ds = train_ds
         self.test_ds = test_ds
         self.opt = RowOptimizer(name=config.optimizer)
+        if config.epoch_mode not in ("scan", "python"):
+            raise ValueError(f"unknown epoch_mode {config.epoch_mode!r}")
+        self._store = None
+        self._loader = None
+        self._resume_slab = 0
+        self._resume_sums = (0.0, 0.0, 0)   # (err_sum, work_sum, steps_done)
+        if config.store_dir is not None:
+            # Out-of-core path: the ratings stay on disk (mmap) and stream
+            # through a bounded prefetch queue as (slab_steps, B) slabs —
+            # host memory is bounded by the queue depth, not the dataset.
+            from repro.store import RatingsStore, ShardedRatingsLoader
+
+            if config.epoch_mode != "scan":
+                raise ValueError("store-backed training requires epoch_mode='scan'")
+            if config.variant == "svdpp":
+                raise ValueError(
+                    "store-backed training does not support svdpp (the "
+                    "implicit-history matrix is itself O(users))"
+                )
+            self._store = RatingsStore(config.store_dir)
+            self._loader = ShardedRatingsLoader(
+                self._store,
+                config.batch_size,
+                slab_steps=config.slab_steps,
+                prefetch=config.prefetch_slabs,
+            )
+        elif train_ds is None:
+            raise ValueError("either train_ds or config.store_dir is required")
         self.hist = (
             build_user_history(train_ds, config.max_hist)
             if config.variant == "svdpp"
             else None
         )
-        if config.epoch_mode not in ("scan", "python"):
-            raise ValueError(f"unknown epoch_mode {config.epoch_mode!r}")
         if config.epoch_mode == "scan":
             # Upload the ratings (and eval set / SVD++ history) ONCE;
             # per-epoch reshuffles happen on device (data/loader.py).  The
             # batch size is clamped so a tiny dataset trains as one batch
             # per epoch instead of degenerating to zero steps (which is
-            # what the drop-remainder host loop silently does).
-            self._packed_train = loader.pack_ratings(
-                train_ds, min(config.batch_size, max(len(train_ds), 1))
+            # what the drop-remainder host loop silently does).  In store
+            # mode the train table never lands on device wholesale.
+            self._packed_train = (
+                loader.pack_ratings(
+                    train_ds, min(config.batch_size, max(len(train_ds), 1))
+                )
+                if self._loader is None
+                else None
             )
             self._packed_eval = (
                 loader.pack_eval_batches(test_ds, config.eval_batch_size)
@@ -121,14 +159,15 @@ class DPMFTrainer:
             )
 
         rng = jax.random.PRNGKey(config.seed)
+        src = train_ds if train_ds is not None else self._store
         self.params = mf.init_params(
             rng,
-            train_ds.num_users,
-            train_ds.num_items,
+            src.num_users,
+            src.num_items,
             config.k,
             variant=config.variant,
             init_method=config.init_method,
-            global_mean=train_ds.global_mean,
+            global_mean=src.global_mean,
         )
         self.opt_state = mf.init_opt_state(self.params, self.opt)
         self.t_p = jnp.float32(0.0)
@@ -156,16 +195,43 @@ class DPMFTrainer:
             ),
         }
 
-    def save(self, step: int) -> None:
+    def _ckpt_step(self, slabs_done: int = 0) -> int:
+        """Checkpoint step numbering.
+
+        Epoch-granular runs use the epoch count directly.  Store-backed runs
+        number by slab — ``epoch * num_slabs + slabs_done`` — so an
+        epoch-boundary save and a mid-epoch save can never collide, and
+        steps stay monotonic across the whole run.
+        """
+        if self._loader is None:
+            return self.epoch
+        return self.epoch * self._loader.num_slabs + slabs_done
+
+    def save(self, step: int, *, extra_metadata: Optional[Dict[str, Any]] = None) -> None:
         if self._ckpt is None:
             return
-        self._ckpt.save(
-            step,
-            self._state_tree(),
-            metadata={
-                "epoch": self.epoch,
-                "seed": self.config.seed,
-                "pruning_rate": self.config.pruning_rate,
+        metadata = {
+            "epoch": self.epoch,
+            "seed": self.config.seed,
+            "pruning_rate": self.config.pruning_rate,
+        }
+        if extra_metadata:
+            metadata.update(extra_metadata)
+        self._ckpt.save(step, self._state_tree(), metadata=metadata)
+
+    def _save_mid_epoch(
+        self, slabs_done: int, err_sum: float, work_sum: float, steps_done: int
+    ) -> None:
+        """Checkpoint inside an epoch (store mode): params/opt_state plus the
+        running metric accumulators, so a restart replays only the remaining
+        slabs and still reports the identical epoch metrics."""
+        self.save(
+            self._ckpt_step(slabs_done),
+            extra_metadata={
+                "slab_idx": slabs_done,
+                "err_sum": err_sum,
+                "work_sum": work_sum,
+                "steps_done": steps_done,
             },
         )
 
@@ -181,6 +247,12 @@ class DPMFTrainer:
         self.t_q = jnp.asarray(tree["t_q"], jnp.float32)
         self.perm = tree["perm"]
         self.epoch = int(meta["epoch"])
+        self._resume_slab = int(meta.get("slab_idx", 0))
+        self._resume_sums = (
+            float(meta.get("err_sum", 0.0)),
+            float(meta.get("work_sum", 0.0)),
+            int(meta.get("steps_done", 0)),
+        )
         return True
 
     # -- the paper's one-time calibration (after epoch 1) -------------------
@@ -240,7 +312,49 @@ class DPMFTrainer:
         lr = jnp.float32(cfg.lr)
 
         start = time.perf_counter()
-        if cfg.epoch_mode == "scan":
+        if self._loader is not None:
+            # Store mode: the epoch is a sequence of slab-chunked scans fed
+            # by the prefetch queue.  Metric means accumulate step-weighted
+            # in host float64 so a mid-epoch resume (which restores the
+            # partial sums from metadata) reports bitwise-identical epoch
+            # numbers to an uninterrupted run — both execute this same
+            # chunked path over the same deterministic slab order.
+            err_sum, work_sum, steps_done = self._resume_sums
+            start_slab = self._resume_slab
+            self._resume_slab = 0
+            self._resume_sums = (0.0, 0.0, 0)
+            num_slabs = self._loader.num_slabs
+            for slab in self._loader.epoch_slabs(
+                cfg.seed, self.epoch, start_slab=start_slab
+            ):
+                self.params, self.opt_state, metrics = mf.train_epoch_scan(
+                    self.params,
+                    self.opt_state,
+                    slab.batches,
+                    t_p,
+                    t_q,
+                    lr,
+                    dim_mask,
+                    self._hist_dev,
+                    opt=self.opt,
+                    lam=cfg.lam,
+                    use_fused_kernel=cfg.use_fused_kernel,
+                )
+                jax.block_until_ready(self.params.p)
+                err_sum += float(metrics["abs_err"]) * slab.steps
+                work_sum += float(metrics["work_fraction"]) * slab.steps
+                steps_done += slab.steps
+                slabs_done = slab.slab_idx + 1
+                if (
+                    self._ckpt is not None
+                    and cfg.checkpoint_every_slabs
+                    and slabs_done % cfg.checkpoint_every_slabs == 0
+                    and slabs_done < num_slabs
+                ):
+                    self._save_mid_epoch(slabs_done, err_sum, work_sum, steps_done)
+            abs_err = err_sum / max(steps_done, 1)
+            work = work_sum / max(steps_done, 1)
+        elif cfg.epoch_mode == "scan":
             # One donated, compiled computation for the whole epoch: on-device
             # reshuffle, lax.scan of train_step, metrics summed on device.
             batches = self._packed_train.epoch_batches(cfg.seed, self.epoch)
@@ -322,7 +436,7 @@ class DPMFTrainer:
             and cfg.checkpoint_every_epochs
             and self.epoch % cfg.checkpoint_every_epochs == 0
         ):
-            self.save(self.epoch)
+            self.save(self._ckpt_step())
         return record
 
     def run(self) -> List[EpochRecord]:
@@ -330,7 +444,7 @@ class DPMFTrainer:
         for _ in range(start_epoch, self.config.epochs):
             self.run_epoch()
         if self._ckpt is not None:
-            self.save(self.epoch)
+            self.save(self._ckpt_step())
             self._ckpt.wait()
         return self.history
 

@@ -90,7 +90,8 @@ def _permute_and_batch(
     user: jax.Array,
     item: jax.Array,
     rating: jax.Array,
-    key: jax.Array,
+    base_key: jax.Array,
+    epoch: jax.Array,
     *,
     steps: int,
     batch_size: int,
@@ -98,7 +99,12 @@ def _permute_and_batch(
 ) -> Dict[str, jax.Array]:
     n = user.shape[0]
     if shuffle:
-        take = jax.random.permutation(key, n)[: steps * batch_size]
+        # fold_in runs inside the jit so the per-epoch key derivation never
+        # leaves the device; only the 4-byte epoch scalar crosses the host
+        # boundary per epoch (and that via an explicit device_put)
+        take = jax.random.permutation(jax.random.fold_in(base_key, epoch), n)[
+            : steps * batch_size
+        ]
     else:
         take = jnp.arange(steps * batch_size, dtype=jnp.int32)
 
@@ -126,6 +132,12 @@ class PackedRatings:
     item: jax.Array     # (N,) int32
     rating: jax.Array   # (N,) float32
     batch_size: int
+    # per-seed base PRNG keys, uploaded once and reused every epoch so the
+    # reshuffle stays device-resident (no hidden host round-trips); cache
+    # state, not identity — excluded from eq/repr of the frozen dataclass
+    _base_keys: Dict[int, jax.Array] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
 
     @property
     def num_examples(self) -> int:
@@ -143,9 +155,14 @@ class PackedRatings:
                 f"batch_size {self.batch_size} exceeds the dataset "
                 f"({self.num_examples} ratings)"
             )
-        key = jax.random.fold_in(jax.random.PRNGKey(seed), epoch)
+        base = self._base_keys.get(seed)
+        if base is None:
+            base = self._base_keys.setdefault(
+                seed, jax.device_put(jax.random.PRNGKey(seed))
+            )
         return _permute_and_batch(
-            self.user, self.item, self.rating, key,
+            self.user, self.item, self.rating, base,
+            jax.device_put(np.uint32(epoch)),
             steps=self.num_steps, batch_size=self.batch_size, shuffle=shuffle,
         )
 

@@ -175,8 +175,11 @@ class PrequentialEvaluator:
             return {"mae": float("nan"), "rmse": float("nan"), "events": 0}
         users = np.asarray(batch.user, np.int32)
         items = np.asarray(batch.item, np.int32)
-        # grow BEFORE predicting: a fresh row's prediction is rating-free
-        self.updater.ensure_capacity(int(users.max()), int(items.max()))
+        # grow BEFORE predicting: a fresh row's prediction is rating-free.
+        # resolve_users handles eviction remapping too — an evicted user is
+        # revived from spill so the pre-update score sees its learned row.
+        users = self.updater.resolve_users(users)
+        self.updater.ensure_capacity(-1, int(items.max()))
         hist = (
             None if self.updater.user_history is None
             else jnp.asarray(self.updater.user_history[users])

@@ -86,6 +86,27 @@ def run_online(args) -> dict:
     updater = OnlineUpdater.from_trainer(
         trainer, batch_size=max(args.batch_events, 64)
     )
+    evictor = None
+    if args.evict_max_users > 0:
+        # Bounded user-table serving: cold rows spill to disk and the table
+        # compacts at publish points; evicted users keep getting answers
+        # through the engine's bias/popularity fallback.
+        import tempfile
+
+        from repro.store.eviction import EvictionConfig, UserEvictor
+
+        spill_dir = (
+            args.ckpt + "/spill" if args.ckpt
+            else tempfile.mkdtemp(prefix="dpmf_spill_")
+        )
+        evictor = UserEvictor(EvictionConfig(
+            max_users=args.evict_max_users,
+            spill_dir=spill_dir,
+            target_users=args.evict_target_users or None,
+        ))
+        updater.attach_evictor(evictor)
+        print(f"# eviction armed: max {args.evict_max_users} rows, "
+              f"target {evictor.config.resolved_target()}, spill {spill_dir}")
     engine_kwargs = dict(
         use_kernel=True if args.use_kernel else None,
         block_n=args.block_n,
@@ -212,6 +233,7 @@ def run_online(args) -> dict:
     swaps = []
     events = 0
     work_fractions = []
+    eviction_rounds = []
     t_stream = time.perf_counter()
     for b, batch in enumerate(
         iter_microbatches(source, args.batch_events, max_events=args.events)
@@ -225,6 +247,13 @@ def run_online(args) -> dict:
             info = updater.maybe_recalibrate()  # no-op within drift budget
             if info:
                 print(f"# recalibrated: drift {info['drift']:.3f}")
+            if evictor is not None:
+                ev_info = evictor.maybe_evict()
+                if ev_info:
+                    eviction_rounds.append(ev_info)
+                    print(f"# evicted {ev_info['evicted']} cold rows -> "
+                          f"{ev_info['num_users']} live "
+                          f"(remap epoch {ev_info['remap_epoch']})")
             swaps.append(publisher.publish())
     swaps.append(publisher.publish())  # final flush
     stream_s = time.perf_counter() - t_stream
@@ -264,6 +293,15 @@ def run_online(args) -> dict:
         "num_users": num_users,
         "num_items": updater.num_items,
     }
+    if evictor is not None:
+        report["eviction"] = {
+            "rounds": len(eviction_rounds),
+            "evicted_total": int(sum(e["evicted"] for e in eviction_rounds)),
+            "spilled_resident": len(evictor.spilled_external_ids()),
+            "remap_epoch": evictor.remap.epoch,
+            "physical_users": int(updater.num_users),
+            "external_users": int(evictor.remap.num_external),
+        }
     if controller is not None:
         # steady-state view: the back half of completions, after the
         # controller has had the whole stream window to settle
@@ -345,6 +383,13 @@ def main() -> None:
                         help="force the Pallas kernel path (default: TPU only)")
     parser.add_argument("--ckpt", default=None,
                         help="checkpoint dir (training + online deltas)")
+    parser.add_argument("--evict-max-users", type=int, default=0,
+                        help="cap the physical user table at N rows: cold "
+                             "rows spill to disk and compact out at publish "
+                             "points (0 = unbounded, eviction off)")
+    parser.add_argument("--evict-target-users", type=int, default=0,
+                        help="compaction target row count (0 = 80%% of "
+                             "--evict-max-users)")
     parser.add_argument("--slo-p99-ms", type=float, default=0.0,
                         help="enable the SLO-aware pruning controller with "
                              "this p99 latency budget in ms (0 = off); the "

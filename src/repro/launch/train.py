@@ -52,10 +52,36 @@ def main() -> None:
     parser.add_argument("--seed", type=int, default=0)
     parser.add_argument("--ckpt", default=None)
     parser.add_argument("--ckpt-every", type=int, default=5)
+    parser.add_argument("--store-dir", default=None,
+                        help="train out-of-core from this ratings store "
+                             "directory (mmap + streamed slabs) instead of "
+                             "loading the dataset into memory")
+    parser.add_argument("--build-store", action="store_true",
+                        help="with --store-dir: build the store from the "
+                             "selected dataset's train split first, then "
+                             "train from it")
+    parser.add_argument("--slab-steps", type=int, default=256,
+                        help="steps per streamed slab (store mode)")
+    parser.add_argument("--prefetch-slabs", type=int, default=2,
+                        help="bounded prefetch queue depth (store mode)")
+    parser.add_argument("--ckpt-every-slabs", type=int, default=0,
+                        help="mid-epoch checkpoint every N slabs (store "
+                             "mode; 0 = epoch boundaries only)")
     args = parser.parse_args()
 
-    ds = paper_dataset(args.dataset, seed=args.seed, scale=args.scale)
-    train_ds, test_ds = train_test_split(ds, 0.2, seed=args.seed)
+    train_ds = test_ds = None
+    if args.store_dir is None or args.build_store:
+        ds = paper_dataset(args.dataset, seed=args.seed, scale=args.scale)
+        train_ds, test_ds = train_test_split(ds, 0.2, seed=args.seed)
+    if args.store_dir is not None:
+        if args.build_store:
+            from repro.store import build_store
+
+            build_store(train_ds, args.store_dir)
+            print(f"built store: {len(train_ds)} ratings at {args.store_dir}")
+        # the dataset object is no longer needed — the point of the store
+        # is that the ratings never have to fit in host memory
+        train_ds = None
 
     config = TrainConfig(
         k=args.k,
@@ -73,6 +99,10 @@ def main() -> None:
         seed=args.seed,
         checkpoint_dir=args.ckpt,
         checkpoint_every_epochs=args.ckpt_every,
+        store_dir=args.store_dir,
+        slab_steps=args.slab_steps,
+        prefetch_slabs=args.prefetch_slabs,
+        checkpoint_every_slabs=args.ckpt_every_slabs,
     )
     trainer = DPMFTrainer(config, train_ds, test_ds)
     if trainer.maybe_restore():
@@ -88,7 +118,7 @@ def main() -> None:
             + ("  [straggler-flagged]" if straggler else "")
         )
     if trainer._ckpt is not None:
-        trainer.save(trainer.epoch)
+        trainer.save(trainer._ckpt_step())
         trainer._ckpt.wait()
 
     print(json.dumps({

@@ -114,6 +114,10 @@ class SnapshotPublisher:
         # chain exists yet), so fold_deltas-reconstructed replicas can join
         # the live bus without translation.
         self._version = self._last_step
+        # Eviction remap epoch last published: a bump (compaction renumbered
+        # the physical user rows) forces the next payload to kind=full so
+        # every follower heals through the barrier.
+        self._last_remap_epoch = 0
         self.subscribers: List = []
         self.acked: Dict[str, int] = {}
         self.reports: list = []
@@ -189,18 +193,27 @@ class SnapshotPublisher:
         full = (
             snap.full_rebuild
             or self._force_full_next
+            or snap.remap_epoch != self._last_remap_epoch
             or (
                 self._ckpt is not None
                 and version - self._last_full_step >= max(self.keep - 1, 1)
             )
             or any(a < version - 1 for a in self.acked.values())
         )
+        self._last_remap_epoch = snap.remap_epoch
 
         start = time.perf_counter()
         engine_version = None
         pin = self._serving_thresholds
         serve_t_p = snap.t_p if pin is None else jnp.float32(pin[0])
         serve_t_q = snap.t_q if pin is None else jnp.float32(pin[1])
+        remap_kwargs = (
+            {} if snap.user_remap is None
+            else {
+                "user_remap": snap.user_remap,
+                "remap_epoch": snap.remap_epoch,
+            }
+        )
         if self.engine is not None:
             engine_version = self.engine.swap(
                 snap.params,
@@ -210,6 +223,7 @@ class SnapshotPublisher:
                 touched_items=None if snap.full_rebuild else snap.touched_items,
                 touched_implicit_items=snap.touched_implicit_items,
                 user_history=snap.user_history,
+                **remap_kwargs,
             )
 
         msg = None
@@ -244,6 +258,7 @@ class SnapshotPublisher:
                     "snapshot_id": snap.snapshot_id,
                     "num_users": snap.params.p.shape[0],
                     "num_items": snap.params.q.shape[0],
+                    "remap_epoch": snap.remap_epoch,
                 },
             )
             self._last_step = step
@@ -312,6 +327,15 @@ def _delta_tree(snap: PublishSnapshot, *, full: bool) -> dict:
         # histories are small int32 and change with every event batch; the
         # chain replays them wholesale
         tree["user_history"] = jnp.asarray(snap.user_history)
+    if snap.user_remap is not None:
+        # eviction armed: every payload carries the current ext->phys table
+        # (cold-start events extend it between compactions, so a delta-only
+        # follower still needs the fresh tail) plus the compaction counter.
+        # O(n_external) int32 — small next to the row payloads, and the
+        # byte-shuffle+DEFLATE wire compression eats the mostly-monotonic
+        # table for breakfast.
+        tree["user_remap"] = np.asarray(snap.user_remap, np.int32)
+        tree["remap_epoch"] = np.int64(snap.remap_epoch)
     return tree
 
 
@@ -361,6 +385,7 @@ def apply_delta_tree(
     kind: str,
     num_users: int,
     num_items: int,
+    extras: Optional[dict] = None,
 ) -> Tuple[mf.MFParams, jnp.ndarray, jnp.ndarray, Optional[np.ndarray]]:
     """Fold one delta/full payload tree into ``(params, t_p, t_q, history)``.
 
@@ -369,6 +394,10 @@ def apply_delta_tree(
     (``serving/fleet/bus.apply_message``) feed it decompressed wire
     payloads — so a replica that replays the chain and a replica that
     followed the live bus end bitwise identical.
+
+    ``extras`` (optional out-param dict) receives side-channel state the
+    4-tuple cannot carry: the eviction remap (``user_remap``,
+    ``remap_epoch``) when the payload has one.
     """
     if kind == "full":
         params = mf.params_from_flat(tree)
@@ -400,6 +429,9 @@ def apply_delta_tree(
     t_q = jnp.asarray(tree["t_q"], jnp.float32)
     if "user_history" in tree:
         history = np.asarray(tree["user_history"])
+    if extras is not None and "user_remap" in tree:
+        extras["user_remap"] = np.asarray(tree["user_remap"], np.int32)
+        extras["remap_epoch"] = int(np.asarray(tree["remap_epoch"]))
     return params, t_p, t_q, history
 
 
@@ -411,6 +443,7 @@ def fold_deltas(
     *,
     user_history: Optional[np.ndarray] = None,
     from_step: int = 0,
+    extras: Optional[dict] = None,
 ) -> Tuple[mf.MFParams, jnp.ndarray, jnp.ndarray, Optional[np.ndarray], int]:
     """Replay the delta chain under ``directory`` onto a base state.
 
@@ -419,7 +452,10 @@ def fold_deltas(
     restarted online job resumes from, and the state a replica joining the
     fleet late catches up to (its version gate then starts at ``last_step``).
     The base state comes from the training checkpoint
-    (``serving.load_mf_checkpoint``).
+    (``serving.load_mf_checkpoint``).  When ``extras`` is given, remap
+    metadata (``user_remap`` / ``remap_epoch``) carried by the replayed
+    payloads is written into it, so callers can rebuild the external-id
+    view of an evicting updater.
 
     Keep-N retention may have deleted old deltas; replay therefore anchors
     on the latest surviving ``kind=full`` checkpoint (which subsumes
@@ -453,6 +489,7 @@ def fold_deltas(
             kind=kind,
             num_users=int(meta.get("num_users", params.p.shape[0])),
             num_items=int(meta.get("num_items", params.q.shape[0])),
+            extras=extras,
         )
         last = step
     return params, t_p, t_q, history, last

@@ -54,6 +54,8 @@ class PublishSnapshot:
     full_rebuild: bool          # thresholds/permutation/geometry changed
     events_seen: int            # cumulative over the updater's lifetime
     snapshot_id: int = 0        # monotonic per updater; publisher/bus audit
+    user_remap: Optional[np.ndarray] = None  # ext->phys (store/eviction.py)
+    remap_epoch: int = 0        # compaction counter; bump => full heal
 
 
 class OnlineUpdater:
@@ -83,6 +85,7 @@ class OnlineUpdater:
         init_scale: float = 0.1,
         seed: int = 0,
         mesh=None,
+        grad_compression: str = "none",
     ):
         self.opt = (
             optimizer if isinstance(optimizer, RowOptimizer)
@@ -125,11 +128,17 @@ class OnlineUpdater:
                     f"P rows {params.p.shape[0]} over {self._user_multiple}, "
                     f"Q rows {params.q.shape[0]} over {self._item_multiple}"
                 )
+            if grad_compression == "int8_ef":
+                # per-sender quantization residuals ride in the opt_state
+                # (row-indexed, so capacity growth keeps them aligned)
+                self.opt_state = mf.init_error_feedback_state(
+                    params, self.opt_state, mesh
+                )
             self._sharded_step = jax.jit(
                 functools.partial(
                     mf.train_step_shard_map,
                     lr=float(lr), lam=float(lam), opt_name=self.opt.name,
-                    mesh=mesh,
+                    grad_compression=grad_compression, mesh=mesh,
                 )
             )
         self.t_p = jnp.asarray(t_p, jnp.float32)
@@ -151,6 +160,7 @@ class OnlineUpdater:
             else np.array(user_history, np.int32, copy=True)
         )
         self._dim_mask = jnp.ones((params.p.shape[1],), jnp.float32)
+        self.evictor = None  # store.eviction.UserEvictor via attach_evictor
 
         # publish bookkeeping
         self._touched_users: Set[int] = set()
@@ -175,10 +185,32 @@ class OnlineUpdater:
         kwargs.setdefault("pruning_rate", cfg.pruning_rate)
         kwargs.setdefault("user_history", trainer.hist)
         kwargs.setdefault("batch_size", min(cfg.batch_size, 4096))
+        kwargs.setdefault("grad_compression", cfg.grad_compression)
         return cls(
             trainer.params, trainer.opt_state, trainer.t_p, trainer.t_q,
             **kwargs,
         )
+
+    def attach_evictor(self, evictor) -> None:
+        """Arm cold-row eviction (``store/eviction.UserEvictor``): event
+        user ids become *external* ids, translated to physical rows on
+        every apply; ``evictor.maybe_evict()`` may spill + compact the user
+        tables at publish points."""
+        evictor.bind(self)
+        self.evictor = evictor
+
+    def resolve_users(self, users: np.ndarray) -> np.ndarray:
+        """External user ids → physical rows for an *update* (grows /
+        revives as needed).  Identity + cold-start growth when no evictor
+        is attached — the prequential evaluator and other scorers call this
+        instead of ``ensure_capacity`` so they stay remap-correct."""
+        users = np.asarray(users, np.int32)
+        if users.size == 0:
+            return users
+        if self.evictor is None:
+            self.ensure_capacity(int(users.max()), -1)
+            return users
+        return self.evictor.resolve(users).astype(np.int32)
 
     # -- properties ----------------------------------------------------------
     @property
@@ -386,6 +418,10 @@ class OnlineUpdater:
             None if getattr(batch, "weight", None) is None
             else np.asarray(batch.weight, np.float32)
         )
+        if self.evictor is not None:
+            # external ids -> physical rows (reviving spilled users); from
+            # here on every array/bookkeeping index is physical
+            users = self.evictor.resolve(users)
         self.ensure_capacity(int(users.max()), int(items.max()))
         if self.user_history is not None:
             self._append_history(users, items)
@@ -561,6 +597,13 @@ class OnlineUpdater:
             full_rebuild=self._layout_dirty,
             events_seen=self.events_seen,
             snapshot_id=self.snapshots_taken,
+            user_remap=(
+                None if self.evictor is None
+                else self.evictor.remap.as_array()
+            ),
+            remap_epoch=(
+                0 if self.evictor is None else self.evictor.remap.epoch
+            ),
         )
         self._touched_users.clear()
         self._touched_items.clear()
@@ -570,7 +613,16 @@ class OnlineUpdater:
 
     # -- evaluation ----------------------------------------------------------
     def evaluate(self, ds, batch_size: int = 8192) -> float:
-        """Test MAE (Eq. 12) of the current online params + thresholds."""
+        """Test MAE (Eq. 12) of the current online params + thresholds.
+
+        With an evictor attached the dataset's user ids are *external*:
+        live users score through their physical rows, spilled/unseen users
+        score bias-only (global mean + item bias when the bias variant is
+        trained, else 0) — the same fallback contract the serving engine
+        applies.  Evaluation never revives rows.
+        """
+        if self.evictor is not None:
+            return self._evaluate_remapped(ds, batch_size)
         total, count = 0.0, 0.0
         for batch_np in loader.iterate_batches(
             ds, min(batch_size, max(len(ds), 1)), shuffle=False,
@@ -580,4 +632,39 @@ class OnlineUpdater:
             s, c = mf.eval_mae(self.params, batch, self.t_p, self.t_q)
             total += float(s)
             count += float(c)
+        return total / max(count, 1.0)
+
+    def _evaluate_remapped(self, ds, batch_size: int) -> float:
+        remap = self.evictor.remap
+        total, count = 0.0, 0.0
+        for batch_np in loader.iterate_batches(
+            ds, min(batch_size, max(len(ds), 1)), shuffle=False,
+            drop_remainder=False,
+        ):
+            users = np.asarray(batch_np["user"], np.int64)
+            items = np.asarray(batch_np["item"], np.int64)
+            phys = remap.lookup(users)
+            live = phys >= 0
+            safe = np.where(live, phys, 0).astype(np.int32)
+            pred, _ = mf.predict_pairs(
+                self.params, jnp.asarray(safe),
+                jnp.asarray(items.astype(np.int32)), self.t_p, self.t_q,
+            )
+            pred = np.asarray(pred, np.float64)
+            fallback = np.zeros(users.shape, np.float64)
+            if self.params.global_mean is not None:
+                fallback += float(self.params.global_mean)
+            if self.params.item_bias is not None:
+                fallback += np.asarray(
+                    self.params.item_bias, np.float64
+                ).reshape(-1)[items]
+            pred = np.where(live, pred, fallback)
+            w = batch_np.get("weight")
+            w = (
+                np.ones(users.shape, np.float64) if w is None
+                else np.asarray(w, np.float64)
+            )
+            rating = np.asarray(batch_np["rating"], np.float64)
+            total += float((np.abs(rating - pred) * w).sum())
+            count += float(w.sum())
         return total / max(count, 1.0)

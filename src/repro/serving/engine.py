@@ -122,6 +122,8 @@ class _Snapshot:
         r_i: Optional[jnp.ndarray] = None,
         user_const: Optional[np.ndarray] = None,
         compact_latent: bool = False,
+        user_remap: Optional[np.ndarray] = None,
+        remap_epoch: int = 0,
     ):
         self.version = version
         self.params = params
@@ -133,6 +135,18 @@ class _Snapshot:
         self.cache = cache
         self.user_history = user_history
         self.compact_latent = compact_latent
+        # Cold-row eviction (store/eviction.py): request ids are *external*;
+        # ``user_remap[ext] -> physical row or -1 (spilled)``.  Without an
+        # evictor upstream the remap is None and ids are physical as before.
+        self.user_remap = (
+            None if user_remap is None else np.asarray(user_remap, np.int32)
+        )
+        self.remap_epoch = int(remap_epoch)
+        self.num_external = (
+            self.num_users if self.user_remap is None
+            else int(self.user_remap.shape[0])
+        )
+        self._fallback_topk = {}  # topk -> (scores, idx) for spilled users
 
         # ``r_i``/``user_const`` accept precomputed values so an incremental
         # swap can patch the previous snapshot's at the touched rows instead
@@ -166,6 +180,30 @@ class _Snapshot:
         self._shard_layouts = {}
         self._kernel_shard_layouts = {}
         self._build_lock = threading.Lock()
+
+    # -- spilled-user fallback ----------------------------------------------
+    def fallback_topk(self, topk: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Bias-only/popularity top-k for spilled (evicted) users.
+
+        Scores are ``global_mean + item_bias`` for the bias variants (the
+        personalization term of an absent row is unknowable) and zeros for
+        funk — ``jax.lax.top_k`` ordering, so the item order is the same
+        deterministic tie-break the personalized paths use.  Built once per
+        (snapshot, topk) and cached: every spilled user gets the same row.
+        """
+        with self._build_lock:
+            got = self._fallback_topk.get(topk)
+            if got is None:
+                scores = jnp.asarray(self.item_bias_vec, jnp.float32)
+                if self.params.global_mean is not None:
+                    scores = scores + jnp.float32(self.params.global_mean)
+                s, i = jax.lax.top_k(scores, topk)
+                got = (
+                    np.asarray(s, np.float32),
+                    np.asarray(i, np.int32),
+                )
+                self._fallback_topk[topk] = got
+            return got
 
     # -- layouts -------------------------------------------------------------
     def stream_layout(self):
@@ -382,6 +420,8 @@ class ServingEngine:
         user_history: Optional[np.ndarray] = None,
         allow_missing_history: bool = False,
         compact_latent: bool = False,
+        user_remap: Optional[np.ndarray] = None,
+        remap_epoch: int = 0,
     ):
         self.max_batch = max_batch
         self.block_n = block_n
@@ -406,6 +446,7 @@ class ServingEngine:
             0, params, t_p, t_q,
             block_n=block_n, cache=cache, user_history=history,
             compact_latent=compact_latent,
+            user_remap=user_remap, remap_epoch=remap_epoch,
         )
         # Sharded scoring: compiled program per (mesh, topk, kernel-path) —
         # jit caches by function identity, so the shard_map closure must be
@@ -479,6 +520,19 @@ class ServingEngine:
         return self._snap.num_users
 
     @property
+    def num_external(self) -> int:
+        """Size of the valid *request* id domain: equals :attr:`num_users`
+        without an eviction remap, else the external-id domain (grow-only
+        even while compactions shrink the physical table)."""
+        return self._snap.num_external
+
+    @property
+    def remap_epoch(self) -> int:
+        """Compaction counter of the current snapshot's id remap (0 when
+        eviction was never armed upstream)."""
+        return self._snap.remap_epoch
+
+    @property
     def n_items(self) -> int:
         """Catalog size of the current snapshot."""
         return self._snap.n_items
@@ -510,6 +564,8 @@ class ServingEngine:
         touched_items: Optional[Iterable[int]] = None,
         touched_implicit_items: Optional[Iterable[int]] = None,
         user_history: Optional[np.ndarray] = None,
+        user_remap: Optional[np.ndarray] = None,
+        remap_epoch: Optional[int] = None,
     ) -> int:
         """Atomically publish a new factor version; returns its number.
 
@@ -535,6 +591,13 @@ class ServingEngine:
 
         Tables may grow (cold-start users/items appended by the online
         updater); they may not shrink — queued request ids stay valid.
+        The one exception is an eviction compaction: a ``remap_epoch``
+        *bump* (with its ``user_remap`` table) may shrink the user table —
+        external request ids stay valid through the remap, in-flight
+        batches finish on the previous snapshot, and the swap is forced
+        down the full-rebuild path with a fresh vector cache (physical
+        indices moved).  Omitting both remap kwargs carries the previous
+        snapshot's remap forward unchanged.
         """
         # normalize one-shot iterables up front: the touched sets are walked
         # several times below (layout patch, user-const patch, LRU pruning)
@@ -548,14 +611,33 @@ class ServingEngine:
             )
         with self._swap_lock:
             prev = self._snap
-            if params.p.shape[0] < prev.num_users or (
-                params.q.shape[0] < prev.n_items
+            if remap_epoch is None:
+                remap_epoch = prev.remap_epoch
+                if user_remap is None:
+                    user_remap = prev.user_remap
+            remap_changed = int(remap_epoch) != prev.remap_epoch
+            if remap_changed:
+                # compaction barrier: physical rows were renumbered, so no
+                # previous layout, cached vector, or touched-row delta can
+                # be patched — full rebuild, whole-cache drop
+                if user_remap is None:
+                    raise ValueError(
+                        "a remap_epoch bump must carry its user_remap table"
+                    )
+                touched_users = None
+                touched_items = None
+                touched_implicit_items = None
+            if not remap_changed and (
+                params.p.shape[0] < prev.num_users
+                or params.q.shape[0] < prev.n_items
             ):
                 raise ValueError(
                     "swap cannot shrink the user/item tables "
                     f"({prev.num_users}x{prev.n_items} -> "
                     f"{params.p.shape[0]}x{params.q.shape[0]}): queued "
-                    "requests may already reference the trailing rows"
+                    "requests may already reference the trailing rows "
+                    "(only an eviction compaction — a remap_epoch bump — "
+                    "may shrink the user table)"
                 )
             t_p = prev.t_p if t_p is None else t_p
             t_q = prev.t_q if t_q is None else t_q
@@ -609,6 +691,8 @@ class ServingEngine:
                 r_i=r_i_pre,
                 user_const=user_const_pre,
                 compact_latent=self.compact_latent,
+                user_remap=user_remap,
+                remap_epoch=int(remap_epoch),
             )
 
             if incremental:
@@ -787,14 +871,47 @@ class ServingEngine:
             )
         ids = np.asarray(user_ids, np.int32).reshape(-1)
         # jnp gathers clamp out-of-range indices silently — that would serve
-        # the *last* user's recommendations to an unknown user id.
-        bad = (ids < 0) | (ids >= snap.num_users)
+        # the *last* user's recommendations to an unknown user id.  With an
+        # eviction remap the request domain is the *external* ids (which
+        # only ever grows), not the physical table.
+        bad = (ids < 0) | (ids >= snap.num_external)
         if bad.any():
             raise ValueError(
                 f"unknown user ids {ids[bad][:5].tolist()} "
-                f"(catalog has {snap.num_users} users)"
+                f"(catalog has {snap.num_external} users)"
             )
         return ids
+
+    @staticmethod
+    def _translate_ids(
+        snap: _Snapshot, ids: np.ndarray
+    ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """External ids → physical rows under the snapshot's remap.
+
+        Returns ``(physical_ids, evicted_mask-or-None)``; evicted users
+        point at placeholder row 0 (scored then discarded — their result
+        rows are overwritten by :meth:`_Snapshot.fallback_topk`)."""
+        if snap.user_remap is None:
+            return ids, None
+        phys = snap.user_remap[ids].astype(np.int64)
+        evicted = phys < 0
+        if not evicted.any():
+            return phys.astype(np.int32), None
+        return np.where(evicted, 0, phys).astype(np.int32), evicted
+
+    @staticmethod
+    def _apply_fallback(
+        snap: _Snapshot,
+        evicted: Optional[np.ndarray],
+        topk: int,
+        out_s: np.ndarray,
+        out_i: np.ndarray,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        if evicted is not None:
+            fs, fi = snap.fallback_topk(topk)
+            out_s[evicted] = fs
+            out_i[evicted] = fi
+        return out_s, out_i
 
     def _run_chunked(self, snap: _Snapshot, ids: np.ndarray, topk: int, block_fn):
         """Shared request loop: split into max_batch chunks, pad each chunk
@@ -825,10 +942,12 @@ class ServingEngine:
         to dense score-and-argsort."""
         snap = self._snap  # captured once: the whole batch serves one version
         ids = self._validate_for(snap, user_ids, topk)
-        return self._run_chunked(
-            snap, ids, topk,
+        phys, evicted = self._translate_ids(snap, ids)
+        out_s, out_i = self._run_chunked(
+            snap, phys, topk,
             lambda pu, k_: self._topk_block(snap, pu, k_),
         )
+        return self._apply_fallback(snap, evicted, topk, out_s, out_i)
 
     # -- sharded catalog -----------------------------------------------------
     def _sharded_program(self, mesh, topk: int, kernel: bool):
@@ -907,6 +1026,7 @@ class ServingEngine:
 
         snap = self._snap
         ids = self._validate_for(snap, user_ids, topk)
+        ids, evicted = self._translate_ids(snap, ids)
         mesh = mesh_compat.resolve_mesh(mesh)
         if mesh is None or "model" not in mesh.axis_names:
             raise ValueError("topk_sharded needs a mesh with a 'model' axis")
@@ -936,7 +1056,8 @@ class ServingEngine:
                 scores, idx = fn(pm, *layout)
             return scores[:b], idx[:b]
 
-        return self._run_chunked(snap, ids, topk, block_fn)
+        out_s, out_i = self._run_chunked(snap, ids, topk, block_fn)
+        return self._apply_fallback(snap, evicted, topk, out_s, out_i)
 
     # -- async frontend ------------------------------------------------------
     def start(self, *, mesh=None, **queue_kwargs):

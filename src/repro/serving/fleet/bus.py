@@ -74,6 +74,10 @@ class DeltaMessage:
     tree: Dict[str, object]         # CompressedArray or raw np.ndarray
     events_seen: int = 0
     snapshot_id: int = 0
+    # Eviction remap generation of the publishing updater.  A bump relative
+    # to the receiving engine forces a full-layout swap there (rows moved
+    # under the external ids); the remap table itself rides in ``tree``.
+    remap_epoch: int = 0
 
     @property
     def wire_bytes(self) -> int:
@@ -137,6 +141,7 @@ def make_message(
         tree=_flat_payload(tree, compress=compress),
         events_seen=int(snap.events_seen),
         snapshot_id=int(snap.snapshot_id),
+        remap_epoch=int(getattr(snap, "remap_epoch", 0)),
     )
 
 
@@ -186,14 +191,19 @@ def apply_message(
     t_q,
     history: Optional[np.ndarray],
     msg: DeltaMessage,
+    *,
+    extras: Optional[dict] = None,
 ) -> Tuple[mf.MFParams, object, object, Optional[np.ndarray]]:
     """Decompress a message and fold it into ``(params, t_p, t_q,
     history)`` — the wire-side twin of the checkpoint fold in
     :func:`repro.online.publisher.fold_deltas` (both call
-    ``apply_delta_tree``, so the results are bitwise identical)."""
+    ``apply_delta_tree``, so the results are bitwise identical).  When
+    ``extras`` is given, remap metadata riding in the payload
+    (``user_remap`` / ``remap_epoch``) is written into it."""
     return publisher_lib.apply_delta_tree(
         params, t_p, t_q, history, _unflatten_payload(msg.tree),
         kind=msg.kind, num_users=msg.num_users, num_items=msg.num_items,
+        extras=extras,
     )
 
 
@@ -313,17 +323,28 @@ class EngineDeltaSink:
         # (missed deltas, or an arbitrary cold state) — the touched-rows
         # layout patch is only sound for the sequential next version
         sequential = msg.prev_version == self._gate.version
+        extras: Dict[str, object] = {}
         params, t_p, t_q, history = apply_message(
             self.engine.params, self.engine.t_p, self.engine.t_q,
-            self._history, msg,
+            self._history, msg, extras=extras,
         )
         self._history = history
         if self._threshold_override is not None:
             # serve with the pinned SLO thresholds, not the model's — the
             # folded (model) values stay authoritative on the wire/disk
             t_p, t_q = (jnp.float32(v) for v in self._threshold_override)
+        # remap metadata rides in the payload when the publisher evicts;
+        # a remap-epoch bump makes engine.swap drop touched-rows patching
+        # itself (rows moved under the external ids)
+        remap_kwargs = {}
+        if "user_remap" in extras:
+            remap_kwargs = {
+                "user_remap": extras["user_remap"],
+                "remap_epoch": extras["remap_epoch"],
+            }
         if msg.full_rebuild or (msg.kind == "full" and not sequential):
-            self.engine.swap(params, t_p, t_q, user_history=history)
+            self.engine.swap(params, t_p, t_q, user_history=history,
+                             **remap_kwargs)
         else:
             self.engine.swap(
                 params, t_p, t_q,
@@ -331,4 +352,5 @@ class EngineDeltaSink:
                 touched_items=msg.touched_items,
                 touched_implicit_items=msg.touched_implicit_items,
                 user_history=history,
+                **remap_kwargs,
             )

@@ -1,0 +1,19 @@
+"""Out-of-core data subsystem: mmap-backed ratings store, streamed
+slab training, and cold-row eviction for the online path.
+
+``ratings_store`` bounds host memory on the *training* side (the ratings
+table lives on disk, epochs stream through a fixed-depth prefetch queue);
+``eviction`` bounds device memory on the *serving/refresh* side (grow-only
+factor tables get a watermark and cold rows spill back to disk).
+"""
+from repro.store.ratings_store import (  # noqa: F401
+    FeistelPermutation,
+    RatingsStore,
+    ShardedRatingsLoader,
+    build_store,
+)
+from repro.store.eviction import (  # noqa: F401
+    EvictionConfig,
+    IdRemap,
+    UserEvictor,
+)

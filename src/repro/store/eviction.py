@@ -1,0 +1,382 @@
+"""Cold-row eviction/compaction: the bounded-memory contract for the
+grow-only online factor tables.
+
+The online path (``online/updater.py``) grows P (and its optimizer state,
+biases) for every cold-start user and never shrinks — after a year of
+stream the user table is O(every id ever seen).  This module adds a
+watermark: when the table passes ``max_users`` rows, the coldest rows are
+*spilled* to disk and *compacted* out of the device tables.
+
+Coldness order (most evictable first):
+
+1. **last-touched step** ascending — rows no event has updated recently;
+2. **per-row effective rank** ascending — the §4.3 joint-sparsity
+   rearrangement already stores the latent axis most-significant-first, so
+   a row's first-insignificant index (``core/ranks.effective_ranks``) is
+   its usefulness under the paper's own pruning order: rows the pruned
+   dot-product would truncate earliest are the cheapest to lose;
+3. physical index ascending — a total order, so eviction is deterministic.
+
+Compaction renumbers the physical rows, so every layer that holds user ids
+needs the **id-remap table** (:class:`IdRemap`): external (stream/request)
+ids stay stable forever; ``ext_to_phys`` maps them to the current physical
+row, ``-1`` meaning spilled.  Each compaction bumps ``remap_epoch`` —
+consumers that cached physical geometry (serving snapshots, delta
+followers) treat a bump as a barrier: the publisher forces a ``kind=full``
+checkpoint/message and the engine rebuilds rather than patching.
+
+Spilled rows are not gone: an event naming a spilled user *revives* it —
+the factor row, bias and optimizer-state rows come back from the spill
+file into freshly grown physical rows (bitwise what was evicted), so
+evict→touch→evict round-trips preserve predictions for every live user
+(property-tested in ``tests/test_eviction.py``).  A spilled user that is
+merely *scored* (not rated) is served by the engine's bias-only fallback
+instead — scoring never mutates the tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ranks as ranks_lib
+
+
+@dataclasses.dataclass
+class IdRemap:
+    """External-id → physical-row translation table.
+
+    ``ext_to_phys[e]`` is the physical row of external user ``e``, or -1 if
+    the row is currently spilled.  ``epoch`` counts compactions: any bump
+    invalidates every cached physical index downstream.
+    """
+
+    ext_to_phys: np.ndarray  # (n_external,) int32, -1 = spilled
+    epoch: int = 0
+
+    @property
+    def num_external(self) -> int:
+        """Size of the external id domain (grow-only)."""
+        return int(self.ext_to_phys.shape[0])
+
+    def lookup(self, ext_ids: np.ndarray) -> np.ndarray:
+        """Translate external ids; unknown (never-seen) ids map to -1."""
+        ext_ids = np.asarray(ext_ids, np.int64)
+        phys = np.full(ext_ids.shape, -1, np.int64)
+        known = (ext_ids >= 0) & (ext_ids < self.num_external)
+        phys[known] = self.ext_to_phys[ext_ids[known]]
+        return phys
+
+    def as_array(self) -> np.ndarray:
+        """Frozen copy for snapshots/messages."""
+        return np.array(self.ext_to_phys, np.int32, copy=True)
+
+
+@dataclasses.dataclass
+class EvictionConfig:
+    """Watermark policy: evict down to ``target_users`` once the physical
+    table exceeds ``max_users``; spilled rows land under ``spill_dir``."""
+
+    max_users: int
+    spill_dir: str
+    target_users: Optional[int] = None  # default: 80% of max_users
+
+    def resolved_target(self) -> int:
+        target = (
+            self.target_users if self.target_users is not None
+            else int(self.max_users * 0.8)
+        )
+        if not 0 < target <= self.max_users:
+            raise ValueError(
+                f"target_users {target} must be in (0, max_users="
+                f"{self.max_users}]"
+            )
+        return target
+
+
+class UserEvictor:
+    """Owns the remap table, per-row touch clock, spill files and the
+    compaction pass for one :class:`~repro.online.updater.OnlineUpdater`.
+
+    Usage: ``updater.attach_evictor(UserEvictor(config))`` — from then on
+    the updater routes every batch through :meth:`resolve` (ext→phys with
+    revival) and the driver calls :meth:`maybe_evict` at publish points.
+    """
+
+    def __init__(self, config: EvictionConfig):
+        config.resolved_target()  # validate eagerly
+        self.config = config
+        self.updater = None
+        self.remap: Optional[IdRemap] = None
+        self.phys_to_ext: Optional[np.ndarray] = None
+        self.last_touched: Optional[np.ndarray] = None
+        self._step = 0
+        self._spilled: Dict[int, Tuple[str, int]] = {}  # ext -> (file, row)
+        self._spill_seq = 0
+        self._spill_cache: Tuple[Optional[str], Optional[Dict]] = (None, None)
+        self.evictions = 0          # rows spilled, lifetime
+        self.revivals = 0           # rows brought back, lifetime
+        self.compactions = 0        # remap-epoch bumps, lifetime
+
+    def spilled_external_ids(self) -> np.ndarray:
+        """External ids currently resident on disk (sorted)."""
+        return np.array(sorted(self._spilled), dtype=np.int64)
+
+    # -- wiring --------------------------------------------------------------
+    def bind(self, updater) -> None:
+        """Attach to an updater; the initial remap is the identity over the
+        current physical table."""
+        if updater.mesh is not None:
+            raise ValueError(
+                "eviction is a single-host feature: mesh-sharded tables "
+                "must keep their row counts divisible over the mesh"
+            )
+        if updater.params.implicit is not None:
+            raise ValueError(
+                "eviction does not support the SVD++ variant (per-user "
+                "implicit history rows cannot be spilled independently)"
+            )
+        os.makedirs(self.config.spill_dir, exist_ok=True)
+        self.updater = updater
+        m = updater.num_users
+        self.remap = IdRemap(ext_to_phys=np.arange(m, dtype=np.int32))
+        self.phys_to_ext = np.arange(m, dtype=np.int64)
+        self.last_touched = np.zeros(m, np.int64)
+
+    def _sync(self) -> None:
+        """Track table growth done outside resolve() (direct
+        ensure_capacity callers): appended rows are identity-mapped new
+        external ids, touched 'now'."""
+        m = self.updater.num_users
+        have = self.phys_to_ext.shape[0]
+        if m > have:
+            add = m - have
+            new_ext = np.arange(
+                self.remap.num_external,
+                self.remap.num_external + add, dtype=np.int64,
+            )
+            self.remap.ext_to_phys = np.concatenate(
+                [self.remap.ext_to_phys,
+                 np.arange(have, m, dtype=np.int32)]
+            )
+            self.phys_to_ext = np.concatenate([self.phys_to_ext, new_ext])
+            self.last_touched = np.concatenate(
+                [self.last_touched, np.full(add, self._step, np.int64)]
+            )
+
+    # -- the hot-path translation --------------------------------------------
+    def resolve(self, ext_ids: np.ndarray) -> np.ndarray:
+        """External ids → physical rows, for an *update*.
+
+        Unseen ids get fresh physical rows (cold-start growth, same init as
+        ``ensure_capacity``); spilled ids are revived from their spill
+        records.  Every returned row's touch clock is advanced.
+        """
+        self._sync()
+        ext_ids = np.asarray(ext_ids, np.int64)
+        remap = self.remap
+        max_ext = int(ext_ids.max()) if ext_ids.size else -1
+        if max_ext >= remap.num_external:
+            # extend the external domain exactly like grow-only cold start:
+            # every id up to the max gets a (fresh) physical row
+            add = max_ext + 1 - remap.num_external
+            base = self.updater.num_users
+            remap.ext_to_phys = np.concatenate(
+                [remap.ext_to_phys,
+                 np.arange(base, base + add, dtype=np.int32)]
+            )
+            self.phys_to_ext = np.concatenate(
+                [self.phys_to_ext,
+                 np.arange(remap.num_external - add,
+                           remap.num_external, dtype=np.int64)]
+            )
+            self.updater.ensure_capacity(base + add - 1, -1)
+            self.last_touched = np.concatenate(
+                [self.last_touched, np.full(add, self._step, np.int64)]
+            )
+        phys = remap.ext_to_phys[ext_ids].astype(np.int64)
+        spilled = np.unique(ext_ids[phys < 0])
+        if spilled.size:
+            self._revive(spilled)
+            phys = remap.ext_to_phys[ext_ids].astype(np.int64)
+        self._step += 1
+        self.last_touched[phys] = self._step
+        return phys.astype(np.int32)
+
+    # -- spill / revive ------------------------------------------------------
+    def _row_states(self) -> Dict[str, Dict[str, jnp.ndarray]]:
+        """The user-row-indexed optimizer-state dicts, by group name."""
+        opt = self.updater.opt_state
+        groups = {"p": opt.p}
+        if opt.user_bias is not None:
+            groups["user_bias"] = opt.user_bias
+        return groups
+
+    def _spill(self, victims: np.ndarray) -> None:
+        upd = self.updater
+        m = upd.num_users
+        payload: Dict[str, np.ndarray] = {
+            "ext_ids": self.phys_to_ext[victims],
+            "last_touched": self.last_touched[victims],
+            "p": np.asarray(upd.params.p[victims]),
+        }
+        if upd.params.user_bias is not None:
+            payload["user_bias"] = np.asarray(upd.params.user_bias[victims])
+        for group, state in self._row_states().items():
+            for key, value in state.items():
+                if getattr(value, "ndim", 0) >= 1 and value.shape[0] == m:
+                    payload[f"opt.{group}.{key}"] = np.asarray(value[victims])
+        name = f"spill_{self._spill_seq:06d}.npz"
+        self._spill_seq += 1
+        path = os.path.join(self.config.spill_dir, name)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, path)
+        for row, ext in enumerate(payload["ext_ids"]):
+            self._spilled[int(ext)] = (path, row)
+        self.evictions += victims.size
+
+    def _load_spill(self, path: str) -> Dict[str, np.ndarray]:
+        cached_path, cached = self._spill_cache
+        if cached_path != path:
+            with np.load(path) as data:
+                cached = {key: data[key] for key in data.files}
+            self._spill_cache = (path, cached)
+        return cached
+
+    def _revive(self, ext_ids: np.ndarray) -> None:
+        """Grow fresh physical rows, then overwrite them with the spilled
+        values — bitwise the rows that were evicted."""
+        upd = self.updater
+        n_new = int(ext_ids.size)
+        base = upd.num_users
+        upd.ensure_capacity(base + n_new - 1, -1)
+        phys = np.arange(base, base + n_new, dtype=np.int64)
+        self.phys_to_ext = np.concatenate([self.phys_to_ext, ext_ids])
+        self.last_touched = np.concatenate(
+            [self.last_touched, np.full(n_new, self._step, np.int64)]
+        )
+
+        rows: Dict[str, list] = {}
+        for ext in ext_ids:
+            path, row = self._spilled.pop(int(ext))
+            data = self._load_spill(path)
+            for key, value in data.items():
+                if key == "ext_ids":
+                    continue
+                rows.setdefault(key, []).append(value[row])
+        stacked = {key: np.stack(vals) for key, vals in rows.items()}
+
+        idx = jnp.asarray(phys)
+        params = upd.params._replace(
+            p=upd.params.p.at[idx].set(jnp.asarray(stacked["p"]))
+        )
+        if "user_bias" in stacked:
+            params = params._replace(
+                user_bias=upd.params.user_bias.at[idx].set(
+                    jnp.asarray(stacked["user_bias"])
+                )
+            )
+        upd.params = params
+        opt = upd.opt_state
+        new_groups = {}
+        for group, state in self._row_states().items():
+            new_state = dict(state)
+            for key in state:
+                skey = f"opt.{group}.{key}"
+                if skey in stacked:
+                    new_state[key] = state[key].at[idx].set(
+                        jnp.asarray(stacked[skey])
+                    )
+            new_groups[group] = new_state
+        upd.opt_state = opt._replace(
+            p=new_groups["p"],
+            user_bias=new_groups.get("user_bias", opt.user_bias),
+        )
+        self.remap.ext_to_phys[ext_ids] = phys.astype(np.int32)
+        self.revivals += n_new
+
+    # -- the watermark pass --------------------------------------------------
+    def maybe_evict(self) -> Optional[Dict[str, float]]:
+        """Spill + compact down to the target if past the watermark.
+
+        Returns a report dict when a compaction ran (the caller should
+        publish soon after: the updater is marked ``layout_dirty`` and the
+        snapshot carries the bumped ``remap_epoch``), else None.
+        """
+        self._sync()
+        upd = self.updater
+        m = upd.num_users
+        if m <= self.config.max_users:
+            return None
+        target = self.config.resolved_target()
+        n_evict = m - target
+        row_ranks = np.asarray(
+            ranks_lib.effective_ranks(upd.params.p, upd.t_p)
+        )
+        order = np.lexsort(
+            (np.arange(m), row_ranks, self.last_touched)
+        )
+        victims = np.sort(order[:n_evict])
+        keep = np.sort(order[n_evict:])
+        self._spill(victims)
+        self._compact(keep, m)
+        return {
+            "evicted": int(n_evict),
+            "num_users": int(upd.num_users),
+            "remap_epoch": int(self.remap.epoch),
+            "spilled_total": int(len(self._spilled)),
+        }
+
+    def _compact(self, keep: np.ndarray, m: int) -> None:
+        upd = self.updater
+        old_to_new = np.full(m, -1, np.int64)
+        old_to_new[keep] = np.arange(keep.size)
+        take = jnp.asarray(keep)
+
+        params = upd.params._replace(p=upd.params.p[take])
+        if upd.params.user_bias is not None:
+            params = params._replace(user_bias=upd.params.user_bias[take])
+        upd.params = params
+
+        def shrink(state):
+            return {
+                key: (
+                    value[take]
+                    if getattr(value, "ndim", 0) >= 1 and value.shape[0] == m
+                    else value
+                )
+                for key, value in state.items()
+            }
+
+        upd.opt_state = upd.opt_state._replace(
+            p=shrink(upd.opt_state.p),
+            user_bias=(
+                None if upd.opt_state.user_bias is None
+                else shrink(upd.opt_state.user_bias)
+            ),
+        )
+
+        live = self.remap.ext_to_phys >= 0
+        translated = np.full_like(self.remap.ext_to_phys, -1)
+        translated[live] = old_to_new[
+            self.remap.ext_to_phys[live]
+        ].astype(np.int32)
+        self.remap.ext_to_phys = translated
+        self.remap.epoch += 1
+        self.phys_to_ext = self.phys_to_ext[keep]
+        self.last_touched = self.last_touched[keep]
+        self.compactions += 1
+
+        # pending-delta bookkeeping: physical indices shifted, so translate
+        # the touched set and force the next publish to be a full rebuild
+        # (the remap-epoch bump makes every follower heal via kind=full)
+        upd._touched_users = {
+            int(old_to_new[u]) for u in upd._touched_users
+            if u < m and old_to_new[u] >= 0
+        }
+        upd._layout_dirty = True

@@ -1,0 +1,434 @@
+"""mmap-backed columnar ratings store + prefetched streaming epoch loader.
+
+The in-memory path (``data/loader.PackedRatings``) uploads the whole ratings
+table to the device and materializes a full ``jax.random.permutation`` per
+epoch — both are O(dataset).  This module bounds host *and* device memory by
+the slab size instead:
+
+* :func:`build_store` writes the ratings as fixed-dtype columnar shards
+  (``user int32 | item int32 | rating float32`` contiguous blocks per shard)
+  plus an ``index.json`` header; :class:`RatingsStore` reads them back
+  through lazily-opened ``np.memmap`` views, so touching a slab faults in
+  only that slab's pages.
+* :class:`FeistelPermutation` is a bijective index permutation on
+  ``[0, n)`` — any *slice* of the shuffled epoch order is computable in
+  O(slice) without materializing the O(n) permutation array.
+* :class:`ShardedRatingsLoader` streams ``(slab_steps, B)`` epoch slabs
+  through a bounded prefetch queue: a background thread gathers the next
+  slab from the store and ``jax.device_put``s it while the training scan
+  consumes the current one, so host→device transfer overlaps compute.
+  Peak host memory is ``O(prefetch * slab_steps * B)``, independent of the
+  dataset size (asserted by ``benchmarks/bench_scale.py``).
+
+Determinism contract: for a given ``(seed, epoch)`` the *set* of examples
+an epoch visits and their batch assignment are fixed; resuming from slab
+``s`` replays slabs ``s..`` identically to an uninterrupted epoch (the
+permutation is stateless, keyed only by ``(n, seed, epoch)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import threading
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.data.ratings import RatingsDataset
+
+_INDEX_NAME = "index.json"
+_STORE_VERSION = 1
+_ROW_BYTES = 12  # int32 user + int32 item + float32 rating
+
+
+# ---------------------------------------------------------------------------
+# Feistel permutation
+# ---------------------------------------------------------------------------
+
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+
+
+class FeistelPermutation:
+    """Bijective shuffle of ``[0, n)`` computable point-wise.
+
+    A balanced Feistel network over the smallest even-bit-width domain
+    ``2^(2h) >= n`` with a splitmix64-style round function; indices that
+    land outside ``[0, n)`` are cycle-walked (the permutation re-applied)
+    back into range.  A Feistel network is a bijection for *any* round
+    function, and cycle-walking restricts a bijection of the superset to a
+    bijection of the subset — so this is a permutation of ``[0, n)``
+    regardless of key material (property-tested in ``tests/test_store.py``).
+
+    Round keys derive from ``np.random.SeedSequence([seed, epoch, ...])``,
+    matching the spirit (not the bits) of the in-memory loader's
+    ``fold_in(PRNGKey(seed), epoch)``: distinct epochs get independent
+    orders, and the order is reproducible from ``(n, seed, epoch)`` alone.
+    """
+
+    def __init__(self, n: int, seed: int, epoch: int, *, rounds: int = 4):
+        if n <= 0:
+            raise ValueError(f"permutation domain must be positive, got {n}")
+        self.n = int(n)
+        bits = max(int(self.n - 1).bit_length(), 2)
+        self._half_bits = np.uint64((bits + 1) // 2)
+        self._mask = np.uint64((1 << int(self._half_bits)) - 1)
+        ss = np.random.SeedSequence([int(seed), int(epoch), 0x5EED])
+        self._keys = [np.uint64(k) for k in ss.generate_state(rounds, np.uint64)]
+
+    def _walk(self, x: np.ndarray) -> np.ndarray:
+        h, mask = self._half_bits, self._mask
+        left = (x >> h) & mask
+        right = x & mask
+        with np.errstate(over="ignore"):
+            for key in self._keys:
+                f = right + key
+                f = f * _GOLDEN
+                f ^= f >> np.uint64(29)
+                f = f * _MIX1
+                f ^= f >> np.uint64(32)
+                left, right = right, left ^ (f & mask)
+        return (left << h) | right
+
+    def __call__(self, idx: np.ndarray) -> np.ndarray:
+        """Map indices in ``[0, n)`` through the permutation (vectorized)."""
+        out = np.ascontiguousarray(idx, dtype=np.uint64)
+        result = np.empty_like(out)
+        pos = np.arange(out.size)
+        pending = out.reshape(-1)
+        while pending.size:
+            y = self._walk(pending)
+            done = y < np.uint64(self.n)
+            result.reshape(-1)[pos[done]] = y[done]
+            pending, pos = y[~done], pos[~done]
+        return result.astype(np.int64).reshape(np.shape(idx))
+
+
+def permuted_indices(
+    n: int, seed: int, epoch: int, start: int, count: int
+) -> np.ndarray:
+    """``epoch_permutation(n, seed, epoch)[start:start+count]`` without
+    materializing the O(n) permutation — O(count) work and memory."""
+    perm = FeistelPermutation(n, seed, epoch)
+    return perm(np.arange(start, start + count, dtype=np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Columnar store
+# ---------------------------------------------------------------------------
+
+def build_store(
+    ds: RatingsDataset, directory: str, *, shard_rows: int = 1 << 20
+) -> str:
+    """One-shot converter: in-memory arrays → columnar shard files.
+
+    Each shard file is three contiguous columnar blocks
+    (``user[int32] | item[int32] | rating[float32]``) of at most
+    ``shard_rows`` rows; ``index.json`` carries the dataset-level metadata
+    (counts, rating range, global mean) so training never needs the source
+    arrays again.  Returns ``directory``.
+    """
+    if shard_rows <= 0:
+        raise ValueError(f"shard_rows must be positive, got {shard_rows}")
+    os.makedirs(directory, exist_ok=True)
+    n = len(ds)
+    shards: List[Dict[str, object]] = []
+    for start in range(0, max(n, 1), shard_rows):
+        rows = min(shard_rows, n - start)
+        if rows <= 0:
+            break
+        name = f"shard_{len(shards):05d}.bin"
+        with open(os.path.join(directory, name), "wb") as f:
+            f.write(np.ascontiguousarray(
+                ds.user[start:start + rows], np.int32).tobytes())
+            f.write(np.ascontiguousarray(
+                ds.item[start:start + rows], np.int32).tobytes())
+            f.write(np.ascontiguousarray(
+                ds.rating[start:start + rows], np.float32).tobytes())
+        shards.append({"file": name, "rows": int(rows)})
+    index = {
+        "version": _STORE_VERSION,
+        "num_examples": int(n),
+        "num_users": int(ds.num_users),
+        "num_items": int(ds.num_items),
+        "rating_min": float(ds.rating_min),
+        "rating_max": float(ds.rating_max),
+        "global_mean": float(ds.global_mean),
+        "shard_rows": int(shard_rows),
+        "shards": shards,
+    }
+    tmp = os.path.join(directory, _INDEX_NAME + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(index, f, indent=2)
+    os.replace(tmp, os.path.join(directory, _INDEX_NAME))
+    return directory
+
+
+class RatingsStore:
+    """Read side of the columnar store: dataset-shaped metadata plus an
+    mmap-backed :meth:`gather` that touches only the pages it needs."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        with open(os.path.join(directory, _INDEX_NAME)) as f:
+            index = json.load(f)
+        if index.get("version") != _STORE_VERSION:
+            raise ValueError(
+                f"unsupported store version {index.get('version')!r} "
+                f"(expected {_STORE_VERSION})"
+            )
+        self.num_examples = int(index["num_examples"])
+        self.num_users = int(index["num_users"])
+        self.num_items = int(index["num_items"])
+        self.rating_min = float(index["rating_min"])
+        self.rating_max = float(index["rating_max"])
+        self.global_mean = float(index["global_mean"])
+        self.shard_rows = int(index["shard_rows"])
+        self._shards = [(s["file"], int(s["rows"])) for s in index["shards"]]
+        rows = np.array([r for _, r in self._shards], np.int64)
+        self._offsets = np.concatenate([[0], np.cumsum(rows)])
+        if self._offsets[-1] != self.num_examples:
+            raise ValueError(
+                f"index.json inconsistent: shards sum to {self._offsets[-1]} "
+                f"rows but num_examples={self.num_examples}"
+            )
+        self._maps: Dict[int, Tuple[np.memmap, np.memmap, np.memmap]] = {}
+        self._maps_lock = threading.Lock()
+
+    def __len__(self) -> int:
+        return self.num_examples
+
+    def _columns(self, shard: int) -> Tuple[np.memmap, np.memmap, np.memmap]:
+        with self._maps_lock:
+            cols = self._maps.get(shard)
+            if cols is None:
+                name, rows = self._shards[shard]
+                path = os.path.join(self.directory, name)
+                cols = (
+                    np.memmap(path, np.int32, "r", offset=0, shape=(rows,)),
+                    np.memmap(path, np.int32, "r", offset=4 * rows,
+                              shape=(rows,)),
+                    np.memmap(path, np.float32, "r", offset=8 * rows,
+                              shape=(rows,)),
+                )
+                self._maps[shard] = cols
+            return cols
+
+    def gather(
+        self, idx: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Gather rows by global example index (any order, duplicates OK).
+
+        Grouped per shard so each shard's mmap is fancy-indexed once;
+        returns fresh host arrays ``(user, item, rating)``."""
+        idx = np.asarray(idx, np.int64)
+        if idx.size and (idx.min() < 0 or idx.max() >= self.num_examples):
+            raise IndexError(
+                f"example index out of range [0, {self.num_examples})"
+            )
+        user = np.empty(idx.shape, np.int32)
+        item = np.empty(idx.shape, np.int32)
+        rating = np.empty(idx.shape, np.float32)
+        shard_of = np.searchsorted(self._offsets, idx, side="right") - 1
+        for s in np.unique(shard_of):
+            mask = shard_of == s
+            local = idx[mask] - self._offsets[s]
+            u_col, i_col, r_col = self._columns(int(s))
+            user[mask] = u_col[local]
+            item[mask] = i_col[local]
+            rating[mask] = r_col[local]
+        return user, item, rating
+
+    def iter_shards(
+        self,
+    ) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Yield each shard's ``(user, item, rating)`` columns in order —
+        the sequential-scan primitive for converters and evaluators."""
+        for s in range(len(self._shards)):
+            yield self._columns(s)
+
+    def to_dataset(self) -> RatingsDataset:
+        """Materialize the whole store in memory (small stores / tests)."""
+        if self._shards:
+            cols = list(zip(*self.iter_shards()))
+            user = np.concatenate([np.asarray(c) for c in cols[0]])
+            item = np.concatenate([np.asarray(c) for c in cols[1]])
+            rating = np.concatenate([np.asarray(c) for c in cols[2]])
+        else:
+            user = np.empty(0, np.int32)
+            item = np.empty(0, np.int32)
+            rating = np.empty(0, np.float32)
+        return RatingsDataset(
+            user=user,
+            item=item,
+            rating=rating,
+            num_users=self.num_users,
+            num_items=self.num_items,
+            rating_min=self.rating_min,
+            rating_max=self.rating_max,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Streaming epoch loader
+# ---------------------------------------------------------------------------
+
+class _WorkerError:
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+_SENTINEL = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class SlabBatches:
+    """One prefetched slab: device-resident ``(steps, B)`` batch arrays."""
+
+    slab_idx: int
+    steps: int
+    batches: Dict[str, jax.Array]
+
+
+class ShardedRatingsLoader:
+    """Streams shuffled ``(slab_steps, B)`` epoch slabs from a
+    :class:`RatingsStore` through a bounded prefetch queue.
+
+    Drop-in replacement for ``PackedRatings.epoch_batches`` for slab-chunked
+    scans: ``epoch_slabs(seed, epoch)`` yields :class:`SlabBatches` whose
+    concatenation over an epoch is one deterministic shuffled pass keyed by
+    ``(seed, epoch)``.  The prefetch worker computes slab ``s+1``'s host
+    gather and ``jax.device_put`` while the caller's scan runs slab ``s`` —
+    the queue depth (``prefetch``) bounds host memory, not the dataset.
+    """
+
+    def __init__(
+        self,
+        store: RatingsStore,
+        batch_size: int,
+        *,
+        slab_steps: int = 256,
+        prefetch: int = 2,
+    ):
+        if batch_size <= 0:
+            raise ValueError(f"batch_size must be positive, got {batch_size}")
+        if slab_steps <= 0:
+            raise ValueError(f"slab_steps must be positive, got {slab_steps}")
+        if prefetch <= 0:
+            raise ValueError(f"prefetch must be positive, got {prefetch}")
+        self.store = store
+        self.batch_size = int(min(batch_size, max(len(store), 1)))
+        self.num_steps = len(store) // self.batch_size
+        if self.num_steps == 0:
+            raise ValueError(
+                f"dataset has {len(store)} examples < batch_size "
+                f"{self.batch_size}; nothing to stream"
+            )
+        self.slab_steps = int(min(slab_steps, self.num_steps))
+        self.num_slabs = -(-self.num_steps // self.slab_steps)
+        self.prefetch = int(prefetch)
+
+    @property
+    def num_examples(self) -> int:
+        return len(self.store)
+
+    def slab_bounds(self, slab_idx: int) -> Tuple[int, int]:
+        """Half-open ``[start_step, end_step)`` of one slab (last is ragged)."""
+        if not 0 <= slab_idx < self.num_slabs:
+            raise IndexError(f"slab {slab_idx} out of [0, {self.num_slabs})")
+        start = slab_idx * self.slab_steps
+        return start, min(start + self.slab_steps, self.num_steps)
+
+    def _host_slab(
+        self, perm: Optional[FeistelPermutation], slab_idx: int
+    ) -> Dict[str, np.ndarray]:
+        start, end = self.slab_bounds(slab_idx)
+        steps = end - start
+        b = self.batch_size
+        idx = np.arange(start * b, end * b, dtype=np.int64)
+        if perm is not None:
+            idx = perm(idx)
+        user, item, rating = self.store.gather(idx)
+        return {
+            "user": user.reshape(steps, b),
+            "item": item.reshape(steps, b),
+            "rating": rating.reshape(steps, b),
+        }
+
+    def epoch_slabs(
+        self,
+        seed: int,
+        epoch: int,
+        *,
+        start_slab: int = 0,
+        shuffle: bool = True,
+    ) -> Iterator[SlabBatches]:
+        """Yield the epoch's slabs from ``start_slab`` on, prefetched.
+
+        The same ``(seed, epoch)`` always yields the same example→batch
+        assignment, so a resume from ``start_slab`` sees exactly the slabs
+        an uninterrupted epoch would have run from that point.
+        """
+        if not 0 <= start_slab <= self.num_slabs:
+            raise ValueError(
+                f"start_slab {start_slab} out of [0, {self.num_slabs}]"
+            )
+        perm = (
+            FeistelPermutation(self.num_examples, seed, epoch)
+            if shuffle else None
+        )
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def worker() -> None:
+            try:
+                for slab_idx in range(start_slab, self.num_slabs):
+                    if stop.is_set():
+                        return
+                    host = self._host_slab(perm, slab_idx)
+                    # async host->device copy; overlaps the consumer's scan
+                    dev = {k: jax.device_put(v) for k, v in host.items()}
+                    start, end = self.slab_bounds(slab_idx)
+                    item = SlabBatches(
+                        slab_idx=slab_idx, steps=end - start, batches=dev
+                    )
+                    while not stop.is_set():
+                        try:
+                            q.put(item, timeout=0.1)
+                            break
+                        except queue.Full:
+                            continue
+                payload = _SENTINEL
+            except BaseException as exc:  # surfaced to the consumer
+                payload = _WorkerError(exc)
+            while not stop.is_set():
+                try:
+                    q.put(payload, timeout=0.1)
+                    return
+                except queue.Full:
+                    continue
+
+        thread = threading.Thread(
+            target=worker, name="ratings-prefetch", daemon=True
+        )
+        thread.start()
+        try:
+            while True:
+                got = q.get()
+                if got is _SENTINEL:
+                    return
+                if isinstance(got, _WorkerError):
+                    raise got.exc
+                yield got
+        finally:
+            stop.set()
+            while thread.is_alive():
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    pass
+                thread.join(timeout=0.1)
