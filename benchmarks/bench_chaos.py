@@ -1,0 +1,229 @@
+"""Chaos: replica kill under load, corrupt deltas, supervised recovery.
+
+    PYTHONPATH=src python -m benchmarks.bench_chaos [--full]
+
+Three claims, checked then timed, all driven by the deterministic fault
+harness (``repro.testing.faults``) so every run replays the same failure
+schedule:
+
+1. **a replica kill loses no requests** — concurrent traffic through a
+   local fleet while a seeded :class:`FaultPlan` kills one replica
+   mid-stream and a :class:`FleetSupervisor` detects, respawns from a
+   healthy peer, and readmits it after convergence.  Asserted: zero
+   failed/stranded futures, the death is detected *and* recovered, and
+   completed-request throughput during the kill→readmit window stays
+   ≥ 90 % of the pre-kill rate (the availability floor).  MTTR
+   (detection → readmission) is recorded.
+2. **corrupt deltas heal to bitwise convergence** — live replication
+   with deliveries corrupted and dropped on the wire: the CRC check
+   NAKs the corrupt delta (stale ack), the publisher's lag check forces
+   a ``kind=full`` heal, and the surviving fleet must end bitwise equal
+   to a fault-free shadow replica fed the same messages.
+3. **the harness is free when disarmed** — the per-seam disabled cost
+   (one module-attribute check) is timed in nanoseconds.
+
+Emits the ``name,us_per_call,derived`` CSV contract and writes
+``BENCH_chaos.json`` (summary schema documented in
+``docs/architecture.md``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import jax
+
+from benchmarks.common import emit, reset_records, write_json
+from repro.core import mf
+from repro.online import OnlineUpdater, PoissonSource, SnapshotPublisher, iter_microbatches
+from repro.serving.fleet import FleetSupervisor, ServingFleet
+from repro.serving.fleet.replica import LocalReplica
+from repro.testing import faults
+from repro.testing.faults import FaultAction, FaultPlan
+
+
+def _drive_timed(frontend, users, topk, clients=8, timeout=60.0):
+    """Submit every user id through ``clients`` threads; returns
+    (completion_monotonic_times, failures)."""
+    done_at = []
+    failures = []
+
+    def one(u):
+        try:
+            frontend.submit(int(u), topk, timeout=timeout).result(timeout)
+            done_at.append(time.monotonic())
+        except Exception as exc:  # noqa: BLE001 - any failure is a loss
+            failures.append(repr(exc))
+
+    with ThreadPoolExecutor(max_workers=clients) as pool:
+        list(pool.map(one, users))
+    return done_at, failures
+
+
+def run(*, full: bool = False, smoke: bool = False) -> None:
+    """Run the chaos suite at smoke/default/full scale."""
+    reset_records()
+    if smoke:
+        m, n, k = 400, 3000, 16
+        n_requests, replicas = 1500, 3
+        stream_batches = 4
+    elif full:
+        m, n, k = 8000, 60000, 32
+        n_requests, replicas = 6000, 4
+        stream_batches = 10
+    else:
+        m, n, k = 2000, 20000, 24
+        n_requests, replicas = 3000, 3
+        stream_batches = 6
+    topk = 10
+    kill_at = n_requests // (replicas * 10)  # ~10% into r0's share
+    rng = np.random.default_rng(0)
+    summary = {"replicas": replicas, "kill_at": kill_at}
+
+    # ---- 1. replica kill under load: zero losses, MTTR, availability -------
+    params = mf.init_params(jax.random.PRNGKey(0), m, n, k, variant="bias",
+                            global_mean=3.5)
+    fleet = ServingFleet(params, 0.0, 0.0, replicas=replicas, backend="local",
+                         queue_kwargs={"linger_ms": 0.5})
+    supervisor = FleetSupervisor(
+        fleet.router, probe_interval_s=0.02, ping_timeout_s=2.0, dead_after=1,
+    )
+    supervisor.start()
+    plan = FaultPlan([
+        FaultAction(site="replica.submit", op="kill", at=kill_at, target="r0"),
+    ])
+    users = rng.integers(0, m, n_requests)
+    t_start = time.monotonic()
+    with faults.installed(plan):
+        done_at, failures = _drive_timed(fleet, users, topk)
+        # keep probing until the respawn lands (traffic may finish first)
+        deadline = time.monotonic() + 60.0
+        while time.monotonic() < deadline:
+            rep = supervisor.report()
+            if rep["deaths"] and rep["recovered"] == rep["deaths"]:
+                break
+            time.sleep(0.01)
+    supervisor.stop()
+    rep = supervisor.report()
+    stats = fleet.stats()
+    fleet.close()
+    assert not failures, f"replica kill lost requests: {failures[:3]}"
+    assert plan.pending == 0, "the scheduled kill never fired"
+    assert rep["deaths"] >= 1, "supervisor never detected the kill"
+    assert rep["recovered"] == rep["deaths"], f"unrecovered incident: {rep}"
+    incident = supervisor.incidents[0]
+    mttr_s = rep["mttr_max_s"]
+    # availability: completed-request rate during the incident window vs
+    # before the kill.  The window is stretched to ≥100 ms so a fast respawn
+    # still yields a statistically meaningful rate.
+    det, healed = incident.detected_at, incident.healthy_at
+    window_end = max(healed, det + 0.1)
+    pre = sum(1 for t in done_at if t < det)
+    dur = sum(1 for t in done_at if det <= t <= window_end)
+    pre_rate = pre / max(det - t_start, 1e-9)
+    dur_rate = dur / max(window_end - det, 1e-9)
+    availability = min(1.0, dur_rate / max(pre_rate, 1e-9))
+    assert availability >= 0.9, (
+        f"availability during kill→respawn {availability:.3f} < 0.9 "
+        f"({dur_rate:.0f} vs {pre_rate:.0f} req/s)"
+    )
+    wall = max(done_at) - t_start
+    emit("chaos_kill_req_s", len(done_at) / wall,
+         f"failovers={stats['failovers']} repins={stats['affinity_repins']}")
+    emit("chaos_mttr_ms", mttr_s * 1e3,
+         f"probes={rep['probes']} respawns={rep['respawns']}")
+    emit("chaos_availability", availability,
+         f"during={dur_rate:.0f}req_s before={pre_rate:.0f}req_s")
+    summary.update({
+        "lost_futures": len(failures),
+        "zero_lost_futures": True,
+        "deaths": rep["deaths"],
+        "recovered": rep["recovered"],
+        "failovers": int(stats["failovers"]),
+        "mttr_s": round(mttr_s, 4),
+        "availability_during_incident": round(availability, 4),
+    })
+
+    # ---- 2. corrupt/dropped deltas: NAK -> full heal -> bitwise equal ------
+    upd = OnlineUpdater(params, None, 0.0, 0.0, batch_size=256, seed=7)
+    fleet = ServingFleet(params, 0.0, 0.0, replicas=replicas, backend="local",
+                         queue_kwargs={"linger_ms": 0.5})
+    shadow = LocalReplica("shadow", params, 0.0, 0.0)
+    pub = SnapshotPublisher(None, upd, compress=True)
+    pub.subscribe(fleet.router)
+    pub.subscribe(shadow)  # fault-free reference fed the same messages
+    plan = FaultPlan([
+        FaultAction(site="bus.deliver", op="corrupt", at=1, target="r1"),
+        FaultAction(site="bus.deliver", op="drop", at=2, target="r2"),
+    ])
+    src = PoissonSource(m, n, rate=1e4, seed=7)
+    swaps = []
+    with faults.installed(plan):
+        for batch in iter_microbatches(src, 256, max_events=256 * stream_batches):
+            upd.apply(batch)
+            swaps.append(pub.publish())
+    # one clean publish after the faults: the stale acks left by the corrupt
+    # and dropped deliveries force this one out kind=full — the heal
+    upd.apply(next(iter_microbatches(PoissonSource(m, n, rate=1e4, seed=8),
+                                     256, max_events=256)))
+    swaps.append(pub.publish())
+    stats = fleet.stats()
+    corrupt_dropped = sum(
+        r.get("updates_corrupt", 0) for r in stats["replicas"]
+    )
+    heals = sum(1 for s in swaps if s.kind == "full")
+    versions = [r.version for r in fleet.replicas]
+    assert corrupt_dropped >= 1, "the CRC check never NAKed the corruption"
+    assert all(v == pub.version for v in versions), (
+        f"fleet diverged after heal: {versions} != v{pub.version}"
+    )
+    assert shadow.version == pub.version
+    mismatched = []
+    shadow_leaves = jax.tree_util.tree_leaves(shadow.engine.params)
+    for r in fleet.replicas:
+        for a, b in zip(jax.tree_util.tree_leaves(r.engine.params),
+                        shadow_leaves):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                mismatched.append(r.replica_id)
+                break
+    fleet.close()
+    shadow.close()
+    assert not mismatched, (
+        f"replicas not bitwise-equal to fault-free shadow: {mismatched}"
+    )
+    emit("chaos_heal_publishes", len(swaps),
+         f"full={heals} corrupt_NAKed={corrupt_dropped}")
+    summary.update({
+        "publishes": len(swaps),
+        "heals_kind_full": heals,
+        "corrupt_dropped": int(corrupt_dropped),
+        "final_version": int(pub.version),
+        "bitwise_convergent": True,
+    })
+
+    # ---- 3. disarmed-seam cost ---------------------------------------------
+    iters = 1_000_000
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        if faults._PLAN is not None:  # the exact production guard
+            pass
+    seam_ns = (time.perf_counter() - t0) / iters * 1e9
+    emit("chaos_seam_off_ns", seam_ns, "per-seam cost with no plan installed")
+    summary["seam_off_ns"] = round(seam_ns, 2)
+
+    write_json("chaos", summary)
+
+
+def main() -> None:
+    """CLI entry point."""
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--full", action="store_true")
+    parser.add_argument("--smoke", action="store_true")
+    args = parser.parse_args()
+    run(full=args.full, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

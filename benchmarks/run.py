@@ -27,7 +27,7 @@ def main() -> None:
     parser.add_argument("--only", default=None,
                         help="comma-separated subset: "
                              "figures,kernels,roofline,serving,online,"
-                             "training,eval,fleet,slo,scale")
+                             "training,eval,fleet,slo,scale,chaos")
     parser.add_argument("--json-dir", default=None,
                         help="directory for the BENCH_<suite>.json reports "
                              "(default: $BENCH_JSON_DIR or CWD)")
@@ -38,6 +38,7 @@ def main() -> None:
         os.environ["BENCH_JSON_DIR"] = args.json_dir
 
     from benchmarks import (
+        bench_chaos,
         bench_eval,
         bench_fleet,
         bench_kernels,
@@ -62,6 +63,7 @@ def main() -> None:
         "fleet": bench_fleet.run,
         "slo": bench_slo.run,
         "scale": bench_scale.run,
+        "chaos": bench_chaos.run,
     }
     selected = (
         {s.strip() for s in args.only.split(",")} if args.only else set(suites)

@@ -1,5 +1,6 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
     AsyncCheckpointer,
+    CorruptCheckpointError,
     all_steps,
     elastic_load,
     latest_step,

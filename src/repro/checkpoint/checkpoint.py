@@ -28,14 +28,24 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
+from repro.testing import faults
+
 Pytree = Any
 
 _SEP = "__"
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint payload failed its integrity check (CRC mismatch,
+    truncated/unreadable npz).  Restores fall back to an older step
+    instead of propagating an opaque zipfile/numpy exception — corrupt
+    bytes must never become NaN factors."""
 
 
 def _flatten_with_paths(tree: Pytree) -> List[Tuple[str, np.ndarray]]:
@@ -93,10 +103,22 @@ def save(
 
     arrays = dict(_flatten_with_paths(tree))
     np.savez(os.path.join(data_dir, "arrays.npz"), **arrays)
-    meta = {"step": step, "keys": sorted(arrays), **(metadata or {})}
+    # CRC the payload as written: restores verify these exact bytes, so a
+    # truncation or bit flip between here and the restore is detected
+    # instead of deserialized
+    meta = {
+        "step": step,
+        "keys": sorted(arrays),
+        "payload_crc32": _file_crc32(os.path.join(data_dir, "arrays.npz")),
+        **(metadata or {}),
+    }
     with open(os.path.join(data_dir, "metadata.json"), "w") as f:
         json.dump(meta, f, indent=2, default=str)
     # fsync the payload before publishing so a crash cannot publish garbage.
+    if faults._PLAN is not None:
+        for act in faults.fire("checkpoint.fsync"):
+            if act.op == "error":
+                raise OSError("injected fsync failure (chaos harness)")
     for name in ("arrays.npz", "metadata.json"):
         fd = os.open(os.path.join(data_dir, name), os.O_RDONLY)
         try:
@@ -116,6 +138,17 @@ def save(
     _fsync_dir(directory)
     _garbage_collect(directory, keep)
     return final
+
+
+def _file_crc32(path: str, *, chunk: int = 1 << 20) -> int:
+    """Streaming CRC-32 of one file (constant memory)."""
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(chunk)
+            if not block:
+                return crc
+            crc = zlib.crc32(block, crc)
 
 
 def _remove_step(directory: str, step: int) -> None:
@@ -207,7 +240,13 @@ def load_raw(
     """Load a step's flat ``{key: array}`` payload + metadata, no structure
     imposed — the layer :func:`restore` (pytree shaping) and the online
     delta folds build on.  Pass ``metadata`` if already read to skip the
-    re-read."""
+    re-read.
+
+    Integrity: when the metadata carries ``payload_crc32`` (every save
+    since the checksum landed) the npz bytes are verified against it
+    before deserialization; any mismatch — and any unreadable/truncated
+    payload, stamped or legacy — raises :class:`CorruptCheckpointError`.
+    """
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -215,11 +254,28 @@ def load_raw(
     # resolve the step symlink ONCE so metadata and arrays come from the
     # same payload even while a concurrent writer re-publishes the step
     base = os.path.realpath(step_path(directory, step))
-    if metadata is None:
-        with open(os.path.join(base, "metadata.json")) as f:
-            metadata = json.load(f)
-    with np.load(os.path.join(base, "arrays.npz")) as data:
-        arrays = {key: data[key] for key in data.files}
+    try:
+        if metadata is None:
+            with open(os.path.join(base, "metadata.json")) as f:
+                metadata = json.load(f)
+        npz_path = os.path.join(base, "arrays.npz")
+        expected = metadata.get("payload_crc32")
+        if expected is not None and _file_crc32(npz_path) != int(expected):
+            raise CorruptCheckpointError(
+                f"step {step}: arrays.npz fails its payload_crc32 check"
+            )
+        with np.load(npz_path) as data:
+            arrays = {key: data[key] for key in data.files}
+    except CorruptCheckpointError:
+        raise
+    except FileNotFoundError:
+        raise
+    except Exception as exc:
+        # zipfile.BadZipFile, json decode errors, pickle/OS errors from a
+        # torn write — one clean type the caller can fall back on
+        raise CorruptCheckpointError(
+            f"step {step}: unreadable payload ({type(exc).__name__}: {exc})"
+        ) from exc
     return arrays, metadata
 
 
@@ -229,9 +285,36 @@ def restore(
     *,
     step: Optional[int] = None,
 ) -> Tuple[Pytree, Dict[str, Any]]:
-    """Restore into the structure of ``tree_like``.  Returns (tree, metadata)."""
-    arrays, meta = load_raw(directory, step)
+    """Restore into the structure of ``tree_like``.  Returns (tree, metadata).
 
+    When ``step`` is None (restore-latest — the crash-recovery path), a
+    corrupt newest checkpoint falls back to the next older step until one
+    verifies; only when *every* retained step is corrupt does the
+    :class:`CorruptCheckpointError` propagate.  An explicitly requested
+    step never falls back — the caller asked for those exact bytes.
+    """
+    if step is None:
+        steps = all_steps(directory)
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+        last_err: Optional[Exception] = None
+        for candidate in reversed(steps):
+            try:
+                arrays, meta = load_raw(directory, candidate)
+                break
+            except CorruptCheckpointError as exc:
+                last_err = exc
+        else:
+            raise CorruptCheckpointError(
+                f"every retained checkpoint under {directory} is corrupt"
+            ) from last_err
+        return _shape_restore(tree_like, arrays), meta
+    arrays, meta = load_raw(directory, step)
+    return _shape_restore(tree_like, arrays), meta
+
+
+def _shape_restore(tree_like: Pytree, arrays: Dict[str, np.ndarray]) -> Pytree:
+    """Unflatten a raw payload into ``tree_like``'s structure, shape-checked."""
     keys = [k for k, _ in _flatten_with_paths(tree_like)]
     leaves, treedef = jax.tree_util.tree_flatten(tree_like)
     restored = []
@@ -245,7 +328,7 @@ def restore(
                 f"{np.shape(like)}"
             )
         restored.append(arr)
-    return treedef.unflatten(restored), meta
+    return treedef.unflatten(restored)
 
 
 def elastic_load(

@@ -25,8 +25,13 @@ from repro import checkpoint as ckpt_lib
 from repro.core import mf, rearrange, threshold
 from repro.data import loader
 from repro.data.ratings import RatingsDataset, build_user_history
+from repro.distributed.fault_tolerance import (
+    StragglerDetector,
+    run_with_retries,
+)
 from repro.optim.optimizers import RowOptimizer
 from repro.optim.schedules import twin_learners_mask
+from repro.testing import faults
 
 
 @dataclasses.dataclass
@@ -58,6 +63,11 @@ class TrainConfig:
     slab_steps: int = 256              # steps per streamed slab
     prefetch_slabs: int = 2            # bounded host prefetch queue depth
     checkpoint_every_slabs: int = 0    # 0 = no mid-epoch checkpoints
+    # bounded retries around each streamed slab (store mode): a transient
+    # step failure re-runs the slab instead of killing the epoch.  Safe
+    # because failures injected/raised before dispatch leave params
+    # untouched; 0 disables the wrapper entirely.
+    max_step_retries: int = 0
     # -- distributed gradient exchange (shard_map path) ---------------------
     grad_compression: str = "none"     # none | int8 | int8_ef
 
@@ -82,6 +92,8 @@ class EpochRecord:
     hr: float = float("nan")       # HR@K at ranking_topk
     ndcg: float = float("nan")     # NDCG@K
     recall: float = float("nan")   # recall@K
+    straggler_slabs: int = 0       # slabs flagged as wall-time outliers
+    step_retries: int = 0          # slab retries consumed this epoch
 
 
 class DPMFTrainer:
@@ -103,6 +115,12 @@ class DPMFTrainer:
         self._loader = None
         self._resume_slab = 0
         self._resume_sums = (0.0, 0.0, 0)   # (err_sum, work_sum, steps_done)
+        # slab-level fault tolerance: wall-time outlier detection feeding
+        # the epoch record, plus an optional test-injected failure source
+        # (FailureInjector) exercised under TrainConfig.max_step_retries
+        self.straggler = StragglerDetector(window=20, z_threshold=4.0)
+        self.failure_injector = None
+        self._slab_counter = 0              # global slab index across epochs
         if config.store_dir is not None:
             # Out-of-core path: the ratings stay on disk (mmap) and stream
             # through a bounded prefetch queue as (slab_steps, B) slabs —
@@ -312,6 +330,8 @@ class DPMFTrainer:
         lr = jnp.float32(cfg.lr)
 
         start = time.perf_counter()
+        straggler_slabs = 0
+        retry_count = [0]
         if self._loader is not None:
             # Store mode: the epoch is a sequence of slab-chunked scans fed
             # by the prefetch queue.  Metric means accumulate step-weighted
@@ -327,20 +347,47 @@ class DPMFTrainer:
             for slab in self._loader.epoch_slabs(
                 cfg.seed, self.epoch, start_slab=start_slab
             ):
-                self.params, self.opt_state, metrics = mf.train_epoch_scan(
-                    self.params,
-                    self.opt_state,
-                    slab.batches,
-                    t_p,
-                    t_q,
-                    lr,
-                    dim_mask,
-                    self._hist_dev,
-                    opt=self.opt,
-                    lam=cfg.lam,
-                    use_fused_kernel=cfg.use_fused_kernel,
-                )
+                def run_slab(slab=slab):
+                    # faults fire BEFORE the dispatch so a retry re-runs
+                    # the slab against untouched params (no donation hazard)
+                    if self.failure_injector is not None:
+                        self.failure_injector(self._slab_counter)
+                    if faults._PLAN is not None:
+                        for act in faults.fire("trainer.slab"):
+                            if act.op == "error":
+                                raise faults.FaultError(
+                                    "injected slab failure"
+                                )
+                    return mf.train_epoch_scan(
+                        self.params,
+                        self.opt_state,
+                        slab.batches,
+                        t_p,
+                        t_q,
+                        lr,
+                        dim_mask,
+                        self._hist_dev,
+                        opt=self.opt,
+                        lam=cfg.lam,
+                        use_fused_kernel=cfg.use_fused_kernel,
+                    )
+
+                slab_start = time.perf_counter()
+                if cfg.max_step_retries > 0:
+                    self.params, self.opt_state, metrics = run_with_retries(
+                        run_slab,
+                        max_retries=cfg.max_step_retries,
+                        backoff_s=0.05,
+                        on_retry=lambda n, exc: retry_count.__setitem__(
+                            0, retry_count[0] + 1
+                        ),
+                    )
+                else:
+                    self.params, self.opt_state, metrics = run_slab()
                 jax.block_until_ready(self.params.p)
+                if self.straggler.record(time.perf_counter() - slab_start):
+                    straggler_slabs += 1
+                self._slab_counter += 1
                 err_sum += float(metrics["abs_err"]) * slab.steps
                 work_sum += float(metrics["work_fraction"]) * slab.steps
                 steps_done += slab.steps
@@ -420,6 +467,8 @@ class DPMFTrainer:
             work_fraction=work,
             t_p=float(t_p),
             t_q=float(t_q),
+            straggler_slabs=straggler_slabs,
+            step_retries=retry_count[0],
             **(
                 {"hr": ranking.hr, "ndcg": ranking.ndcg,
                  "recall": ranking.recall}

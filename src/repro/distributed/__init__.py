@@ -15,9 +15,7 @@ from repro.distributed.fault_tolerance import (  # noqa: F401
     FailureInjector,
     StepFailure,
     StragglerDetector,
-    reshard_tree,
     run_with_retries,
-    timed_step,
 )
 from repro.distributed.sharding import (  # noqa: F401
     data_axes,

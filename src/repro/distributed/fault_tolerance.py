@@ -1,22 +1,20 @@
-"""Fault tolerance: retries, straggler detection, elastic re-sharding.
+"""Fault tolerance: bounded step retries + straggler detection.
 
 This container has one CPU device, so node failure and stragglers are
 *simulated* at the driver layer — but the mechanisms are the real ones a
-multi-pod deployment uses: bounded retry with fresh-compile backoff around
-the step call, per-step timing outlier detection feeding a backup-worker
-policy, and checkpoint-mediated elastic restart (the mesh a job restores
-onto is independent of the mesh it saved from).
+multi-pod deployment uses: bounded retry with backoff around the step
+call (``run_with_retries``; wired around the trainer's slab loop via
+``TrainConfig.max_step_retries`` and around whole epochs in
+``launch/train.py``) and per-step timing outlier detection
+(``StragglerDetector``; slab timings feed the trainer's epoch records).
+``FailureInjector`` drives the regression tests for both.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Deque, Optional, Tuple
-
-import jax
-
-Pytree = Any
+from typing import Callable, Deque, Optional, Tuple
 
 
 class StepFailure(RuntimeError):
@@ -86,27 +84,6 @@ class StragglerDetector:
         if len(times) > self.window:
             times.popleft()
         return is_straggler
-
-
-def timed_step(step_fn, detector: StragglerDetector):
-    """Wrap a step function with wall-time straggler accounting."""
-
-    def wrapped(*args, **kwargs):
-        start = time.perf_counter()
-        out = step_fn(*args, **kwargs)
-        jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
-        detector.record(time.perf_counter() - start)
-        return out
-
-    return wrapped
-
-
-def reshard_tree(tree: Pytree, shardings: Pytree) -> Pytree:
-    """Move a (host or device) pytree onto new shardings — the elastic-resume
-    primitive: restore a checkpoint, then reshard onto the current mesh."""
-    return jax.tree_util.tree_map(
-        lambda x, s: jax.device_put(x, s), tree, shardings
-    )
 
 
 class FailureInjector:

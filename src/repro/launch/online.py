@@ -112,6 +112,7 @@ def run_online(args) -> dict:
         block_n=args.block_n,
     )
     fleet = None
+    supervisor = None
     if args.replicas > 1:
         from repro.serving.fleet import ServingFleet
 
@@ -128,6 +129,13 @@ def run_online(args) -> dict:
         engine = None
         print(f"# fleet: {args.replicas} {args.replica_backend} replicas, "
               f"routing={args.routing}")
+        if args.supervise:
+            supervisor = fleet.supervise(
+                probe_interval_s=0.5,
+                checkpoint=(args.ckpt or None),
+                online_dir=(args.ckpt + "/online") if args.ckpt else None,
+            )
+            print("# supervisor armed: probe 0.5s, auto-respawn on")
     else:
         engine = ServingEngine(
             trainer.params, trainer.t_p, trainer.t_q,
@@ -266,6 +274,10 @@ def run_online(args) -> dict:
     for t in threads:
         t.join(timeout=120)
     fleet_stats = None if fleet is None else fleet.stats()
+    supervisor_report = None
+    if supervisor is not None:
+        supervisor.stop()
+        supervisor_report = supervisor.report()
     if engine is not None:
         engine.stop()
     else:
@@ -310,13 +322,17 @@ def run_online(args) -> dict:
         report["slo"] = controller.report()
         report["steady_p99_ms"] = steady_p99
         report["slo_violated"] = bool(steady_p99 > args.slo_p99_ms)
+    if supervisor_report is not None:
+        report["failures"] = supervisor_report
     if fleet_stats is not None:
+        # unhealthy replicas report a stub stats dict without "version"
         replica_versions = {
-            r["replica_id"]: r["version"] for r in fleet_stats["replicas"]
+            r["replica_id"]: r.get("version")
+            for r in fleet_stats["replicas"]
         }
         stale = [
             rid for rid, v in replica_versions.items()
-            if v != publisher.version
+            if v is not None and v != publisher.version
         ]
         report.update({
             "replicas": args.replicas,
@@ -374,6 +390,10 @@ def main() -> None:
                         default="local",
                         help="fleet replicas in-process or as spawned "
                              "multiprocessing children")
+    parser.add_argument("--supervise", action="store_true",
+                        help="run a FleetSupervisor: heartbeat probes, "
+                             "failover routing, auto-respawn of dead "
+                             "replicas (requires --replicas > 1)")
     parser.add_argument("--routing", choices=("affinity", "least", "random"),
                         default="affinity",
                         help="fleet routing policy (see serving/fleet/router)")

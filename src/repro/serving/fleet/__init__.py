@@ -1,21 +1,28 @@
 """Multi-replica serving fleet: replicated engines behind a cache-aware
-router, refreshed by compressed delta replication.
+router, refreshed by compressed delta replication, supervised for failure.
 
 Layers (each its own module):
 
 * :mod:`~repro.serving.fleet.bus` — the wire format
   (:class:`~repro.serving.fleet.bus.DeltaMessage`: the delta-checkpoint
-  tree, flattened and losslessly compressed) and the per-replica
+  tree, flattened, losslessly compressed, CRC-stamped) and the per-replica
   :class:`~repro.serving.fleet.bus.VersionGate` (idempotent, monotonic,
-  out-of-order-safe application).
+  out-of-order-safe application; corrupt payloads NAK'd before the gate).
 * :mod:`~repro.serving.fleet.replica` —
   :class:`~repro.serving.fleet.replica.LocalReplica` (in-process) and
   :class:`~repro.serving.fleet.replica.ProcessReplica`
-  (``multiprocessing``-spawned), one engine + queue + gate each.
+  (``multiprocessing``-spawned), one engine + queue + gate each; death
+  surfaces as :class:`~repro.serving.fleet.replica.ReplicaDiedError`,
+  never a stranded future.
 * :mod:`~repro.serving.fleet.router` —
   :class:`~repro.serving.fleet.router.Router` (queue-depth load balancing,
-  hot-user affinity, priority classes, rolling refresh) and the
-  :class:`~repro.serving.fleet.router.ServingFleet` facade.
+  hot-user affinity, priority classes, rolling refresh, health-aware
+  failover) and the :class:`~repro.serving.fleet.router.ServingFleet`
+  facade.
+* :mod:`~repro.serving.fleet.supervisor` —
+  :class:`~repro.serving.fleet.supervisor.FleetSupervisor`: heartbeat
+  probes, the replica state machine, auto-respawn, and
+  convergence-gated readmission.
 
 Import layering: this package may import :mod:`repro.online` (the
 publisher owns the delta format); nothing in :mod:`repro.online` or the
@@ -27,11 +34,26 @@ from repro.serving.fleet.bus import (
     VersionGate,
     apply_message,
     make_message,
+    payload_checksum,
     state_from_message,
     state_message,
+    verify_message,
 )
-from repro.serving.fleet.replica import LocalReplica, ProcessReplica
-from repro.serving.fleet.router import Router, ServingFleet
+from repro.serving.fleet.replica import (
+    LocalReplica,
+    ProcessReplica,
+    ReplicaDiedError,
+)
+from repro.serving.fleet.router import (
+    NoHealthyReplicaError,
+    Router,
+    ServingFleet,
+)
+from repro.serving.fleet.supervisor import (
+    FleetSupervisor,
+    Incident,
+    ReplicaState,
+)
 
 __all__ = [
     "DeltaMessage",
@@ -39,10 +61,17 @@ __all__ = [
     "VersionGate",
     "apply_message",
     "make_message",
+    "payload_checksum",
     "state_from_message",
     "state_message",
+    "verify_message",
     "LocalReplica",
     "ProcessReplica",
+    "ReplicaDiedError",
+    "NoHealthyReplicaError",
     "Router",
     "ServingFleet",
+    "FleetSupervisor",
+    "Incident",
+    "ReplicaState",
 ]

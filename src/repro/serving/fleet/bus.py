@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import zlib
 from typing import Callable, Dict, Optional, Tuple
 
 import jax.numpy as jnp
@@ -78,6 +79,11 @@ class DeltaMessage:
     # to the receiving engine forces a full-layout swap there (rows moved
     # under the external ids); the remap table itself rides in ``tree``.
     remap_epoch: int = 0
+    # CRC-32 over the payload (``payload_checksum``), stamped at publish.
+    # Sinks verify before gating: a mismatch is NAK'd (version unchanged)
+    # so the publisher's lag check forces a ``kind=full`` heal instead of
+    # the replica applying corrupt factors.  ``-1`` = unstamped (legacy).
+    payload_crc: int = -1
 
     @property
     def wire_bytes(self) -> int:
@@ -95,6 +101,33 @@ class DeltaMessage:
             v.raw_nbytes if isinstance(v, CompressedArray) else int(np.asarray(v).nbytes)
             for v in self.tree.values()
         )
+
+
+def payload_checksum(tree: Dict[str, object]) -> int:
+    """CRC-32 over a wire payload: sorted keys, then each value's exact
+    bytes (compressed blob for :class:`CompressedArray`, dtype/shape-tagged
+    raw bytes for plain arrays).  zlib's C CRC-32 — the strongest integrity
+    check available without new dependencies; at delta-payload sizes it is
+    a negligible fraction of the DEFLATE cost already paid per publish."""
+    crc = 0
+    for key in sorted(tree):
+        val = tree[key]
+        crc = zlib.crc32(key.encode(), crc)
+        if isinstance(val, CompressedArray):
+            crc = zlib.crc32(val.data, crc)
+        else:
+            arr = np.ascontiguousarray(np.asarray(val))
+            crc = zlib.crc32(f"{arr.dtype}{arr.shape}".encode(), crc)
+            crc = zlib.crc32(arr.tobytes(), crc)
+    return crc
+
+
+def verify_message(msg: DeltaMessage) -> bool:
+    """True when the payload matches its stamped checksum (or the message
+    predates stamping) — every sink's admission precondition."""
+    if msg.payload_crc < 0:
+        return True
+    return payload_checksum(msg.tree) == msg.payload_crc
 
 
 def _flat_payload(tree: dict, *, compress: bool) -> Dict[str, object]:
@@ -128,6 +161,7 @@ def make_message(
     checkpoint step ``v`` describe identical bytes.
     """
     tree = publisher_lib._delta_tree(snap, full=full)
+    payload = _flat_payload(tree, compress=compress)
     return DeltaMessage(
         version=int(version),
         prev_version=int(prev_version),
@@ -138,10 +172,11 @@ def make_message(
         touched_users=np.asarray(snap.touched_users, np.int64),
         touched_items=np.asarray(snap.touched_items, np.int64),
         touched_implicit_items=np.asarray(snap.touched_implicit_items, np.int64),
-        tree=_flat_payload(tree, compress=compress),
+        tree=payload,
         events_seen=int(snap.events_seen),
         snapshot_id=int(snap.snapshot_id),
         remap_epoch=int(getattr(snap, "remap_epoch", 0)),
+        payload_crc=payload_checksum(payload),
     )
 
 
@@ -160,6 +195,7 @@ def state_message(
     tree = {"params": params, "t_p": np.float32(t_p), "t_q": np.float32(t_q)}
     if user_history is not None:
         tree["user_history"] = np.asarray(user_history)
+    payload = _flat_payload(tree, compress=compress)
     return DeltaMessage(
         version=int(version),
         prev_version=int(version),
@@ -170,7 +206,8 @@ def state_message(
         touched_users=np.empty(0, np.int64),
         touched_items=np.empty(0, np.int64),
         touched_implicit_items=np.empty(0, np.int64),
-        tree=_flat_payload(tree, compress=compress),
+        tree=payload,
+        payload_crc=payload_checksum(payload),
     )
 
 
@@ -284,6 +321,7 @@ class EngineDeltaSink:
         # otherwise every publish would silently revert the controller's
         # degradation.  Runtime state only; checkpoints keep model values.
         self._threshold_override: Optional[Tuple[float, float]] = None
+        self.corrupt_dropped = 0
 
     @property
     def version(self) -> int:
@@ -296,8 +334,27 @@ class EngineDeltaSink:
         return self._gate
 
     def apply_update(self, msg: DeltaMessage) -> int:
-        """Offer one delivery to the gate; returns the acked version."""
+        """Offer one delivery to the gate; returns the acked version.
+
+        Corrupt payloads (CRC mismatch) are dropped *before* the gate —
+        the stale ack this returns is the NAK: the publisher sees the
+        replica lagging and forces a ``kind=full`` heal on the next
+        publish, instead of the engine swapping in garbage factors."""
+        if not verify_message(msg):
+            self.corrupt_dropped += 1
+            return self._gate.version
         return self._gate.offer(msg)
+
+    def state_message(self, *, compress: bool = True) -> DeltaMessage:
+        """Snapshot the engine's *served* state as a ``kind=full`` message —
+        what a healthy peer hands the supervisor to heal a respawned
+        replica.  Carries the engine's live thresholds (including any SLO
+        pin), which is exactly what the healed replica should serve."""
+        return state_message(
+            self.engine.params, self.engine.t_p, self.engine.t_q,
+            user_history=self.engine.user_history,
+            version=self._gate.version, compress=compress,
+        )
 
     def set_thresholds(self, t_p, t_q) -> int:
         """Pin SLO serving thresholds: swap them into the engine now and

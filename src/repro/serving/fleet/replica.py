@@ -32,6 +32,17 @@ from typing import Any, Dict, Optional, Tuple
 import numpy as np
 
 from repro.serving.fleet import bus
+from repro.testing import faults
+
+
+class ReplicaDiedError(RuntimeError):
+    """The replica behind a request/control call is dead.
+
+    Raised fast by ``submit`` once death is known (no writing into a broken
+    pipe, no waiting out a timeout), and set on every future that was still
+    pending when the pipe broke — the router catches exactly this type to
+    fail over to a healthy replica, and the supervisor to trigger respawn.
+    """
 
 
 class LocalReplica:
@@ -62,6 +73,7 @@ class LocalReplica:
             version=base_version,
             replica_id=replica_id,
         )
+        self._dead = False
 
     @property
     def version(self) -> int:
@@ -73,9 +85,41 @@ class LocalReplica:
         """User-table rows of the served snapshot."""
         return self.engine.num_users
 
+    @property
+    def alive(self) -> bool:
+        """Liveness flag — the supervisor's health probe for in-process
+        replicas (a thread can't vanish the way a child process can, so a
+        local replica only dies via :meth:`kill`)."""
+        return not self._dead
+
+    def ping(self, timeout: float = 5.0) -> bool:
+        """Heartbeat probe: True iff the replica would serve a request."""
+        return not self._dead
+
+    def kill(self) -> None:
+        """Simulated crash (chaos harness): every queued request fails with
+        :class:`ReplicaDiedError` immediately, later submits raise fast —
+        the in-process twin of ``ProcessReplica``'s child dying."""
+        if self._dead:
+            return
+        self._dead = True
+        self.queue.abort(
+            ReplicaDiedError(f"replica {self.replica_id} died (injected)")
+        )
+
     def submit(self, user_id: int, topk: int = 10, *, timeout=None,
                priority: int = 0) -> Future:
-        """Enqueue one request on this replica's queue."""
+        """Enqueue one request on this replica's queue.
+
+        Raises :class:`ReplicaDiedError` immediately once the replica is
+        dead — callers (the router) fail over instead of queueing into a
+        corpse."""
+        if faults._PLAN is not None:
+            for act in faults.fire("replica.submit", self.replica_id):
+                if act.op == "kill":
+                    self.kill()
+        if self._dead:
+            raise ReplicaDiedError(f"replica {self.replica_id} is dead")
         return self.engine.submit(user_id, topk, timeout=timeout,
                                   priority=priority)
 
@@ -84,7 +128,14 @@ class LocalReplica:
 
         The hot swap happens under live traffic: requests in flight finish
         on the old snapshot, the queue never pauses."""
+        if self._dead:
+            raise ReplicaDiedError(f"replica {self.replica_id} is dead")
         return self._sink.apply_update(msg)
+
+    def state_message(self) -> bus.DeltaMessage:
+        """Full served state as a ``kind=full`` message — what the
+        supervisor pulls from a healthy peer to heal a respawn."""
+        return self._sink.state_message()
 
     def set_thresholds(self, t_p, t_q) -> int:
         """Pin SLO serving thresholds on this replica (see
@@ -113,6 +164,7 @@ class LocalReplica:
             "updates_applied": gate.applied,
             "updates_duplicate": gate.duplicates,
             "updates_buffered": gate.buffered,
+            "updates_corrupt": self._sink.corrupt_dropped,
         }
 
     def close(self) -> None:
@@ -152,10 +204,11 @@ def _replica_main(conn, replica_id: str, init: dict,
 
     Protocol (parent -> child): ``("submit", rid, user, topk, timeout,
     priority)``, ``("update", msg)``, ``("thresholds", t_p, t_q)``,
-    ``("stats",)``, ``("close",)``.
+    ``("stats",)``, ``("ping", seq)``, ``("state",)``, ``("close",)``.
     Child -> parent: ``("ready", version, num_users)``, ``("result", rid,
     scores, items)``, ``("error", rid, repr)``, ``("ack", version, ack)``,
-    ``("tack", ack)``, ``("stats", dict)``, ``("bye",)``.
+    ``("tack", ack)``, ``("stats", dict)``, ``("pong", seq)``,
+    ``("state_msg", DeltaMessage)``, ``("bye",)``.
     """
     send_lock = threading.Lock()
 
@@ -221,6 +274,15 @@ def _replica_main(conn, replica_id: str, init: dict,
                     send("tack", ack)
             elif op == "stats":
                 send("stats", replica.stats())
+            elif op == "ping":
+                # heartbeat: answered from the pipe loop, so a wedged pipe
+                # loop (or dead process) reads as probe timeout upstream
+                send("pong", *rest)
+            elif op == "state":
+                try:
+                    send("state_msg", replica.state_message())
+                except Exception as exc:
+                    send("error", -1, f"{type(exc).__name__}: {exc}")
             elif op == "close":
                 replica.close()  # drains: every queued future resolves+sends
                 send("bye")
@@ -258,6 +320,13 @@ class ProcessReplica:
             "checkpoint": checkpoint, "online_dir": online_dir,
         }
         self.replica_id = replica_id
+        # everything needed to spawn an equivalent replacement — the
+        # supervisor's respawn spec (it overrides the boot state itself)
+        self.spawn_kwargs = {
+            "checkpoint": checkpoint, "online_dir": online_dir,
+            "engine_kwargs": engine_kwargs, "queue_kwargs": queue_kwargs,
+            "start_timeout": start_timeout,
+        }
         ctx = mp.get_context("spawn")
         self._conn, child_conn = ctx.Pipe()
         self._proc = ctx.Process(
@@ -277,8 +346,14 @@ class ProcessReplica:
         self._stats_event = threading.Event()
         self._tack: Optional[int] = None
         self._tack_event = threading.Event()
+        self._pongs: set = set()
+        self._pong_event = threading.Condition()
+        self._ping_seq = 0
+        self._state_msg: Optional[bus.DeltaMessage] = None
+        self._state_event = threading.Event()
         self._ready = threading.Event()
         self._bye = threading.Event()
+        self._dead = threading.Event()
         self.version = 0
         self.num_users = 0
         self._spawn_error: Optional[str] = None
@@ -329,14 +404,42 @@ class ProcessReplica:
             elif op == "stats":
                 (self._stats,) = rest
                 self._stats_event.set()
+            elif op == "pong":
+                (seq,) = rest
+                with self._pong_event:
+                    self._pongs.add(seq)
+                    self._pong_event.notify_all()
+            elif op == "state_msg":
+                (self._state_msg,) = rest
+                self._state_event.set()
             elif op == "bye":
                 self._bye.set()
-        # pipe gone: fail anything still outstanding
+        # Pipe gone: the child died (or closed).  Mark death FIRST so new
+        # submits raise fast, then fail everything outstanding — futures,
+        # ack/pong/stats waiters, even a constructor still waiting on
+        # "ready" (a child that crashes during bootstrap must not cost the
+        # caller the full start timeout).
+        self._dead.set()
+        if not self._ready.is_set():
+            if self._spawn_error is None:
+                self._spawn_error = "process exited during bootstrap"
+            self._ready.set()
         with self._futs_lock:
             leftovers, self._futs = list(self._futs.values()), {}
+        exc = ReplicaDiedError(
+            f"replica {self.replica_id} died (pipe closed, "
+            f"exitcode={self._proc.exitcode})"
+        )
         for fut in leftovers:
             if not fut.done():
-                fut.set_exception(RuntimeError("replica process exited"))
+                fut.set_exception(exc)
+        with self._ack_event:
+            self._ack_event.notify_all()
+        with self._pong_event:
+            self._pong_event.notify_all()
+        self._tack_event.set()
+        self._stats_event.set()
+        self._state_event.set()
         self._bye.set()
 
     def _pop_fut(self, rid: int) -> Optional[Future]:
@@ -347,10 +450,63 @@ class ProcessReplica:
         with self._lock:
             self._conn.send(payload)
 
+    @property
+    def alive(self) -> bool:
+        """False once the child died or its pipe broke — the supervisor's
+        cheap (no round-trip) liveness signal."""
+        return not self._dead.is_set() and self._proc.is_alive()
+
+    @property
+    def exitcode(self) -> Optional[int]:
+        """The child's exit code (None while running) — nonzero after a
+        crash/kill, part of the supervisor's death evidence."""
+        return self._proc.exitcode
+
+    def kill(self) -> None:
+        """Hard-kill the child (SIGKILL) — the chaos harness's process
+        death.  The reader thread observes the pipe EOF and fails every
+        outstanding future with :class:`ReplicaDiedError`."""
+        self._proc.kill()
+
+    def ping(self, timeout: float = 5.0) -> bool:
+        """Round-trip heartbeat through the child's pipe loop.  False on
+        timeout, dead child, or broken pipe — never raises: this is the
+        probe the supervisor calls on every tick."""
+        if self._dead.is_set():
+            return False
+        with self._pong_event:
+            seq = self._ping_seq
+            self._ping_seq += 1
+        try:
+            self._send("ping", seq)
+        except (BrokenPipeError, OSError, ReplicaDiedError):
+            return False
+        with self._pong_event:
+            self._pong_event.wait_for(
+                lambda: seq in self._pongs or self._dead.is_set(), timeout
+            )
+            got = seq in self._pongs
+            self._pongs.discard(seq)
+        return got
+
+    def _raise_if_dead(self) -> None:
+        if self._dead.is_set():
+            raise ReplicaDiedError(
+                f"replica {self.replica_id} is dead "
+                f"(exitcode={self._proc.exitcode})"
+            )
+
     def submit(self, user_id: int, topk: int = 10, *, timeout=None,
                priority: int = 0) -> Future:
         """Forward one request to the child; the reader thread resolves the
-        returned Future from the pipe reply."""
+        returned Future from the pipe reply.  Raises
+        :class:`ReplicaDiedError` fast once the child is dead (never writes
+        into a broken pipe, never strands a future)."""
+        if faults._PLAN is not None:
+            for act in faults.fire("replica.submit", self.replica_id):
+                if act.op == "kill":
+                    self.kill()
+        self._raise_if_dead()
         fut: Future = Future()
         with self._futs_lock:
             rid = self._next_rid
@@ -360,30 +516,58 @@ class ProcessReplica:
             self._send("submit", rid, int(user_id), int(topk), timeout,
                        int(priority))
         except (BrokenPipeError, OSError):
+            # lost the race with death: behave exactly like a fast-raise
             self._pop_fut(rid)
-            fut.set_exception(RuntimeError("replica process exited"))
+            raise ReplicaDiedError(
+                f"replica {self.replica_id} died (pipe write failed)"
+            ) from None
         return fut
 
     def apply_update(self, msg: bus.DeltaMessage, *, timeout: float = 180.0) -> int:
         """Ship a bus message and block for the child's ack (its version
         after gating) — the rolling fan-out's synchronization point."""
-        self._send("update", msg)
+        self._raise_if_dead()
+        try:
+            self._send("update", msg)
+        except (BrokenPipeError, OSError):
+            raise ReplicaDiedError(
+                f"replica {self.replica_id} died (pipe write failed)"
+            ) from None
         with self._ack_event:
             if not self._ack_event.wait_for(
-                lambda: msg.version in self._acks, timeout
+                lambda: msg.version in self._acks or self._dead.is_set(),
+                timeout,
             ):
                 raise TimeoutError(
                     f"replica {self.replica_id}: no ack for v{msg.version}"
                 )
+            if msg.version not in self._acks:
+                self._raise_if_dead()
             ack = self._acks.pop(msg.version)
         self.version = max(self.version, ack)
         return ack
+
+    def state_message(self, *, timeout: float = 180.0) -> bus.DeltaMessage:
+        """Fetch the child's full served state as a ``kind=full`` message —
+        the peer-heal payload the supervisor replicates into a respawn."""
+        self._raise_if_dead()
+        self._state_event.clear()
+        self._state_msg = None
+        self._send("state")
+        if not self._state_event.wait(timeout):
+            raise TimeoutError(f"replica {self.replica_id}: state timed out")
+        if self._state_msg is None:
+            self._raise_if_dead()
+            raise RuntimeError(f"replica {self.replica_id}: state fetch failed")
+        return self._state_msg
 
     def set_thresholds(self, t_p, t_q, *, timeout: float = 120.0) -> int:
         """Pin SLO serving thresholds in the child and block for its ack —
         same synchronization discipline as :meth:`apply_update` (the
         rolling rollout must not move on before the swap lands)."""
+        self._raise_if_dead()
         self._tack_event.clear()
+        self._tack = None
         tp = None if t_p is None else float(t_p)
         tq = None if t_q is None else float(t_q)
         self._send("thresholds", tp, tq)
@@ -391,6 +575,9 @@ class ProcessReplica:
             raise TimeoutError(
                 f"replica {self.replica_id}: threshold swap not acked"
             )
+        if self._tack is None:
+            self._raise_if_dead()
+            raise RuntimeError(f"replica {self.replica_id}: no threshold ack")
         return int(self._tack)
 
     def depth(self) -> int:
@@ -401,10 +588,15 @@ class ProcessReplica:
 
     def stats(self, *, timeout: float = 60.0) -> Dict[str, Any]:
         """Fetch the child's counter snapshot over the pipe."""
+        self._raise_if_dead()
         self._stats_event.clear()
+        self._stats = None
         self._send("stats")
         if not self._stats_event.wait(timeout):
             raise TimeoutError(f"replica {self.replica_id}: stats timed out")
+        if self._stats is None:
+            self._raise_if_dead()
+            raise RuntimeError(f"replica {self.replica_id}: no stats reply")
         return dict(self._stats)
 
     def close(self, *, timeout: float = 120.0) -> None:

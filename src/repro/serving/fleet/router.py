@@ -27,14 +27,25 @@ requests mid-refresh.
 from __future__ import annotations
 
 import threading
+import time
 from concurrent.futures import Future
 from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro.testing import faults
+
 from repro.serving.batching import LRUCache
 from repro.serving.fleet import bus
-from repro.serving.fleet.replica import LocalReplica, ProcessReplica
+from repro.serving.fleet.replica import (
+    LocalReplica,
+    ProcessReplica,
+    ReplicaDiedError,
+)
+
+
+class NoHealthyReplicaError(RuntimeError):
+    """Every replica is marked unhealthy — nothing can take the request."""
 
 
 class Router:
@@ -59,32 +70,73 @@ class Router:
         self._affinity = LRUCache(affinity_capacity)
         self._rng = np.random.default_rng(seed)
         self._lock = threading.Lock()
+        self._healthy = [True] * len(self.replicas)
         self.routed = 0
         self.affinity_hits = 0   # repeat user sent to their pinned replica
         self.affinity_cold = 0   # first-seen user (new pin)
         self.affinity_spills = 0  # pin overloaded: spilled + re-pinned
+        self.affinity_repins = 0  # pin pointed at a dead replica: re-pinned
+        self.failovers = 0       # submits retried onto another replica
+
+    # -- health --------------------------------------------------------------
+    def mark_unhealthy(self, idx: int) -> None:
+        """Take replica ``idx`` out of routing (dead or suspected dead).
+        Its affinity pins re-pin lazily on the pinned users' next requests —
+        no stop-the-world walk over the LRU."""
+        with self._lock:
+            self._healthy[idx] = False
+
+    def mark_healthy(self, idx: int) -> None:
+        """Readmit replica ``idx`` to routing (after supervised respawn +
+        convergence — see ``fleet/supervisor.py``)."""
+        with self._lock:
+            self._healthy[idx] = True
+
+    def is_healthy(self, idx: int) -> bool:
+        """Whether replica ``idx`` currently takes traffic."""
+        with self._lock:
+            return self._healthy[idx]
+
+    def replace_replica(self, idx: int, replica) -> None:
+        """Swap a respawned replica into slot ``idx`` and readmit it.
+        Affinity pins keyed by slot index become valid again unchanged —
+        the replacement starts cache-cold but converged."""
+        with self._lock:
+            self.replicas[idx] = replica
+            self._healthy[idx] = True
+
+    def _healthy_indices(self) -> List[int]:
+        return [i for i, ok in enumerate(self._healthy) if ok]
 
     def pick(self, user_id: int, priority: int = 0) -> int:
-        """Choose a replica index for one request (does not submit)."""
+        """Choose a replica index for one request (does not submit).
+        Only healthy replicas are considered; a user pinned to a dead
+        replica is re-pinned to the least-loaded healthy one."""
         with self._lock:
             self.routed += 1
+            live = self._healthy_indices()
+            if not live:
+                raise NoHealthyReplicaError("no healthy replica to route to")
             if self.policy == "random":
                 # random ignores load entirely — polling depth() on every
                 # replica under the lock (the old behaviour) was pure
                 # per-request overhead and needless lock contention
-                return int(self._rng.integers(len(self.replicas)))
-            depths = [r.depth() for r in self.replicas]
-            least = int(np.argmin(depths))
+                return live[int(self._rng.integers(len(live)))]
+            depths = {i: self.replicas[i].depth() for i in live}
+            least = min(live, key=depths.__getitem__)
             if self.policy == "least" or priority > 0:
                 # background class: depth only, never pinned — bulk traffic
                 # must not evict interactive users' affinity entries
                 return least
             pinned = self._affinity.get(user_id)
             if pinned is not None:
-                if depths[pinned] <= depths[least] + self.overload_slack:
+                if pinned not in depths:
+                    self.affinity_repins += 1  # pinned replica is dead
+                elif depths[pinned] <= depths[least] + self.overload_slack:
                     self.affinity_hits += 1
                     return pinned
-                self.affinity_spills += 1
+                else:
+                    self.affinity_spills += 1
             else:
                 self.affinity_cold += 1
             self._affinity.put(user_id, least)
@@ -92,27 +144,105 @@ class Router:
 
     def submit(self, user_id: int, topk: int = 10, *, timeout=None,
                priority: int = 0) -> Future:
-        """Route one request and enqueue it on the chosen replica."""
-        idx = self.pick(int(user_id), priority)
-        return self.replicas[idx].submit(
-            user_id, topk, timeout=timeout, priority=priority
-        )
+        """Route one request and enqueue it on the chosen replica.
+
+        Failover: if the chosen replica is dead at submit time — or dies
+        mid-flight, failing the pending future with ``ReplicaDiedError`` —
+        the request is retried on another healthy replica (the dead one is
+        marked unhealthy on the spot).  The caller's future only fails
+        when every replica has been exhausted, so a single replica death
+        never strands or errors a request."""
+        outer: Future = Future()
+        self._submit_attempt(outer, int(user_id), topk, timeout, priority,
+                             retries_left=len(self.replicas))
+        return outer
+
+    def _submit_attempt(self, outer: Future, user_id: int, topk, timeout,
+                        priority: int, retries_left: int) -> None:
+        try:
+            idx = self.pick(user_id, priority)
+        except NoHealthyReplicaError as exc:
+            _resolve(outer, error=exc)
+            return
+        try:
+            inner = self.replicas[idx].submit(
+                user_id, topk, timeout=timeout, priority=priority
+            )
+        except ReplicaDiedError as exc:
+            self.mark_unhealthy(idx)
+            if retries_left > 0:
+                self.failovers += 1
+                self._submit_attempt(outer, user_id, topk, timeout, priority,
+                                     retries_left - 1)
+            else:
+                _resolve(outer, error=exc)
+            return
+
+        def relay(done: Future, idx=idx) -> None:
+            exc = done.exception()
+            if exc is None:
+                _resolve(outer, result=done.result())
+            elif isinstance(exc, ReplicaDiedError) and retries_left > 0:
+                # died mid-flight: the read-loop failed the inner future;
+                # same request, different replica, caller none the wiser
+                self.mark_unhealthy(idx)
+                self.failovers += 1
+                self._submit_attempt(outer, user_id, topk, timeout, priority,
+                                     retries_left - 1)
+            else:
+                _resolve(outer, error=exc)
+
+        inner.add_done_callback(relay)
 
     @property
     def version(self) -> int:
-        """Lowest replica version — what the whole fleet is guaranteed to
-        serve at least (the publisher's lag view)."""
-        return min(r.version for r in self.replicas)
+        """Lowest healthy-replica version — what the traffic-taking fleet
+        is guaranteed to serve at least (the publisher's lag view).  Dead
+        replicas don't count: their stale version is the supervisor's
+        problem, not the publisher's."""
+        with self._lock:
+            live = [self.replicas[i] for i in self._healthy_indices()]
+        reps = live or self.replicas
+        return min(r.version for r in reps)
 
     def apply_update(self, msg: bus.DeltaMessage) -> Dict[str, int]:
         """Rolling refresh: ship ``msg`` to one replica at a time, in
         order, waiting for each ack before the next — at most one replica
         is mid-swap at any instant, the rest keep serving.  Returns
         ``{replica_id: acked_version}`` (the dict-ack form the publisher's
-        subscriber bookkeeping flattens)."""
+        subscriber bookkeeping flattens).
+
+        Unhealthy replicas are skipped (no ack — the publisher sees them
+        lag and will force a full heal when they return); a replica dying
+        mid-rollout is marked unhealthy and skipped the same way instead
+        of failing the whole publish."""
         acks: Dict[str, int] = {}
-        for rep in self.replicas:
-            acks[rep.replica_id] = rep.apply_update(msg)
+        for idx, rep in enumerate(self.replicas):
+            if not self.is_healthy(idx):
+                continue
+            delivery, extra = msg, 0
+            if faults._PLAN is not None:
+                # the chaos seam models the wire: this one delivery can be
+                # dropped, duplicated, corrupted, or delayed — the gate +
+                # CRC machinery downstream must absorb all of it
+                drop = False
+                for act in faults.fire("bus.deliver", rep.replica_id):
+                    if act.op == "drop":
+                        drop = True
+                    elif act.op == "dup":
+                        extra += 1
+                    elif act.op == "corrupt":
+                        delivery = faults.corrupt_message(delivery)
+                    elif act.op == "delay":
+                        time.sleep(act.arg)
+                if drop:
+                    continue
+            try:
+                acks[rep.replica_id] = rep.apply_update(delivery)
+                for _ in range(extra):
+                    acks[rep.replica_id] = rep.apply_update(delivery)
+            except (ReplicaDiedError, TimeoutError, BrokenPipeError, OSError):
+                self.mark_unhealthy(idx)
         return acks
 
     def apply_thresholds(self, t_p, t_q) -> Dict[str, int]:
@@ -121,29 +251,65 @@ class Router:
         :meth:`apply_update` (the fleet never dips below N-1 live
         replicas mid-swap); each replica pins the thresholds in its delta
         sink so later replicated snapshots keep them.  Returns
-        ``{replica_id: replication_version}`` acks."""
+        ``{replica_id: replication_version}`` acks.  Dead replicas are
+        skipped/marked like :meth:`apply_update`."""
         acks: Dict[str, int] = {}
-        for rep in self.replicas:
-            acks[rep.replica_id] = rep.set_thresholds(t_p, t_q)
+        for idx, rep in enumerate(self.replicas):
+            if not self.is_healthy(idx):
+                continue
+            try:
+                acks[rep.replica_id] = rep.set_thresholds(t_p, t_q)
+            except (ReplicaDiedError, TimeoutError, BrokenPipeError, OSError):
+                self.mark_unhealthy(idx)
         return acks
 
     def stats(self) -> Dict[str, Any]:
         """Routing counters + per-replica stats (pipe round-trips for
         process replicas — don't call on the hot path)."""
+        per_replica = []
+        for idx, rep in enumerate(self.replicas):
+            if not self.is_healthy(idx):
+                per_replica.append(
+                    {"replica_id": rep.replica_id, "healthy": False}
+                )
+                continue
+            try:
+                per_replica.append({**rep.stats(), "healthy": True})
+            except (ReplicaDiedError, TimeoutError, BrokenPipeError, OSError):
+                per_replica.append(
+                    {"replica_id": rep.replica_id, "healthy": False}
+                )
         return {
             "policy": self.policy,
             "routed": self.routed,
             "affinity_hits": self.affinity_hits,
             "affinity_cold": self.affinity_cold,
             "affinity_spills": self.affinity_spills,
-            "replicas": [r.stats() for r in self.replicas],
+            "affinity_repins": self.affinity_repins,
+            "failovers": self.failovers,
+            "replicas": per_replica,
         }
 
     def close(self) -> None:
         """Drain and close every replica (each completes its in-flight
-        requests — the engine/queue graceful-drain contract)."""
+        requests — the engine/queue graceful-drain contract).  Dead
+        replicas still get a close (reaps the child process)."""
         for rep in self.replicas:
-            rep.close()
+            try:
+                rep.close()
+            except (ReplicaDiedError, TimeoutError, BrokenPipeError, OSError):
+                pass
+
+
+def _resolve(fut: Future, *, result=None, error: Optional[Exception] = None) -> None:
+    """Resolve a router-owned future, tolerating caller-side cancellation."""
+    try:
+        if error is not None:
+            fut.set_exception(error)
+        else:
+            fut.set_result(result)
+    except Exception:
+        pass  # cancelled or already resolved — the caller moved on
 
 
 class ServingFleet:
@@ -221,6 +387,17 @@ class ServingFleet:
     def apply_update(self, msg: bus.DeltaMessage) -> Dict[str, int]:
         """Rolling refresh across the fleet (see :meth:`Router.apply_update`)."""
         return self.router.apply_update(msg)
+
+    def supervise(self, **kwargs):
+        """Attach and start a :class:`~repro.serving.fleet.supervisor.
+        FleetSupervisor` over this fleet's router (probe → failover →
+        respawn → readmit).  Returns the started supervisor; stop it
+        before :meth:`close`."""
+        from repro.serving.fleet.supervisor import FleetSupervisor
+
+        sup = FleetSupervisor(self.router, **kwargs)
+        sup.start()
+        return sup
 
     def stats(self) -> Dict[str, Any]:
         """Router + per-replica counters (see :meth:`Router.stats`)."""

@@ -187,6 +187,23 @@ class RequestQueue:
                     )
                 self._heap.clear()
 
+    def abort(self, exc: Exception) -> None:
+        """Crash-stop (the chaos harness's simulated replica death): fail
+        every queued request with ``exc`` — not the graceful-drain
+        ``RequestTimeout`` — reject new submits, and stop the scheduler
+        without scoring the backlog.  A batch already mid-score completes
+        (its callers see results), matching a real process whose in-flight
+        work raced the crash."""
+        with self._cond:
+            self._closed = True
+            for req in self._heap:
+                _fail(req.future, exc)
+            self._heap.clear()
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
     def __enter__(self) -> "RequestQueue":
         return self
 

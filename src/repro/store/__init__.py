@@ -7,6 +7,7 @@ table lives on disk, epochs stream through a fixed-depth prefetch queue);
 factor tables get a watermark and cold rows spill back to disk).
 """
 from repro.store.ratings_store import (  # noqa: F401
+    CorruptShardError,
     FeistelPermutation,
     RatingsStore,
     ShardedRatingsLoader,

@@ -32,6 +32,7 @@ import json
 import os
 import queue
 import threading
+import zlib
 from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
@@ -42,6 +43,16 @@ from repro.data.ratings import RatingsDataset
 _INDEX_NAME = "index.json"
 _STORE_VERSION = 1
 _ROW_BYTES = 12  # int32 user + int32 item + float32 rating
+
+
+class CorruptShardError(RuntimeError):
+    """A shard file's bytes fail the CRC-32 recorded in ``index.json``.
+
+    Raised instead of silently feeding flipped bits into training (a
+    corrupt float32 block reads as perfectly valid — often NaN/huge —
+    ratings).  The offending shard is quarantined (renamed with a
+    ``.corrupt`` suffix, best-effort) so a supervised retrain can detect
+    and rebuild it."""
 
 
 # ---------------------------------------------------------------------------
@@ -142,14 +153,19 @@ def build_store(
         if rows <= 0:
             break
         name = f"shard_{len(shards):05d}.bin"
+        crc = 0
         with open(os.path.join(directory, name), "wb") as f:
-            f.write(np.ascontiguousarray(
-                ds.user[start:start + rows], np.int32).tobytes())
-            f.write(np.ascontiguousarray(
-                ds.item[start:start + rows], np.int32).tobytes())
-            f.write(np.ascontiguousarray(
-                ds.rating[start:start + rows], np.float32).tobytes())
-        shards.append({"file": name, "rows": int(rows)})
+            for block in (
+                np.ascontiguousarray(
+                    ds.user[start:start + rows], np.int32).tobytes(),
+                np.ascontiguousarray(
+                    ds.item[start:start + rows], np.int32).tobytes(),
+                np.ascontiguousarray(
+                    ds.rating[start:start + rows], np.float32).tobytes(),
+            ):
+                f.write(block)
+                crc = zlib.crc32(block, crc)
+        shards.append({"file": name, "rows": int(rows), "crc32": crc})
     index = {
         "version": _STORE_VERSION,
         "num_examples": int(n),
@@ -170,10 +186,20 @@ def build_store(
 
 class RatingsStore:
     """Read side of the columnar store: dataset-shaped metadata plus an
-    mmap-backed :meth:`gather` that touches only the pages it needs."""
+    mmap-backed :meth:`gather` that touches only the pages it needs.
 
-    def __init__(self, directory: str):
+    Integrity: shards written since the checksum landed carry a ``crc32``
+    in ``index.json``; each shard is verified once, on first open (one
+    sequential page-cache-warming read — the pages are about to be
+    gathered anyway).  A mismatch quarantines the shard and raises
+    :class:`CorruptShardError` instead of streaming flipped bits into the
+    factors.  ``verify_checksums=False`` opts out (benchmarking only).
+    """
+
+    def __init__(self, directory: str, *, verify_checksums: bool = True):
         self.directory = directory
+        self.verify_checksums = bool(verify_checksums)
+        self._verified: set = set()
         with open(os.path.join(directory, _INDEX_NAME)) as f:
             index = json.load(f)
         if index.get("version") != _STORE_VERSION:
@@ -188,8 +214,11 @@ class RatingsStore:
         self.rating_max = float(index["rating_max"])
         self.global_mean = float(index["global_mean"])
         self.shard_rows = int(index["shard_rows"])
-        self._shards = [(s["file"], int(s["rows"])) for s in index["shards"]]
-        rows = np.array([r for _, r in self._shards], np.int64)
+        self._shards = [
+            (s["file"], int(s["rows"]), s.get("crc32"))
+            for s in index["shards"]
+        ]
+        rows = np.array([r for _, r, _ in self._shards], np.int64)
         self._offsets = np.concatenate([[0], np.cumsum(rows)])
         if self._offsets[-1] != self.num_examples:
             raise ValueError(
@@ -202,12 +231,38 @@ class RatingsStore:
     def __len__(self) -> int:
         return self.num_examples
 
+    def _verify_shard(self, shard: int, path: str, expected: int) -> None:
+        crc = 0
+        with open(path, "rb") as f:
+            while True:
+                block = f.read(1 << 20)
+                if not block:
+                    break
+                crc = zlib.crc32(block, crc)
+        if crc != int(expected):
+            quarantine = path + ".corrupt"
+            try:
+                os.rename(path, quarantine)
+            except OSError:
+                quarantine = path  # couldn't move it; still refuse to serve
+            raise CorruptShardError(
+                f"shard {shard} ({os.path.basename(path)}) fails its "
+                f"index.json crc32 — quarantined at {quarantine}"
+            )
+
     def _columns(self, shard: int) -> Tuple[np.memmap, np.memmap, np.memmap]:
         with self._maps_lock:
             cols = self._maps.get(shard)
             if cols is None:
-                name, rows = self._shards[shard]
+                name, rows, crc = self._shards[shard]
                 path = os.path.join(self.directory, name)
+                if (
+                    self.verify_checksums
+                    and crc is not None
+                    and shard not in self._verified
+                ):
+                    self._verify_shard(shard, path, crc)
+                    self._verified.add(shard)
                 cols = (
                     np.memmap(path, np.int32, "r", offset=0, shape=(rows,)),
                     np.memmap(path, np.int32, "r", offset=4 * rows,

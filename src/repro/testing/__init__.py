@@ -1,0 +1,17 @@
+"""Test-only instrumentation: the deterministic fault-injection harness.
+
+Nothing under ``repro.testing`` runs on the hot path in production: every
+seam guards on a single module-attribute ``None`` check
+(``faults._PLAN is None``) and does zero further work when no plan is
+installed.
+"""
+from repro.testing.faults import (  # noqa: F401
+    FaultAction,
+    FaultError,
+    FaultPlan,
+    corrupt_message,
+    fire,
+    install,
+    installed,
+    uninstall,
+)

@@ -1,0 +1,686 @@
+"""Fault tolerance: chaos harness, failover routing, supervision, integrity.
+
+Covers the ISSUE-9 acceptance surface:
+
+* the deterministic fault harness — exact per-(site, target) event-count
+  firing, fire-once semantics, seed-derived schedules, zero-op when
+  disarmed;
+* payload CRC integrity — every bus message carries a checksum, a
+  corrupted delivery is NAKed (stale ack) and the forced ``kind=full``
+  heal converges the sink bitwise;
+* replica death — ``LocalReplica.kill`` fails every queued future with
+  ``ReplicaDiedError`` and later submits raise fast;
+* failover routing — a replica dying at submit time or mid-flight never
+  strands or errors a caller future while any replica survives; pins on
+  dead replicas re-pin; all-dead surfaces ``NoHealthyReplicaError``;
+* the supervisor state machine — hard evidence (``alive`` false) declares
+  DEAD immediately, heartbeat misses walk HEALTHY → SUSPECT → DEAD,
+  respawn rebuilds from a healthy peer and readmits only at the fleet
+  version, the respawn budget brakes crash loops;
+* a hypothesis property: a fleet fed an adversarial seeded wire schedule
+  (drop/duplicate/reorder/corrupt/kill) converges bitwise to a fault-free
+  reference once healed;
+* trainer fault wiring — ``max_step_retries`` recovers an injected slab
+  failure bitwise, ``StragglerDetector`` flags timing outliers.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import mf
+from repro.online import EventBatch, OnlineUpdater
+from repro.serving import ServingEngine
+from repro.serving.fleet import (
+    EngineDeltaSink,
+    FleetSupervisor,
+    LocalReplica,
+    NoHealthyReplicaError,
+    ReplicaDiedError,
+    ReplicaState,
+    Router,
+    ServingFleet,
+    make_message,
+    payload_checksum,
+    state_message,
+    verify_message,
+)
+from repro.testing import faults
+from repro.testing.faults import FaultAction, FaultError, FaultPlan
+
+from tests.hypothesis_compat import given, settings, st
+
+
+def _params(m=40, n=300, k=8, variant="bias", seed=0):
+    return mf.init_params(
+        jax.random.PRNGKey(seed), m, n, k, variant=variant,
+        **({"global_mean": 3.5} if variant != "funk" else {}),
+    )
+
+
+def _batch(rng, m, n, size=24):
+    return EventBatch(
+        user=rng.integers(0, m, size).astype(np.int32),
+        item=rng.integers(0, n, size).astype(np.int32),
+        rating=rng.uniform(1, 5, size).astype(np.float32),
+    )
+
+
+def _messages(n_publishes=3, m=40, n=300, seed=0, full_at=()):
+    rng = np.random.default_rng(seed)
+    params = _params(m, n)
+    upd = OnlineUpdater(params, None, 0.0, 0.0, batch_size=32, seed=seed)
+    msgs = []
+    for v in range(1, n_publishes + 1):
+        upd.apply(_batch(rng, m, n))
+        msgs.append(make_message(
+            upd.snapshot(), v, v - 1, full=(v in full_at), compress=True,
+        ))
+    return msgs, upd
+
+
+def _assert_engines_bitwise(engine, ref_engine):
+    a = jax.tree_util.tree_leaves(engine.params)
+    b = jax.tree_util.tree_leaves(ref_engine.params)
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# fault harness
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_fires_at_exact_count_once():
+    plan = FaultPlan([FaultAction(site="s", op="kill", at=2, target="x")])
+    assert plan.fire("s", "x") == []
+    assert plan.fire("s", "y") == []          # other targets don't advance x
+    assert plan.fire("s", "x") == []
+    hits = plan.fire("s", "x")                # x's event #2
+    assert [h.op for h in hits] == ["kill"]
+    assert plan.fire("s", "x") == []          # fire-once
+    assert plan.pending == 0
+    assert plan.fired == [("s", "x", "kill", 2)]
+
+
+def test_fault_plan_empty_target_matches_all():
+    plan = FaultPlan([FaultAction(site="s", op="error", at=0)])
+    assert [h.op for h in plan.fire("s", "anything")] == ["error"]
+
+
+def test_fault_plan_from_seed_deterministic():
+    sites = [("bus.deliver", ["r0", "r1"], ["drop", "dup", "corrupt"]),
+             ("replica.submit", ["r0"], ["kill"])]
+    a = FaultPlan.from_seed(7, sites=sites, n_actions=6, horizon=16)
+    b = FaultPlan.from_seed(7, sites=sites, n_actions=6, horizon=16)
+    assert a._actions == b._actions
+    c = FaultPlan.from_seed(8, sites=sites, n_actions=6, horizon=16)
+    assert a._actions != c._actions
+    for act in a._actions:
+        assert 0 <= act.at < 16
+
+
+def test_harness_disarmed_is_noop():
+    assert faults._PLAN is None
+    assert faults.fire("s", "x") == ()
+    plan = FaultPlan([FaultAction(site="s", op="kill", at=0)])
+    with faults.installed(plan):
+        assert faults._PLAN is plan
+        assert [h.op for h in faults.fire("s")] == ["kill"]
+    assert faults._PLAN is None               # always disarmed on exit
+
+
+# ---------------------------------------------------------------------------
+# payload CRC + corrupt-delta NAK
+# ---------------------------------------------------------------------------
+
+
+def test_messages_carry_valid_checksums():
+    for compress in (True, False):
+        msgs, upd = _messages(2)
+        full = state_message(upd.params, upd.t_p, upd.t_q, version=3,
+                             compress=compress)
+        for msg in msgs + [full]:
+            assert msg.payload_crc >= 0
+            assert verify_message(msg)
+
+
+def test_corrupt_message_fails_verification():
+    msgs, _ = _messages(1)
+    bad = faults.corrupt_message(msgs[0])
+    assert verify_message(msgs[0])            # original untouched
+    assert not verify_message(bad)
+    assert bad.payload_crc == msgs[0].payload_crc
+
+
+def test_legacy_message_without_crc_passes():
+    import dataclasses as dc
+
+    msgs, _ = _messages(1)
+    legacy = dc.replace(msgs[0], payload_crc=-1)
+    assert verify_message(legacy)
+
+
+def test_payload_checksum_covers_every_leaf():
+    msgs, _ = _messages(1, full_at=(1,))
+    tree = dict(msgs[0].tree)
+    base = payload_checksum(tree)
+    key = sorted(tree)[0]
+    tree.pop(key)
+    assert payload_checksum(tree) != base
+
+
+def test_sink_naks_corrupt_delta_then_heals_bitwise():
+    msgs, upd = _messages(3)
+    engine = ServingEngine(_params(), 0.0, 0.0)
+    sink = EngineDeltaSink(engine, replica_id="r0")
+    assert sink.apply_update(msgs[0]) == 1
+    # corrupted v2: NAK — the ack stays at 1, nothing was folded
+    assert sink.apply_update(faults.corrupt_message(msgs[1])) == 1
+    assert sink.corrupt_dropped == 1
+    # v3 arrives with a gap (v2 lost): still stale
+    assert sink.apply_update(msgs[2]) < 3
+    # the publisher heals laggards with kind=full — always applies
+    heal = state_message(upd.params, upd.t_p, upd.t_q, version=3)
+    assert sink.apply_update(heal) == 3
+    _assert_engines_bitwise(engine, ServingEngine(upd.params, 0.0, 0.0))
+    engine.stop()
+
+
+# ---------------------------------------------------------------------------
+# replica death
+# ---------------------------------------------------------------------------
+
+
+def test_local_replica_kill_fails_pending_and_raises_fast():
+    rep = LocalReplica("r0", _params(), 0.0, 0.0,
+                       queue_kwargs={"linger_ms": 200.0, "max_batch": 64})
+    futs = [rep.submit(u, 5, timeout=30.0) for u in range(4)]
+    rep.kill()
+    for fut in futs:
+        with pytest.raises(ReplicaDiedError):
+            fut.result(timeout=10.0)
+    assert not rep.alive and not rep.ping()
+    with pytest.raises(ReplicaDiedError):      # submit-after-death: fast
+        rep.submit(1, 5)
+    with pytest.raises(ReplicaDiedError):
+        rep.apply_update(_messages(1)[0][0])
+
+
+def test_kill_seam_fires_inside_submit():
+    rep = LocalReplica("r0", _params(), 0.0, 0.0,
+                       queue_kwargs={"linger_ms": 0.5})
+    plan = FaultPlan([FaultAction(site="replica.submit", op="kill", at=1,
+                                  target="r0")])
+    with faults.installed(plan):
+        rep.submit(0, 5, timeout=10.0).result(10.0)
+        with pytest.raises(ReplicaDiedError):
+            rep.submit(1, 5)                   # the killing submit raises
+    assert not rep.alive and plan.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# failover routing
+# ---------------------------------------------------------------------------
+
+
+def test_router_failover_submit_time_no_lost_requests():
+    params = _params()
+    reps = [LocalReplica(f"r{i}", params, 0.0, 0.0,
+                         queue_kwargs={"linger_ms": 0.5}) for i in range(2)]
+    router = Router(reps)
+    plan = FaultPlan([FaultAction(site="replica.submit", op="kill", at=3,
+                                  target="r0")])
+    with faults.installed(plan):
+        futs = [router.submit(u % 40, 5, timeout=30.0) for u in range(64)]
+        for fut in futs:
+            scores, items = fut.result(timeout=30.0)
+            assert len(np.asarray(items)) == 5
+    assert plan.pending == 0
+    assert router.failovers >= 1
+    assert not router.is_healthy(0) and router.is_healthy(1)
+    for rep in reps:
+        rep.close()
+
+
+def test_router_failover_mid_flight_future():
+    """A replica dying AFTER accepting the request must not strand the
+    caller's future: the done-callback relay resubmits elsewhere."""
+
+    class _Pending:
+        replica_id = "p"
+        version = 0
+
+        def __init__(self):
+            self.inner = Future()
+
+        def submit(self, *a, **k):
+            return self.inner
+
+        def depth(self):
+            return 0
+
+    class _Healthy:
+        replica_id = "h"
+        version = 0
+
+        def submit(self, user_id, topk=10, **k):
+            fut = Future()
+            fut.set_result((np.zeros(topk), np.arange(topk)))
+            return fut
+
+        def depth(self):
+            return 1  # lose the least-depth tiebreak to _Pending
+
+    pending = _Pending()
+    router = Router([pending, _Healthy()], policy="least")
+    outer = router.submit(7, topk=5)
+    assert not outer.done()                    # parked on the dying replica
+    pending.inner.set_exception(ReplicaDiedError("mid-flight death"))
+    scores, items = outer.result(timeout=10.0)
+    assert len(np.asarray(items)) == 5
+    assert router.failovers == 1 and not router.is_healthy(0)
+
+
+def test_router_repins_affinity_of_dead_replica():
+    params = _params()
+    reps = [LocalReplica(f"r{i}", params, 0.0, 0.0,
+                         queue_kwargs={"linger_ms": 0.5}) for i in range(2)]
+    router = Router(reps)
+    user = 7
+    pinned = router.pick(user)
+    assert router.pick(user) == pinned
+    router.mark_unhealthy(pinned)
+    repinned = router.pick(user)
+    assert repinned != pinned
+    assert router.affinity_repins == 1
+    assert router.pick(user) == repinned       # the new pin sticks
+    for rep in reps:
+        rep.close()
+
+
+def test_router_all_dead_fails_future_with_no_healthy():
+    rep = LocalReplica("r0", _params(), 0.0, 0.0,
+                       queue_kwargs={"linger_ms": 0.5})
+    router = Router([rep])
+    router.mark_unhealthy(0)
+    with pytest.raises(NoHealthyReplicaError):
+        router.submit(1, 5).result(timeout=10.0)
+    rep.close()
+
+
+def test_router_skips_unhealthy_on_update_thresholds_stats():
+    msgs, _ = _messages(1)
+    params = _params()
+    reps = [LocalReplica(f"r{i}", params, 0.0, 0.0,
+                         queue_kwargs={"linger_ms": 0.5}) for i in range(2)]
+    router = Router(reps)
+    router.mark_unhealthy(0)
+    assert router.apply_update(msgs[0]) == {"r1": 1}
+    assert list(router.apply_thresholds(0.01, 0.02)) == ["r1"]
+    stats = router.stats()
+    by_id = {r["replica_id"]: r for r in stats["replicas"]}
+    assert by_id["r0"] == {"replica_id": "r0", "healthy": False}
+    assert by_id["r1"]["healthy"] and by_id["r1"]["version"] == 1
+    assert router.version == 1                 # dead replica doesn't drag it
+    for rep in reps:
+        rep.close()
+
+
+def test_router_marks_dead_on_rollout_and_publisher_heals():
+    """A replica dying mid-rollout is skipped (marked unhealthy), and its
+    stale ack forces the publisher's next publish out kind=full."""
+    from repro.online import SnapshotPublisher
+
+    params = _params()
+    rng = np.random.default_rng(3)
+    upd = OnlineUpdater(params, None, 0.0, 0.0, batch_size=32, seed=3)
+    reps = [LocalReplica(f"r{i}", params, 0.0, 0.0,
+                         queue_kwargs={"linger_ms": 0.5}) for i in range(2)]
+    router = Router(reps)
+    pub = SnapshotPublisher(None, upd, compress=True)
+    pub.subscribe(router)
+    upd.apply(_batch(rng, 40, 300))
+    pub.publish()
+    reps[0].kill()
+    upd.apply(_batch(rng, 40, 300))
+    r = pub.publish()                          # r0 dies mid-rollout: skipped
+    assert not router.is_healthy(0)
+    assert pub.lag() >= 1
+    # supervisor-equivalent repair: fresh replica, readmit, next publish full
+    fresh = LocalReplica("r0", params, 0.0, 0.0,
+                         queue_kwargs={"linger_ms": 0.5})
+    router.replace_replica(0, fresh)
+    upd.apply(_batch(rng, 40, 300))
+    healed = pub.publish()
+    assert healed.kind == "full"
+    assert all(rep.version == pub.version for rep in router.replicas)
+    _assert_engines_bitwise(fresh.engine, ServingEngine(upd.params, 0.0, 0.0))
+    for rep in router.replicas:
+        rep.close()
+
+
+# ---------------------------------------------------------------------------
+# supervisor
+# ---------------------------------------------------------------------------
+
+
+def test_supervisor_detects_kill_respawns_and_readmits():
+    msgs, upd = _messages(2)
+    fleet = ServingFleet(_params(), 0.0, 0.0, replicas=2, backend="local",
+                         queue_kwargs={"linger_ms": 0.5})
+    fleet.apply_update(msgs[0])
+    fleet.apply_update(msgs[1])
+    sup = FleetSupervisor(fleet.router, dead_after=1)
+    old = fleet.replicas[0]
+    old.kill()
+    sup.poll_once()                            # hard evidence: immediate
+    assert sup.states[0] is ReplicaState.HEALTHY  # ... and fully recovered
+    replacement = fleet.replicas[0]
+    assert replacement is not old
+    assert replacement.version == 2            # converged before readmission
+    assert fleet.router.is_healthy(0)
+    rep = sup.report()
+    assert rep["deaths"] == 1 and rep["recovered"] == 1
+    assert rep["incidents"][0]["mttr_s"] is not None
+    # the readmitted replica serves and replicates again
+    scores, items = fleet.submit(3, 5, timeout=10.0).result(10.0)
+    assert len(np.asarray(items)) == 5
+    heal = state_message(upd.params, upd.t_p, upd.t_q, version=3)
+    fleet.apply_update(heal)
+    assert all(r.version == 3 for r in fleet.replicas)
+    fleet.close()
+
+
+def test_supervisor_suspect_ladder_needs_consecutive_misses():
+    class _Flaky:
+        replica_id = "f"
+        version = 0
+        alive = True
+
+        def __init__(self):
+            self.pings = []
+
+        def ping(self, timeout=5.0):
+            ok = self.pings.pop(0) if self.pings else True
+            return ok
+
+        def depth(self):
+            return 0
+
+    flaky = _Flaky()
+    router = Router([flaky, _Flaky()])
+    sup = FleetSupervisor(router, dead_after=2, respawn=False)
+    flaky.pings = [False, True, False, False]
+    sup.poll_once()
+    assert sup.states[0] is ReplicaState.SUSPECT   # one miss: suspicion only
+    assert router.is_healthy(0)                    # still takes traffic
+    sup.poll_once()
+    assert sup.states[0] is ReplicaState.HEALTHY   # recovered ping resets
+    sup.poll_once()
+    sup.poll_once()                                # two consecutive misses
+    assert sup.states[0] is ReplicaState.DEAD
+    assert not router.is_healthy(0)
+    assert sup.report()["deaths"] == 1
+
+
+def test_supervisor_respawn_budget_brakes_crash_loop():
+    rep0 = LocalReplica("r0", _params(), 0.0, 0.0,
+                        queue_kwargs={"linger_ms": 0.5})
+    rep1 = LocalReplica("r1", _params(), 0.0, 0.0,
+                        queue_kwargs={"linger_ms": 0.5})
+    router = Router([rep0, rep1])
+    sup = FleetSupervisor(router, dead_after=1, max_respawns=2)
+    for _ in range(4):                         # keeps dying after respawn
+        router.replicas[0].kill()
+        sup.poll_once()
+    assert sup.report()["respawns"] == 2       # budget, not 4
+    assert sup.states[0] is ReplicaState.DEAD
+    assert not router.is_healthy(0)
+    router.close()
+
+
+def test_supervisor_no_respawn_mode_only_fences():
+    rep0 = LocalReplica("r0", _params(), 0.0, 0.0,
+                        queue_kwargs={"linger_ms": 0.5})
+    rep1 = LocalReplica("r1", _params(), 0.0, 0.0,
+                        queue_kwargs={"linger_ms": 0.5})
+    router = Router([rep0, rep1])
+    sup = FleetSupervisor(router, dead_after=1, respawn=False)
+    rep0.kill()
+    sup.poll_once()
+    assert sup.states[0] is ReplicaState.DEAD
+    assert not router.is_healthy(0)
+    assert router.replicas[0] is rep0          # no replacement spawned
+    scores, items = router.submit(1, 5, timeout=10.0).result(10.0)
+    assert len(np.asarray(items)) == 5         # survivor carries the load
+    router.close()
+
+
+def test_supervisor_background_thread_recovers_kill():
+    fleet = ServingFleet(_params(), 0.0, 0.0, replicas=2, backend="local",
+                         queue_kwargs={"linger_ms": 0.5})
+    sup = fleet.supervise(probe_interval_s=0.01, dead_after=1)
+    fleet.replicas[1].kill()
+    deadline = time.monotonic() + 30.0
+    while time.monotonic() < deadline:
+        r = sup.report()
+        if r["deaths"] and r["recovered"] == r["deaths"]:
+            break
+        time.sleep(0.01)
+    sup.stop()
+    r = sup.report()
+    assert r["deaths"] >= 1 and r["recovered"] == r["deaths"]
+    assert r["mttr_max_s"] is not None
+    assert fleet.router.is_healthy(1)
+    fleet.close()
+
+
+def test_supervisor_uses_state_provider_for_heal():
+    msgs, upd = _messages(2)
+    fleet = ServingFleet(_params(), 0.0, 0.0, replicas=2, backend="local",
+                         queue_kwargs={"linger_ms": 0.5})
+    fleet.apply_update(msgs[0])
+    fleet.apply_update(msgs[1])
+    calls = []
+
+    def provider():
+        calls.append(1)
+        return state_message(upd.params, upd.t_p, upd.t_q, version=2)
+
+    sup = FleetSupervisor(fleet.router, dead_after=1, state_provider=provider)
+    fleet.replicas[0].kill()
+    sup.poll_once()
+    assert calls                               # healed through the provider
+    assert fleet.replicas[0].version == 2
+    _assert_engines_bitwise(fleet.replicas[0].engine,
+                            ServingEngine(upd.params, 0.0, 0.0))
+    fleet.close()
+
+
+# ---------------------------------------------------------------------------
+# property: adversarial wire schedules converge after heal
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_fleet_bitwise_convergent_under_adversarial_schedule(seed):
+    """Drop/duplicate/reorder/corrupt/kill the wire per a seeded schedule;
+    after the kind=full heal every surviving sink must be bitwise equal to
+    a fault-free reference engine fed the clean stream."""
+    rng = np.random.default_rng(seed)
+    msgs, upd = _messages(4, m=24, n=120)
+    heal = state_message(upd.params, upd.t_p, upd.t_q, version=5)
+
+    ref = ServingEngine(_params(24, 120), 0.0, 0.0)
+    ref_sink = EngineDeltaSink(ref, replica_id="ref")
+    for msg in msgs:
+        ref_sink.apply_update(msg)
+    ref_sink.apply_update(heal)
+
+    for r in range(2):
+        engine = ServingEngine(_params(24, 120), 0.0, 0.0)
+        sink = EngineDeltaSink(engine, replica_id=f"r{r}")
+        deliveries = []
+        killed_at = None
+        for i, msg in enumerate(msgs):
+            op = rng.choice(["ok", "drop", "dup", "corrupt", "kill"],
+                            p=[0.4, 0.15, 0.15, 0.15, 0.15])
+            if op == "drop":
+                continue
+            if op == "kill" and killed_at is None:
+                killed_at = i               # dies here; misses the rest
+                break
+            delivery = (faults.corrupt_message(msg) if op == "corrupt"
+                        else msg)
+            deliveries.append(delivery)
+            if op == "dup":
+                deliveries.append(delivery)
+        if len(deliveries) > 1 and rng.random() < 0.5:
+            rng.shuffle(deliveries)         # reorder
+        for delivery in deliveries:
+            ack = sink.apply_update(delivery)
+            assert ack <= 4                 # never acks past the stream
+        # a killed sink "respawns" at version 0 — same heal path
+        if killed_at is not None:
+            engine.stop()
+            engine = ServingEngine(_params(24, 120), 0.0, 0.0)
+            sink = EngineDeltaSink(engine, replica_id=f"r{r}")
+        assert sink.apply_update(heal) == 5  # kind=full always lands
+        assert sink.version == 5
+        _assert_engines_bitwise(engine, ref)
+        engine.stop()
+    ref.stop()
+
+
+# ---------------------------------------------------------------------------
+# trainer fault wiring
+# ---------------------------------------------------------------------------
+
+
+def _store_cfg(store_dir, **kw):
+    from repro.core.trainer import TrainConfig
+
+    base = dict(k=8, epochs=1, batch_size=64, lr=0.05, lam=0.02,
+                pruning_rate=0.5, seed=0, store_dir=store_dir, slab_steps=4,
+                prefetch_slabs=2)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def ratings_store(tmp_path_factory):
+    from repro.data import synthetic_ratings
+    from repro.store import build_store
+
+    store_dir = str(tmp_path_factory.mktemp("chaos_store") / "store")
+    build_store(synthetic_ratings(300, 100, 4096, seed=0), store_dir)
+    return store_dir
+
+
+def test_trainer_retries_injected_slab_failure_bitwise(ratings_store):
+    from repro.core.trainer import DPMFTrainer
+
+    clean = DPMFTrainer(_store_cfg(ratings_store))
+    clean.run_epoch()
+    assert clean.history[-1].step_retries == 0
+
+    faulted = DPMFTrainer(_store_cfg(ratings_store, max_step_retries=2))
+    plan = FaultPlan([FaultAction(site="trainer.slab", op="error", at=1)])
+    with faults.installed(plan):
+        faulted.run_epoch()
+    assert plan.pending == 0
+    record = faulted.history[-1]
+    assert record.step_retries >= 1
+    # the retry is donation-safe: the faulted run ends bitwise identical
+    np.testing.assert_array_equal(np.asarray(faulted.params.p),
+                                  np.asarray(clean.params.p))
+    np.testing.assert_array_equal(np.asarray(faulted.params.q),
+                                  np.asarray(clean.params.q))
+
+
+def test_trainer_retry_exhaustion_raises_step_failure(ratings_store):
+    from repro.core.trainer import DPMFTrainer
+    from repro.distributed import StepFailure
+
+    trainer = DPMFTrainer(_store_cfg(ratings_store, max_step_retries=1))
+    plan = FaultPlan([FaultAction(site="trainer.slab", op="error", at=0),
+                      FaultAction(site="trainer.slab", op="error", at=1)])
+    with faults.installed(plan):
+        with pytest.raises(StepFailure):
+            trainer.run_epoch()
+
+
+def test_trainer_failure_injector_hook(ratings_store):
+    from repro.core.trainer import DPMFTrainer
+    from repro.distributed import FailureInjector
+
+    trainer = DPMFTrainer(_store_cfg(ratings_store, max_step_retries=1))
+    trainer.failure_injector = FailureInjector((0,))
+    trainer.run_epoch()
+    assert trainer.failure_injector.failures == 1
+    assert trainer.history[-1].step_retries == 1
+
+
+def test_straggler_detector_flags_outlier():
+    from repro.distributed import StragglerDetector
+
+    det = StragglerDetector(window=20, z_threshold=4.0, min_samples=10)
+    assert not any(det.record(0.1 + 1e-4 * i) for i in range(15))
+    assert det.record(10.0)                    # 100x the window mean
+    assert det.flagged == 1
+    assert not det.record(0.1)                 # back to normal
+
+
+def test_trainer_epoch_record_carries_fault_fields(ratings_store):
+    from repro.core.trainer import DPMFTrainer
+
+    trainer = DPMFTrainer(_store_cfg(ratings_store))
+    trainer.run_epoch()
+    record = trainer.history[-1]
+    assert record.step_retries == 0
+    assert record.straggler_slabs >= 0
+
+
+# ---------------------------------------------------------------------------
+# process replicas (slow: spawn + re-import)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_process_replica_death_fails_pending_and_raises_fast():
+    """Satellite-1 regression: SIGKILLing the child must fail every pending
+    future with ReplicaDiedError (not hang to timeout) and make later
+    submits raise immediately."""
+    from repro.serving.fleet import ProcessReplica, state_message as sm
+
+    boot = sm(_params(), 0.0, 0.0, version=0)
+    rep = ProcessReplica("victim", init_msg=boot,
+                         queue_kwargs={"linger_ms": 200.0, "max_batch": 64})
+    try:
+        futs = [rep.submit(u, 5, timeout=60.0) for u in range(8)]
+        rep.kill()
+        t0 = time.monotonic()
+        for fut in futs:
+            with pytest.raises(ReplicaDiedError):
+                fut.result(timeout=30.0)
+        assert time.monotonic() - t0 < 20.0    # failed fast, not timed out
+        deadline = time.monotonic() + 10.0
+        while rep.alive and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert not rep.alive
+        assert rep.ping(timeout=2.0) is False
+        with pytest.raises(ReplicaDiedError):
+            rep.submit(1, 5)
+        with pytest.raises(ReplicaDiedError):
+            rep.apply_update(_messages(1)[0][0])
+    finally:
+        rep.close(timeout=10.0)

@@ -227,3 +227,84 @@ def test_legacy_real_directory_step_upgrades_to_symlink(tmp_path):
     np.testing.assert_array_equal(
         np.asarray(restored["a"]), np.asarray(_tree(2)["a"])
     )
+
+
+def test_corrupt_payload_detected_and_restore_falls_back(tmp_path):
+    """Satellite-6: a bit-flipped payload raises CorruptCheckpointError and
+    restore(step=None) falls back to the newest intact step."""
+    directory = str(tmp_path)
+    ckpt.save(directory, 1, _tree(1))
+    ckpt.save(directory, 2, _tree(2))
+    npz = os.path.join(os.path.realpath(
+        os.path.join(directory, "step_000000000002")), "arrays.npz")
+    blob = bytearray(open(npz, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(npz, "wb").write(bytes(blob))
+
+    with pytest.raises(ckpt.CorruptCheckpointError):
+        ckpt.load_raw(directory, 2)
+    # explicit step: the caller asked for those bytes — no silent fallback
+    with pytest.raises(ckpt.CorruptCheckpointError):
+        ckpt.restore(directory, _tree(), step=2)
+    restored, meta = ckpt.restore(directory, _tree())
+    assert meta["step"] == 1
+    np.testing.assert_array_equal(
+        np.asarray(restored["a"]), np.asarray(_tree(1)["a"])
+    )
+
+
+def test_truncated_payload_detected(tmp_path):
+    directory = str(tmp_path)
+    ckpt.save(directory, 3, _tree())
+    npz = os.path.join(os.path.realpath(
+        os.path.join(directory, "step_000000000003")), "arrays.npz")
+    blob = open(npz, "rb").read()
+    open(npz, "wb").write(blob[: len(blob) // 2])
+    with pytest.raises(ckpt.CorruptCheckpointError):
+        ckpt.restore(directory, _tree())
+
+
+def test_every_step_corrupt_raises_cleanly(tmp_path):
+    directory = str(tmp_path)
+    ckpt.save(directory, 1, _tree())
+    npz = os.path.join(os.path.realpath(
+        os.path.join(directory, "step_000000000001")), "arrays.npz")
+    open(npz, "wb").write(b"garbage")
+    with pytest.raises(ckpt.CorruptCheckpointError, match="every retained"):
+        ckpt.restore(directory, _tree())
+
+
+def test_injected_fsync_failure_publishes_nothing(tmp_path):
+    """Chaos seam: a failed fsync aborts the save before the symlink swap —
+    the directory stays exactly as it was (no step, or the previous step)."""
+    from repro.testing import faults
+    from repro.testing.faults import FaultAction, FaultPlan
+
+    directory = str(tmp_path)
+    plan = FaultPlan([FaultAction(site="checkpoint.fsync", op="error", at=0)])
+    with faults.installed(plan):
+        with pytest.raises(OSError, match="injected fsync"):
+            ckpt.save(directory, 5, _tree())
+    assert plan.pending == 0
+    assert ckpt.all_steps(directory) == []     # nothing published
+    ckpt.save(directory, 5, _tree())           # disarmed: save works again
+    assert ckpt.all_steps(directory) == [5]
+    restored, _ = ckpt.restore(directory, _tree())
+    np.testing.assert_array_equal(
+        np.asarray(restored["a"]), np.asarray(_tree()["a"])
+    )
+
+
+def test_legacy_checkpoint_without_crc_loads(tmp_path):
+    """Pre-CRC metadata (no payload_crc32 key) must keep loading."""
+    import json as json_lib
+
+    directory = str(tmp_path)
+    ckpt.save(directory, 4, _tree())
+    data_dir = os.path.realpath(os.path.join(directory, "step_000000000004"))
+    meta_path = os.path.join(data_dir, "metadata.json")
+    meta = json_lib.loads(open(meta_path).read())
+    meta.pop("payload_crc32")
+    open(meta_path, "w").write(json_lib.dumps(meta))
+    restored, meta = ckpt.restore(directory, _tree())
+    assert meta["step"] == 4

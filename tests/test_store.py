@@ -330,3 +330,71 @@ def test_packed_reshuffle_stays_on_device():
         # the host; the epoch scalar crosses via an explicit device_put
         out = packed.epoch_batches(seed=0, epoch=1)
     assert out["user"].shape == (packed.num_steps, 32)
+
+
+# ---------------------------------------------------------------------------
+# shard integrity (CRC-32 in index.json)
+# ---------------------------------------------------------------------------
+
+def test_corrupt_shard_quarantined(tmp_path):
+    """A bit-flipped shard fails its index.json CRC on first open: the
+    loader raises CorruptShardError and the file is quarantined."""
+    from repro.store import CorruptShardError
+
+    d = str(tmp_path / "store")
+    build_store(_ds(), d, shard_rows=512)
+    shard_path = os.path.join(d, "shard_00001.bin")
+    blob = bytearray(open(shard_path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(shard_path, "wb").write(bytes(blob))
+
+    store = RatingsStore(d)
+    store._columns(0)                              # intact shard: fine
+    with pytest.raises(CorruptShardError, match="crc32"):
+        store._columns(1)
+    assert os.path.exists(shard_path + ".corrupt")  # quarantined
+    assert not os.path.exists(shard_path)
+
+
+def test_corrupt_shard_caught_via_gather(tmp_path):
+    from repro.store import CorruptShardError
+
+    d = str(tmp_path / "store")
+    build_store(_ds(), d, shard_rows=512)
+    shard_path = os.path.join(d, "shard_00000.bin")
+    blob = bytearray(open(shard_path, "rb").read())
+    blob[0] ^= 0x01
+    open(shard_path, "wb").write(bytes(blob))
+    store = RatingsStore(d)
+    with pytest.raises(CorruptShardError):
+        store.gather(np.arange(16))
+
+
+def test_shard_verification_is_once_and_optional(tmp_path):
+    d = str(tmp_path / "store")
+    build_store(_ds(), d, shard_rows=512)
+    store = RatingsStore(d)
+    store._columns(0)
+    assert 0 in store._verified
+    # opting out (trusted local disk): corrupt bytes flow through unchecked
+    blob_path = os.path.join(d, "shard_00000.bin")
+    unchecked = RatingsStore(d, verify_checksums=False)
+    unchecked._columns(0)
+    assert not unchecked._verified
+
+
+def test_legacy_index_without_crc_loads(tmp_path):
+    """Stores built before the checksum landed (no crc32 key) keep
+    loading — verification is simply skipped for those shards."""
+    import json
+
+    d = str(tmp_path / "store")
+    build_store(_ds(), d, shard_rows=512)
+    index_path = os.path.join(d, "index.json")
+    index = json.loads(open(index_path).read())
+    for s in index["shards"]:
+        s.pop("crc32")
+    open(index_path, "w").write(json.dumps(index))
+    store = RatingsStore(d)
+    u, i, r = store.gather(np.arange(32))
+    assert len(u) == 32 and not store._verified
