@@ -1,0 +1,187 @@
+"""Workload subsystem: implicit/BPR training cost + ranking-parity guard.
+
+    PYTHONPATH=src python -m benchmarks.bench_workloads [--full]
+
+Three claims, checked then timed:
+
+1. **objective parity is exact** — an implicit-trained model served dense
+   (thresholds 0) through ``ServingEngine.topk`` scores the same ranking
+   metrics as the brute-force oracle *exactly*, so the pruned-vs-dense gap
+   reported below is pruning, never workload plumbing (asserted);
+2. **what the weighted objectives cost** — examples/s of the explicit,
+   confidence-weighted implicit (positives + sampled negatives through the
+   same fused update) and BPR pairwise epoch scans on one shape, so the
+   overhead of the richer objectives is a tracked number rather than
+   folklore;
+3. **prequential ranking is cheap enough to run in-line** — events/s of
+   rank-score-then-learn on a rating-free click stream
+   (``PrequentialRankingEvaluator`` + WALS conversion) vs the same updates
+   without scoring: the cost of knowing your live hit-rate.
+
+Emits the ``name,us_per_call,derived`` CSV contract and writes
+``BENCH_workloads.json`` (schema-validated by ``benchmarks/run.py
+--smoke``).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, reset_records, write_json
+from repro.core.trainer import DPMFTrainer, TrainConfig
+from repro.data import synthetic_ratings, train_test_split
+from repro.eval import PrequentialRankingEvaluator
+from repro.eval import ranking as ranking_eval
+from repro.online import OnlineUpdater, ReplaySource, iter_microbatches
+from repro.serving import ServingEngine
+from repro.workloads import implicit_event_batch, strip_ratings
+
+
+def _timed_train(config: TrainConfig, train_ds, test_ds):
+    """Train and return (trainer, examples/s over the epoch loop)."""
+    trainer = DPMFTrainer(config, train_ds, test_ds)
+    start = time.perf_counter()
+    trainer.run()
+    elapsed = time.perf_counter() - start
+    if config.objective == "bpr":
+        per_epoch = len(train_ds)          # one sampled triple per rating
+    else:
+        per_epoch = len(trainer.train_ds)  # implicit: positives + negatives
+    return trainer, per_epoch * config.epochs / elapsed
+
+
+def run(*, full: bool = False, smoke: bool = False) -> None:
+    reset_records()
+    if smoke:
+        m, n, k, ratings = 300, 2000, 16, 6000
+        epochs, rate, stream_events = 2, 0.3, 384
+    elif full:
+        m, n, k, ratings = 8000, 60000, 48, 300000
+        epochs, rate, stream_events = 4, 0.3, 4096
+    else:
+        m, n, k, ratings = 1500, 12000, 32, 50000
+        epochs, rate, stream_events = 3, 0.3, 2048
+
+    topk, alpha, negatives = 10, 8.0, 2
+    ds = synthetic_ratings(num_users=m, num_items=n, num_ratings=ratings,
+                           seed=0)
+    rest, stream_ds = train_test_split(ds, 0.25, seed=1)
+    train_ds, test_ds = train_test_split(rest, 0.2, seed=2)
+    base = dict(k=k, epochs=epochs, batch_size=2048, lr=0.02, lam=0.02,
+                pruning_rate=rate, ranking_topk=topk, seed=0)
+
+    # ---- 1. objective training throughput ----------------------------------
+    _, explicit_s = _timed_train(TrainConfig(**base), train_ds, test_ds)
+    implicit_cfg = TrainConfig(objective="implicit", implicit_alpha=alpha,
+                               implicit_negatives=negatives, **base)
+    implicit_trainer, implicit_s = _timed_train(implicit_cfg, train_ds,
+                                                test_ds)
+    _, bpr_s = _timed_train(TrainConfig(objective="bpr", **base),
+                            train_ds, test_ds)
+    for name, rate_s in (("explicit", explicit_s), ("implicit", implicit_s),
+                         ("bpr", bpr_s)):
+        emit(f"workloads_train_{name}_r{ratings}_k{k}", 1e6 / rate_s,
+             f"{rate_s:.0f} examples/s")
+    print(f"# training: explicit {explicit_s:.0f} ex/s, implicit "
+          f"{implicit_s:.0f} ex/s ({1 + negatives}x data), BPR "
+          f"{bpr_s:.0f} triples/s")
+
+    # ---- 2. parity at t=0, then the pruned-vs-dense ranking gap ------------
+    params = implicit_trainer.params
+    t_p, t_q = implicit_trainer.t_p, implicit_trainer.t_q
+    holdout = implicit_trainer.test_ds   # binarized positives
+    dense_engine = ServingEngine(params, 0.0, 0.0, use_kernel=False,
+                                 max_batch=256)
+    oracle = ranking_eval.evaluate_oracle(params, holdout, topk)
+    engine_dense = ranking_eval.evaluate_engine(dense_engine, holdout, topk)
+    assert engine_dense == oracle, (
+        f"implicit engine/oracle divergence at t=0: {engine_dense} vs "
+        f"{oracle}"
+    )
+    print(f"# parity at t=0: implicit-trained engine == oracle exactly "
+          f"(NDCG@{topk} {oracle.ndcg:.4f}, {oracle.users} users)")
+
+    pruned_engine = ServingEngine(params, t_p, t_q, use_kernel=False,
+                                  max_batch=256)
+    pruned = ranking_eval.evaluate_engine(pruned_engine, holdout, topk)
+    gap = oracle.ndcg - pruned.ndcg
+    emit(f"workloads_implicit_gap_ndcg{topk}_rate{rate}", abs(gap) * 1e6,
+         f"dense {oracle.ndcg:.4f} vs pruned {pruned.ndcg:.4f}")
+    print(f"# implicit pruned vs dense @ rate {rate}: NDCG {pruned.ndcg:.4f} "
+          f"vs {oracle.ndcg:.4f} (gap {gap:+.4f})")
+
+    # ---- 3. prequential-ranking overhead on a click stream -----------------
+    def click_batches():
+        return iter_microbatches(
+            strip_ratings(
+                ReplaySource(stream_ds, epochs=None, shuffle=True, seed=3)
+            ),
+            128, max_events=stream_events,
+        )
+
+    to_wals = functools.partial(
+        implicit_event_batch, num_items=n, alpha=alpha, negatives=negatives,
+        rng=np.random.default_rng(7),
+    )
+
+    upd = OnlineUpdater(params, t_p=t_p, t_q=t_q, batch_size=128, seed=5)
+    batches = iter(click_batches())
+    upd.apply(to_wals(next(batches)))   # compile outside the timed region
+    start = time.perf_counter()
+    done = 0
+    for batch in batches:
+        done += len(batch)
+        upd.apply(to_wals(batch))
+    plain_s = time.perf_counter() - start
+
+    upd2 = OnlineUpdater(params, t_p=t_p, t_q=t_q, batch_size=128, seed=5)
+    evaluator = PrequentialRankingEvaluator(upd2, topk=topk,
+                                            update_fn=to_wals)
+    batches = iter(click_batches())
+    evaluator.consume(next(batches))
+    start = time.perf_counter()
+    for batch in batches:
+        evaluator.consume(batch)
+    preq_s = time.perf_counter() - start
+    overhead = preq_s / max(plain_s, 1e-9) - 1.0
+    stats = evaluator.stats
+    emit(f"workloads_prequential_rank_b128_n{n}",
+         preq_s / max(done, 1) * 1e6,
+         f"{done / preq_s:.0f} events/s, {overhead * 100:.0f}% over "
+         f"update-only")
+    print(f"# prequential ranking: {done / preq_s:.0f} events/s scored+"
+          f"applied ({overhead * 100:.0f}% overhead); HR@{topk} "
+          f"{stats.hit_rate:.4f} over {stats.events} events "
+          f"(new {stats.cohorts['new']['events']}, established "
+          f"{stats.cohorts['established']['events']})")
+
+    write_json("workloads", {
+        "shape": {"users": m, "items": n, "k": k, "ratings": ratings,
+                  "topk": topk, "pruning_rate": rate,
+                  "implicit_alpha": alpha,
+                  "implicit_negatives": negatives},
+        "train_examples_per_s": {"explicit": explicit_s,
+                                 "implicit": implicit_s, "bpr": bpr_s},
+        "parity_at_zero": engine_dense == oracle,
+        "dense": oracle.as_dict(),
+        "pruned": pruned.as_dict(),
+        "gap_ndcg": gap,
+        "prequential_events_per_s": done / preq_s,
+        "prequential_overhead_frac": overhead,
+        "prequential_hit_rate": stats.hit_rate,
+    })
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--full", action="store_true",
+                        help="catalog-scale shape (slower)")
+    args = parser.parse_args()
+    run(full=args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,8 @@ def main() -> None:
     parser.add_argument("--only", default=None,
                         help="comma-separated subset: "
                              "figures,kernels,roofline,serving,online,"
-                             "training,eval,fleet,slo,scale,chaos")
+                             "training,eval,fleet,slo,scale,chaos,"
+                             "workloads")
     parser.add_argument("--json-dir", default=None,
                         help="directory for the BENCH_<suite>.json reports "
                              "(default: $BENCH_JSON_DIR or CWD)")
@@ -49,6 +50,7 @@ def main() -> None:
         bench_serving,
         bench_slo,
         bench_training,
+        bench_workloads,
         common,
     )
 
@@ -64,6 +66,7 @@ def main() -> None:
         "slo": bench_slo.run,
         "scale": bench_scale.run,
         "chaos": bench_chaos.run,
+        "workloads": bench_workloads.run,
     }
     selected = (
         {s.strip() for s in args.only.split(",")} if args.only else set(suites)

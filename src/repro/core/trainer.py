@@ -46,6 +46,17 @@ class TrainConfig:
     strategy: str = "standard"         # standard | twin  (paper §5.3)
     init_method: str = "normal"        # normal | uniform (paper §5.3)
     variant: str = "funk"              # funk | bias | svdpp
+    # -- training objective (repro.workloads) -------------------------------
+    # explicit: squared rating error (the paper's setting)
+    # implicit: WALS confidence-weighted binary preference (Hu et al. 2008)
+    #           — the interaction log is expanded once at init into
+    #           positives + sampled negatives with a confidence weight
+    #           column riding train_step's batch["weight"] gate
+    # bpr:      pairwise -log σ(s_ui - s_uj) on per-epoch sampled triples
+    #           (scan mode only; test_mae is NaN, ranking metrics carry)
+    objective: str = "explicit"        # explicit | implicit | bpr
+    implicit_alpha: float = 40.0       # confidence c = 1 + alpha·r
+    implicit_negatives: int = 4        # sampled unobserved items / positive
     use_fused_kernel: bool = False     # Pallas path (interpret mode on CPU)
     epoch_mode: str = "scan"           # scan: one donated lax.scan per epoch
     #                                  # python: legacy per-batch host loop
@@ -106,11 +117,50 @@ class DPMFTrainer:
         test_ds: Optional[RatingsDataset] = None,
     ):
         self.config = config
-        self.train_ds = train_ds
-        self.test_ds = test_ds
         self.opt = RowOptimizer(name=config.optimizer)
         if config.epoch_mode not in ("scan", "python"):
             raise ValueError(f"unknown epoch_mode {config.epoch_mode!r}")
+        if config.objective not in ("explicit", "implicit", "bpr"):
+            raise ValueError(f"unknown objective {config.objective!r}")
+        self._train_weight = None      # implicit confidence column
+        self._bpr_sampler = None
+        if config.objective != "explicit":
+            if config.store_dir is not None:
+                raise ValueError(
+                    "store-backed training supports only the explicit "
+                    "objective"
+                )
+            if config.epoch_mode != "scan":
+                raise ValueError(
+                    f"objective {config.objective!r} requires "
+                    "epoch_mode='scan'"
+                )
+            if config.variant == "svdpp":
+                raise ValueError(
+                    "svdpp histories assume a rated log; use variant "
+                    "'funk' or 'bias' with implicit/bpr objectives"
+                )
+            if train_ds is None:
+                raise ValueError(
+                    f"objective {config.objective!r} requires train_ds"
+                )
+        if config.objective == "implicit":
+            from repro.workloads import implicit as implicit_wl
+
+            # one-time expansion: positives + sampled negatives, with the
+            # WALS confidence column carried as per-example weights
+            train_ds, self._train_weight = implicit_wl.implicit_dataset(
+                train_ds,
+                alpha=config.implicit_alpha,
+                negatives=config.implicit_negatives,
+                seed=config.seed,
+            )
+            if test_ds is not None:
+                # held-out interactions as preference-1 targets: test MAE
+                # reads "distance from 1 on the user's actual items"
+                test_ds = implicit_wl.binarize_positives(test_ds)
+        self.train_ds = train_ds
+        self.test_ds = test_ds
         self._store = None
         self._loader = None
         self._resume_slab = 0
@@ -157,11 +207,19 @@ class DPMFTrainer:
             # mode the train table never lands on device wholesale.
             self._packed_train = (
                 loader.pack_ratings(
-                    train_ds, min(config.batch_size, max(len(train_ds), 1))
+                    train_ds,
+                    min(config.batch_size, max(len(train_ds), 1)),
+                    weight=self._train_weight,
                 )
-                if self._loader is None
+                if self._loader is None and config.objective != "bpr"
                 else None
             )
+            if config.objective == "bpr":
+                from repro.workloads.bpr import BPRSampler
+
+                self._bpr_sampler = BPRSampler(
+                    train_ds, config.batch_size, seed=config.seed
+                )
             self._packed_eval = (
                 loader.pack_eval_batches(test_ds, config.eval_batch_size)
                 if test_ds is not None
@@ -401,6 +459,26 @@ class DPMFTrainer:
                     self._save_mid_epoch(slabs_done, err_sum, work_sum, steps_done)
             abs_err = err_sum / max(steps_done, 1)
             work = work_sum / max(steps_done, 1)
+        elif cfg.objective == "bpr":
+            # Pairwise epoch: freshly sampled (user, pos, neg) triples folded
+            # through the same scan machinery; abs_err carries the BPR loss.
+            from repro.workloads import bpr as bpr_wl
+
+            triples = self._bpr_sampler.epoch_triples(self.epoch)
+            self.params, self.opt_state, metrics = bpr_wl.bpr_epoch_scan(
+                self.params,
+                self.opt_state,
+                triples,
+                t_p,
+                t_q,
+                lr,
+                dim_mask,
+                opt=self.opt,
+                lam=cfg.lam,
+            )
+            jax.block_until_ready(self.params.p)
+            abs_err = float(metrics["abs_err"])
+            work = float(metrics["work_fraction"])
         elif cfg.epoch_mode == "scan":
             # One donated, compiled computation for the whole epoch: on-device
             # reshuffle, lax.scan of train_step, metrics summed on device.
@@ -498,8 +576,13 @@ class DPMFTrainer:
         return self.history
 
     def evaluate(self, t_p=None, t_q=None) -> float:
-        """Test MAE (Eq. 12) with the current pruning thresholds."""
-        if self.test_ds is None:
+        """Test MAE (Eq. 12) with the current pruning thresholds.
+
+        NaN when there is no test split, and under the ``bpr`` objective —
+        pairwise scores have no rating scale, so rating error is undefined;
+        use :meth:`evaluate_ranking` there instead.
+        """
+        if self.test_ds is None or self.config.objective == "bpr":
             return float("nan")
         t_p = self.t_p if t_p is None else t_p
         t_q = self.t_q if t_q is None else t_q

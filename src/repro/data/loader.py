@@ -92,6 +92,7 @@ def _permute_and_batch(
     rating: jax.Array,
     base_key: jax.Array,
     epoch: jax.Array,
+    weight: Optional[jax.Array] = None,
     *,
     steps: int,
     batch_size: int,
@@ -111,7 +112,10 @@ def _permute_and_batch(
     def gather(x):
         return x[take].reshape(steps, batch_size)
 
-    return {"user": gather(user), "item": gather(item), "rating": gather(rating)}
+    out = {"user": gather(user), "item": gather(item), "rating": gather(rating)}
+    if weight is not None:
+        out["weight"] = gather(weight)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,6 +136,10 @@ class PackedRatings:
     item: jax.Array     # (N,) int32
     rating: jax.Array   # (N,) float32
     batch_size: int
+    # optional per-example importance weights (confidence weighting for the
+    # implicit objective): shuffled alongside and emitted as the batches'
+    # "weight" column, which train_step's update gate consumes
+    weight: Optional[jax.Array] = None   # (N,) float32
     # per-seed base PRNG keys, uploaded once and reused every epoch so the
     # reshuffle stays device-resident (no hidden host round-trips); cache
     # state, not identity — excluded from eq/repr of the frozen dataclass
@@ -162,18 +170,33 @@ class PackedRatings:
             )
         return _permute_and_batch(
             self.user, self.item, self.rating, base,
-            jax.device_put(np.uint32(epoch)),
+            jax.device_put(np.uint32(epoch)), self.weight,
             steps=self.num_steps, batch_size=self.batch_size, shuffle=shuffle,
         )
 
 
-def pack_ratings(ds: RatingsDataset, batch_size: int) -> PackedRatings:
-    """Upload the ratings table once; see :class:`PackedRatings`."""
+def pack_ratings(
+    ds: RatingsDataset,
+    batch_size: int,
+    *,
+    weight: Optional[np.ndarray] = None,
+) -> PackedRatings:
+    """Upload the ratings table once; see :class:`PackedRatings`.
+
+    ``weight`` attaches per-example importance weights (e.g. the implicit
+    objective's confidence column) that ride through the epoch shuffle into
+    each batch's ``weight`` gate.
+    """
+    if weight is not None and weight.shape[0] != len(ds):
+        raise ValueError(
+            f"weight length {weight.shape[0]} != dataset size {len(ds)}"
+        )
     return PackedRatings(
         user=jnp.asarray(ds.user, jnp.int32),
         item=jnp.asarray(ds.item, jnp.int32),
         rating=jnp.asarray(ds.rating, jnp.float32),
         batch_size=int(batch_size),
+        weight=None if weight is None else jnp.asarray(weight, jnp.float32),
     )
 
 

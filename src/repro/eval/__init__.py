@@ -8,12 +8,19 @@ continuously instead of against a stale held-out split:
   stream (windowed / decayed MAE & RMSE, drift hooks for recalibration);
 * :mod:`repro.eval.ranking` — HR@K / NDCG@K / recall@K through the real
   serving paths, pinned against a brute-force dense oracle, so pruning
-  error is visible as *ranking* degradation, not only rating error.
+  error is visible as *ranking* degradation, not only rating error;
+* :mod:`repro.eval.prequential_ranking` — the rating-free variant: "was
+  the clicked item in the top-k we actually served?", test-then-learn on
+  click streams with new/established user cohort segmentation.
 """
 from repro.eval.prequential import (
     PrequentialEvaluator,
     PrequentialStats,
     recalibration_hook,
+)
+from repro.eval.prequential_ranking import (
+    PrequentialRankingEvaluator,
+    PrequentialRankingStats,
 )
 from repro.eval.ranking import (
     PAD_ITEM,
@@ -30,6 +37,8 @@ from repro.eval.ranking import (
 __all__ = [
     "PAD_ITEM",
     "PrequentialEvaluator",
+    "PrequentialRankingEvaluator",
+    "PrequentialRankingStats",
     "PrequentialStats",
     "RankingReport",
     "dense_topk",

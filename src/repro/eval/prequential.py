@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mf
-from repro.online.stream import EventBatch
+from repro.online.stream import EventBatch, RatingFreeStreamError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,6 +173,13 @@ class PrequentialEvaluator:
         """
         if len(batch) == 0:
             return {"mae": float("nan"), "rmse": float("nan"), "events": 0}
+        if batch.rating is None:
+            raise RatingFreeStreamError(
+                "PrequentialEvaluator scores rating error and needs a rated "
+                "stream; this batch is rating-free.  Use "
+                "repro.eval.prequential_ranking.PrequentialRankingEvaluator "
+                "for ranking-only prequential evaluation of click streams."
+            )
         users = np.asarray(batch.user, np.int32)
         items = np.asarray(batch.item, np.int32)
         # grow BEFORE predicting: a fresh row's prediction is rating-free.

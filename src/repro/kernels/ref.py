@@ -130,6 +130,86 @@ def fused_mf_sgd_ref(
     return new_p.astype(p_rows.dtype), new_q.astype(q_rows.dtype), new_bu, new_bi, err
 
 
+def _ranks_np(rows: np.ndarray, threshold: float) -> np.ndarray:
+    """NumPy transcription of :func:`repro.core.ranks.effective_ranks`."""
+    insig = np.abs(rows) < threshold
+    first = np.argmax(insig, axis=-1).astype(np.int32)
+    return np.where(np.any(insig, axis=-1), first, rows.shape[-1]).astype(
+        np.int32
+    )
+
+
+def _rank_mask_np(ranks: np.ndarray, k: int) -> np.ndarray:
+    return (np.arange(k)[None, :] < ranks[:, None]).astype(np.float32)
+
+
+def bpr_step_ref(
+    p: np.ndarray,         # (m, k) full user table
+    q: np.ndarray,         # (n, k) full item table
+    user: np.ndarray,      # (b,)
+    pos: np.ndarray,       # (b,)
+    neg: np.ndarray,       # (b,)
+    t_p: float,
+    t_q: float,
+    *,
+    lr: float,
+    lam: float,
+    item_bias: np.ndarray | None = None,   # (n,) optional
+    weight: np.ndarray | None = None,      # (b,) update gate
+):
+    """NumPy reference for one plain-SGD pruned BPR step (whole tables).
+
+    The differential oracle for ``workloads.bpr.bpr_train_step``: pair
+    scores truncate at ``min(r_u, r_item)``, regularization masks by each
+    row's own rank, duplicate rows accumulate additively (``np.add.at``,
+    matching the scatter-add), all in float32 so grid-valued factors match
+    the jitted step exactly.  Returns ``(new_p, new_q, new_item_bias,
+    mean_loss)``.
+    """
+    k = p.shape[-1]
+    pf = p.astype(np.float32)
+    qf = q.astype(np.float32)
+    x_u, y_i, y_j = pf[user], qf[pos], qf[neg]
+    r_u = _ranks_np(x_u, t_p)
+    r_i = _ranks_np(y_i, t_q)
+    r_j = _ranks_np(y_j, t_q)
+    m_ui = _rank_mask_np(np.minimum(r_u, r_i), k)
+    m_uj = _rank_mask_np(np.minimum(r_u, r_j), k)
+    m_u = _rank_mask_np(r_u, k)
+    m_i = _rank_mask_np(r_i, k)
+    m_j = _rank_mask_np(r_j, k)
+
+    s_ui = np.sum(x_u * y_i * m_ui, axis=-1, dtype=np.float32)
+    s_uj = np.sum(x_u * y_j * m_uj, axis=-1, dtype=np.float32)
+    new_bias = None
+    if item_bias is not None:
+        bf = item_bias.astype(np.float32)
+        s_ui = s_ui + bf[pos]
+        s_uj = s_uj + bf[neg]
+    diff = (s_ui - s_uj).astype(np.float32)
+    sig = (1.0 / (1.0 + np.exp(diff))).astype(np.float32)  # σ(-diff)
+    w = (
+        np.ones_like(diff) if weight is None
+        else weight.astype(np.float32)
+    )
+
+    g_p = (-sig[:, None] * (y_i * m_ui - y_j * m_uj) + lam * x_u * m_u)
+    g_qi = (-sig[:, None] * x_u * m_ui + lam * y_i * m_i)
+    g_qj = (sig[:, None] * x_u * m_uj + lam * y_j * m_j)
+    new_p = pf.copy()
+    new_q = qf.copy()
+    np.add.at(new_p, user, (-lr * g_p * w[:, None]).astype(np.float32))
+    np.add.at(new_q, pos, (-lr * g_qi * w[:, None]).astype(np.float32))
+    np.add.at(new_q, neg, (-lr * g_qj * w[:, None]).astype(np.float32))
+    if item_bias is not None:
+        new_bias = item_bias.astype(np.float32).copy()
+        np.add.at(new_bias, pos, -lr * (-sig + lam * bf[pos]) * w)
+        np.add.at(new_bias, neg, -lr * (sig + lam * bf[neg]) * w)
+    loss = np.log1p(np.exp(-np.abs(diff))) + np.maximum(-diff, 0.0)
+    denom = max(float(w.sum()), 1e-9)
+    return new_p, new_q, new_bias, float((loss * w).sum() / denom)
+
+
 def early_stop_dot_loop(
     p_row: np.ndarray, q_row: np.ndarray, t_p: float, t_q: float
 ) -> float:

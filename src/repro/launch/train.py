@@ -48,6 +48,16 @@ def main() -> None:
     parser.add_argument("--init", default="normal", choices=["normal", "uniform"])
     parser.add_argument("--variant", default="funk",
                         choices=["funk", "bias", "svdpp"])
+    parser.add_argument("--objective", default="explicit",
+                        choices=["explicit", "implicit", "bpr"],
+                        help="explicit: squared rating error (the paper); "
+                             "implicit: WALS confidence-weighted binary "
+                             "preference with sampled negatives; bpr: "
+                             "pairwise ranking loss (test mae is NaN)")
+    parser.add_argument("--implicit-alpha", type=float, default=40.0,
+                        help="implicit confidence c = 1 + alpha*r")
+    parser.add_argument("--implicit-negatives", type=int, default=4,
+                        help="sampled negatives per observed interaction")
     parser.add_argument("--use-fused-kernel", action="store_true")
     parser.add_argument("--seed", type=int, default=0)
     parser.add_argument("--ckpt", default=None)
@@ -94,6 +104,9 @@ def main() -> None:
         strategy=args.strategy,
         init_method=args.init,
         variant=args.variant,
+        objective=args.objective,
+        implicit_alpha=args.implicit_alpha,
+        implicit_negatives=args.implicit_negatives,
         use_fused_kernel=args.use_fused_kernel,
         epoch_mode=args.epoch_mode,
         seed=args.seed,

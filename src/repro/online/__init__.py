@@ -16,6 +16,7 @@ from repro.online.stream import (  # noqa: F401
     EventBatch,
     IteratorSource,
     PoissonSource,
+    RatingFreeStreamError,
     ReplaySource,
     iter_microbatches,
 )

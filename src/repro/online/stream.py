@@ -27,13 +27,32 @@ from typing import Callable, Iterable, Iterator, Optional
 import numpy as np
 
 
+class RatingFreeStreamError(TypeError):
+    """A rating-free batch reached a consumer that needs ratings.
+
+    Click/impression streams carry no rating column (``Event.rating is
+    None``).  Rating-driven consumers — :class:`~repro.online.updater.
+    OnlineUpdater.apply` and :class:`~repro.eval.prequential.
+    PrequentialEvaluator` — raise this typed error instead of crashing in a
+    numpy cast.  Rating-free streams are served by the ranking-only path
+    instead: convert clicks into weighted binary preferences with
+    :func:`repro.workloads.implicit.implicit_event_batch`, and evaluate with
+    :class:`repro.eval.prequential_ranking.PrequentialRankingEvaluator`.
+    """
+
+
 @dataclasses.dataclass(frozen=True)
 class Event:
-    """One interaction record on the stream's simulated clock."""
+    """One interaction record on the stream's simulated clock.
+
+    ``rating`` is ``None`` on rating-free streams (clicks, plays,
+    impressions) — see :class:`RatingFreeStreamError` for how those are
+    consumed.
+    """
 
     user: int
     item: int
-    rating: float
+    rating: Optional[float]
     timestamp: float = 0.0  # seconds on the source's simulated clock
 
 
@@ -50,7 +69,7 @@ class EventBatch:
 
     user: np.ndarray    # (B,) int32
     item: np.ndarray    # (B,) int32
-    rating: np.ndarray  # (B,) float32
+    rating: Optional[np.ndarray]  # (B,) float32; None = rating-free stream
     weight: Optional[np.ndarray] = None  # (B,) float32 update gate
 
     def __len__(self) -> int:
@@ -68,12 +87,27 @@ class EventBatch:
         ``half_life_s`` seconds older than ``now`` (default: the newest
         event in the batch) gets weight 0.5, twice that 0.25, ...  The
         newest event always carries weight 1, so a trickle of fresh events
-        is never down-weighted as a group."""
+        is never down-weighted as a group.
+
+        Rating-free events (``rating is None``) produce a rating-free batch
+        (``batch.rating is None``); mixing rated and rating-free events in
+        one batch is a :class:`ValueError` — a stream either carries ratings
+        or it does not."""
         ev = list(events)
+        rated = [e for e in ev if e.rating is not None]
+        if rated and len(rated) != len(ev):
+            raise ValueError(
+                "cannot mix rated and rating-free events in one batch "
+                f"({len(rated)}/{len(ev)} carry ratings)"
+            )
         batch = cls(
             user=np.asarray([e.user for e in ev], np.int32),
             item=np.asarray([e.item for e in ev], np.int32),
-            rating=np.asarray([e.rating for e in ev], np.float32),
+            rating=(
+                np.asarray([e.rating for e in ev], np.float32)
+                if rated or not ev
+                else None
+            ),
         )
         if half_life_s is not None and ev:
             if half_life_s <= 0:
@@ -196,8 +230,9 @@ class PoissonSource:
 
 
 class IteratorSource:
-    """Adapt any iterable of ``(user, item, rating)`` tuples (or
-    :class:`Event` records) into an event source."""
+    """Adapt any iterable of ``(user, item, rating)`` / ``(user, item)``
+    tuples (or :class:`Event` records) into an event source; two-element
+    tuples yield rating-free click events."""
 
     def __init__(self, it: Iterable):
         self._it = it
@@ -208,8 +243,12 @@ class IteratorSource:
             if isinstance(row, Event):
                 yield row
             else:
-                user, item, rating = row[0], row[1], row[2]
-                yield Event(int(user), int(item), float(rating), clock)
+                user, item = row[0], row[1]
+                rating = row[2] if len(row) > 2 else None
+                yield Event(
+                    int(user), int(item),
+                    None if rating is None else float(rating), clock,
+                )
             clock += 1.0
 
 

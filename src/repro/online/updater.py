@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.core import mf, rearrange, threshold
 from repro.data import loader
-from repro.online.stream import EventBatch
+from repro.online.stream import EventBatch, RatingFreeStreamError
 from repro.optim.optimizers import RowOptimizer
 
 
@@ -411,6 +411,14 @@ class OnlineUpdater:
         """
         if len(batch) == 0:
             return {"abs_err": 0.0, "work_fraction": 1.0, "events": 0}
+        if batch.rating is None:
+            raise RatingFreeStreamError(
+                "OnlineUpdater.apply trains on the rating column and this "
+                "batch is rating-free.  Convert clicks into weighted binary "
+                "preferences first — repro.workloads.implicit."
+                "implicit_event_batch(batch, num_items=...) — then apply "
+                "the converted batch."
+            )
         users = np.asarray(batch.user, np.int32)
         items = np.asarray(batch.item, np.int32)
         ratings = np.asarray(batch.rating, np.float32)

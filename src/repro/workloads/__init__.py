@@ -1,0 +1,37 @@
+"""Workloads: the objectives the pruned engine serves beyond explicit MF.
+
+The paper's machinery — thresholds, effective ranks, early-stopped matmul
+and factor update — is objective-agnostic; this package opens the same
+train → serve → refresh → evaluate pipeline to the workloads the field
+actually runs:
+
+* :mod:`repro.workloads.implicit` — confidence-weighted implicit MF
+  (Hu/Koren/Volinsky 2008): clicks become binary preferences with
+  per-example confidence weights that ride ``train_step``'s existing
+  ``batch["weight"]`` gate, so the weighted objective flows through the
+  epoch scan, the fused Pallas kernel and the online updater unchanged;
+* :mod:`repro.workloads.bpr` — Bayesian Personalized Ranking (Rendle
+  2009): a pairwise ``-log σ(s_ui - s_uj)`` objective whose masked
+  gradients apply the same dynamic pruning per (user, item) pair;
+* :mod:`repro.workloads.sequential` — SASRec session encodings served as
+  user vectors by the unchanged pruned top-k engine.
+"""
+from repro.workloads.bpr import (  # noqa: F401
+    BPRSampler,
+    bpr_epoch_scan,
+    bpr_train_step,
+)
+from repro.workloads.implicit import (  # noqa: F401
+    binarize_positives,
+    confidence_weights,
+    implicit_dataset,
+    implicit_event_batch,
+    implicit_microbatches,
+    strip_ratings,
+)
+from repro.workloads.sequential import (  # noqa: F401
+    encode_sessions,
+    session_params,
+    session_engine,
+    serve_sessions,
+)

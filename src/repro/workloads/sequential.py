@@ -1,0 +1,100 @@
+"""Sequential recommendation served by the pruned MF engine.
+
+SASRec (``models/recsys.py``) encodes an item-id session into a hidden
+state whose dot product with the item embedding table ranks the next item
+— structurally identical to MF serving, where a *user vector* scores
+against the item factor matrix.  So the dormant sequential path wires into
+the existing serving stack with zero engine changes: treat the final-state
+encodings as the rows of ``MFParams.p`` and the item embedding table
+(minus its padding row 0) as ``MFParams.q``, and every
+:class:`~repro.serving.engine.ServingEngine` path — streaming top-k,
+Pallas kernel, ``topk_sharded`` on a mesh, pruned or dense — serves
+sessions.
+
+Id mapping: SASRec item ids are 1-based (id 0 is the padding token), the
+engine's item axis is 0-based; engine item index ``j`` is item id
+``j + 1``.  :func:`serve_sessions` applies the shift so callers see item
+ids.  "User" ids on the session engine are session indices — row ``s`` of
+the ``seqs`` batch it was built from.
+
+Parity contract (pinned in ``tests/test_eval_ranking.py`` /
+``tests/test_pruned_topk_properties.py``): at thresholds 0 the engine's
+top-k over session vectors equals the brute-force ``dense_topk`` oracle
+and the dense ``sasrec_retrieval`` argsort exactly, on every serving path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mf
+from repro.models import recsys
+from repro.serving.engine import ServingEngine
+
+
+def encode_sessions(
+    sasrec_params,
+    seqs: jax.Array,   # (S, L) item ids, 0 = pad, prefix-padded
+    cfg: recsys.SASRecConfig,
+) -> jax.Array:
+    """Final-position SASRec hidden states: one (d,) user vector per
+    session — exactly the query vector ``sasrec_retrieval`` scores with."""
+    return recsys.sasrec_encode(sasrec_params, jnp.asarray(seqs), cfg)[:, -1]
+
+
+def session_params(
+    sasrec_params,
+    seqs: jax.Array,
+    cfg: recsys.SASRecConfig,
+) -> mf.MFParams:
+    """Session encodings + item embeddings as an :class:`~repro.core.mf.
+    MFParams` view: ``p[s]`` is session ``s``'s vector, ``q[j]`` is item id
+    ``j + 1`` (padding row 0 dropped), no biases — the factor pair the
+    pruned serving stack consumes unchanged."""
+    p = encode_sessions(sasrec_params, seqs, cfg)
+    q = sasrec_params["item_embed"][1:]
+    return mf.MFParams(
+        p=p, q=q, user_bias=None, item_bias=None,
+        global_mean=None, implicit=None,
+    )
+
+
+def session_engine(
+    sasrec_params,
+    seqs: jax.Array,
+    cfg: recsys.SASRecConfig,
+    t_p: float = 0.0,
+    t_q: float = 0.0,
+    **engine_kwargs,
+) -> ServingEngine:
+    """A :class:`ServingEngine` over the encoded sessions.
+
+    ``engine_kwargs`` pass through (``use_kernel``, ``max_batch``,
+    ``block_n``, ...); thresholds prune session vectors (``t_p``) and item
+    embeddings (``t_q``) with the usual rate-0-is-dense contract.
+    """
+    return ServingEngine(
+        session_params(sasrec_params, seqs, cfg), t_p, t_q, **engine_kwargs
+    )
+
+
+def serve_sessions(
+    engine: ServingEngine,
+    session_ids,
+    topk: int = 10,
+    *,
+    mesh=None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-k *item ids* (1-based, as SASRec speaks them) for session rows.
+
+    Routes through ``engine.topk`` — or ``topk_sharded`` when ``mesh`` is
+    given — and shifts the engine's 0-based item indices back to ids.
+    """
+    if mesh is not None:
+        scores, idx = engine.topk_sharded(session_ids, topk, mesh=mesh)
+    else:
+        scores, idx = engine.topk(session_ids, topk)
+    return np.asarray(scores), np.asarray(idx) + 1

@@ -1,0 +1,306 @@
+"""Rating-free streams and prequential *ranking* evaluation.
+
+Pins the satellite contracts: rating-free events flow through the stream
+plumbing as ``rating=None`` batches, every rating-driven consumer rejects
+them with the typed :class:`RatingFreeStreamError` (not a numpy crash),
+and :class:`PrequentialRankingEvaluator` answers "was the clicked item in
+the top-k we actually served?" strictly test-then-learn, segmented by
+new/established user cohorts.
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import mf
+from repro.eval import (
+    PrequentialEvaluator,
+    PrequentialRankingEvaluator,
+    dense_topk,
+)
+from repro.eval.prequential_ranking import _HitWindow
+from repro.online import OnlineUpdater, RatingFreeStreamError
+from repro.online.stream import Event, EventBatch, IteratorSource
+from repro.serving.engine import ServingEngine
+from repro.workloads import implicit_event_batch, strip_ratings
+
+M, N, K = 20, 30, 8
+
+
+def _params(seed=0):
+    return mf.init_params(jax.random.PRNGKey(seed), M, N, K, variant="funk")
+
+
+def _updater(seed=0, **kw):
+    kw.setdefault("optimizer", "sgd")
+    kw.setdefault("lr", 0.05)
+    return OnlineUpdater(_params(seed), **kw)
+
+
+# -- rating-free stream plumbing -------------------------------------------
+
+def test_rating_free_events_make_rating_free_batches():
+    batch = EventBatch.from_events(
+        [Event(0, 1, None, 0.0), Event(2, 3, None, 1.0)]
+    )
+    assert batch.rating is None
+    np.testing.assert_array_equal(batch.user, np.int32([0, 2]))
+    # empty batches stay rated-shaped (no consumer branches on them)
+    assert EventBatch.from_events([]).rating is not None
+
+
+def test_mixed_rated_and_rating_free_events_rejected():
+    with pytest.raises(ValueError, match="mix"):
+        EventBatch.from_events([Event(0, 1, 4.0, 0.0), Event(1, 2, None, 1.0)])
+
+
+def test_iterator_source_two_tuples_are_clicks():
+    events = list(IteratorSource([(3, 7), (1, 2, 5.0)]))
+    assert events[0].rating is None
+    assert events[1].rating == 5.0
+
+
+def test_strip_ratings_views_rated_stream_as_clicks():
+    events = list(
+        strip_ratings(IteratorSource([(1, 2, 5.0), (3, 4, 1.0)]))
+    )
+    assert [e.rating for e in events] == [None, None]
+    assert [(e.user, e.item) for e in events] == [(1, 2), (3, 4)]
+    assert events[1].timestamp == 1.0   # clock preserved
+
+
+def test_rating_free_half_life_weights_still_apply():
+    batch = EventBatch.from_events(
+        [Event(0, 1, None, 0.0), Event(0, 2, None, 10.0)], half_life_s=10.0
+    )
+    assert batch.rating is None
+    np.testing.assert_allclose(batch.weight, np.float32([0.5, 1.0]))
+
+
+# -- typed rejection by rating-driven consumers ----------------------------
+
+def _click_batch(n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return EventBatch.from_events(
+        [
+            Event(int(u), int(i), None, float(t))
+            for t, (u, i) in enumerate(
+                zip(rng.integers(0, M, n), rng.integers(0, N, n))
+            )
+        ]
+    )
+
+
+def test_online_updater_rejects_rating_free_batches():
+    upd = _updater()
+    before = np.asarray(upd.params.p).copy()
+    with pytest.raises(RatingFreeStreamError, match="implicit_event_batch"):
+        upd.apply(_click_batch())
+    np.testing.assert_array_equal(np.asarray(upd.params.p), before)
+    assert upd.events_seen == 0
+
+
+def test_prequential_evaluator_rejects_rating_free_batches():
+    ev = PrequentialEvaluator(_updater())
+    with pytest.raises(
+        RatingFreeStreamError, match="PrequentialRankingEvaluator"
+    ):
+        ev.score(_click_batch())
+    assert ev.events == 0
+
+
+def test_rating_free_error_is_a_type_error():
+    # callers catching TypeError (the old failure mode's class) still work
+    assert issubclass(RatingFreeStreamError, TypeError)
+
+
+# -- ranking evaluator: hand-computed hits ---------------------------------
+
+def _fixed_rank_fn(table):
+    """rank_fn returning canned top-k rows per user id."""
+
+    def rank(users, topk):
+        idx = np.asarray([table[int(u)][:topk] for u in users], np.int32)
+        return np.zeros_like(idx, np.float32), idx
+
+    return rank
+
+
+def test_hit_and_mrr_hand_computed():
+    table = {0: [4, 9, 2], 1: [7, 8, 3], 2: [5, 1, 0]}
+    ev = PrequentialRankingEvaluator(
+        rank_fn=_fixed_rank_fn(table), topk=3, window=8
+    )
+    batch = EventBatch.from_events([
+        Event(0, 9, None, 0.0),    # hit at position 2 -> rr 1/2
+        Event(1, 3, None, 1.0),    # hit at position 3 -> rr 1/3
+        Event(2, 8, None, 2.0),    # miss
+    ])
+    metrics = ev.score(batch)
+    assert metrics["events"] == 3
+    np.testing.assert_allclose(metrics["hit_rate"], 2 / 3)
+    np.testing.assert_allclose(metrics["mrr"], (0.5 + 1 / 3) / 3)
+    stats = ev.stats
+    assert stats.events == 3 and stats.topk == 3
+    np.testing.assert_allclose(stats.hit_rate, 2 / 3)
+    np.testing.assert_allclose(stats.window_hit_rate, 2 / 3)
+    flat = stats.as_dict()
+    assert flat["new_events"] == 3 and flat["established_events"] == 0
+
+
+def test_cohort_segmentation_pre_batch_attribution():
+    table = {5: [1, 2, 3]}
+    ev = PrequentialRankingEvaluator(
+        rank_fn=_fixed_rank_fn(table), topk=3, new_user_events=2
+    )
+    # same user 4x in stream order: events 1-2 are "new", 3-4 "established";
+    # hits: item 1 (hit), 9 (miss), 2 (hit), 3 (hit)
+    batch = EventBatch.from_events([
+        Event(5, 1, None, 0.0), Event(5, 9, None, 1.0),
+        Event(5, 2, None, 2.0), Event(5, 3, None, 3.0),
+    ])
+    ev.score(batch)
+    cohorts = ev.stats.cohorts
+    assert cohorts["new"]["events"] == 2
+    np.testing.assert_allclose(cohorts["new"]["hit_rate"], 0.5)
+    assert cohorts["established"]["events"] == 2
+    np.testing.assert_allclose(cohorts["established"]["hit_rate"], 1.0)
+
+
+def test_unservable_users_and_items_count_as_misses():
+    upd = _updater()
+    ev = PrequentialRankingEvaluator(upd, topk=5)
+    batch = EventBatch.from_events([
+        Event(M + 50, 0, None, 0.0),    # user the serving side never saw
+        Event(0, N + 50, None, 1.0),    # item outside the catalog
+    ])
+    metrics = ev.score(batch)
+    assert metrics["hit_rate"] == 0.0 and metrics["events"] == 2
+    # and scoring them did NOT grow the updater's tables (no update ran)
+    assert upd.params.p.shape[0] == M
+
+
+def test_score_never_reads_the_rating_column():
+    upd = _updater(seed=3)
+    rated = EventBatch.from_events(
+        [Event(1, 2, 5.0, 0.0), Event(3, 4, 1.0, 1.0)]
+    )
+    clicks = EventBatch.from_events(
+        [Event(1, 2, None, 0.0), Event(3, 4, None, 1.0)]
+    )
+    a = PrequentialRankingEvaluator(upd, topk=4).score(rated)
+    b = PrequentialRankingEvaluator(upd, topk=4).score(clicks)
+    assert a == b
+
+
+# -- test-then-learn ordering ----------------------------------------------
+
+def test_scoring_happens_strictly_before_update():
+    calls = []
+
+    class StubUpdater:
+        def apply(self, batch):
+            calls.append(("apply", len(batch)))
+            return {"abs_err": 0.0}
+
+    def rank(users, topk):
+        calls.append(("rank", len(users)))
+        return (
+            np.zeros((len(users), topk), np.float32),
+            np.zeros((len(users), topk), np.int32),
+        )
+
+    def rated(n, seed):
+        rng = np.random.default_rng(seed)
+        return EventBatch.from_events([
+            Event(int(u), int(i), 1.0, float(t))
+            for t, (u, i) in enumerate(
+                zip(rng.integers(0, M, n), rng.integers(0, N, n))
+            )
+        ])
+
+    ev = PrequentialRankingEvaluator(StubUpdater(), rank_fn=rank, topk=2)
+    ev.consume(rated(3, seed=1))
+    ev.consume(rated(2, seed=2))
+    assert calls == [("rank", 3), ("apply", 3), ("rank", 2), ("apply", 2)]
+
+
+def test_consume_rating_free_without_update_fn_scores_then_raises():
+    upd = _updater()
+    ev = PrequentialRankingEvaluator(upd, topk=3)
+    with pytest.raises(RatingFreeStreamError, match="update_fn"):
+        ev.consume(_click_batch())
+    assert ev.events == 4          # the evaluation side still landed
+    assert upd.events_seen == 0    # the update side did not
+
+
+def test_consume_with_update_fn_trains_on_converted_clicks():
+    upd = _updater()
+    ev = PrequentialRankingEvaluator(
+        upd, topk=3,
+        update_fn=functools.partial(
+            implicit_event_batch, num_items=N, alpha=4.0, negatives=2,
+            rng=np.random.default_rng(0),
+        ),
+    )
+    before = np.asarray(upd.params.p).copy()
+    metrics = ev.consume(_click_batch(4))
+    assert metrics["events"] == 4
+    assert upd.events_seen == 4 * 3   # positives + 2 negatives each
+    assert not np.array_equal(np.asarray(upd.params.p), before)
+    # second batch: the model scored it BEFORE this batch's own update
+    ev.consume(_click_batch(4, seed=9))
+    assert ev.stats.events == 8
+
+
+# -- ranking sources agree --------------------------------------------------
+
+def test_engine_and_updater_paths_agree_at_threshold_zero():
+    params = _params(7)
+    upd = OnlineUpdater(params, optimizer="sgd")
+    engine = ServingEngine(params, 0.0, 0.0)
+    batch = _click_batch(6, seed=4)
+    a = PrequentialRankingEvaluator(upd, topk=5).score(batch)
+    b = PrequentialRankingEvaluator(engine=engine, topk=5).score(batch)
+    assert a == b
+
+
+def test_updater_path_uses_live_thresholds():
+    params = _params(8)
+    upd = OnlineUpdater(params, t_p=0.08, t_q=0.08, optimizer="sgd")
+    ev = PrequentialRankingEvaluator(upd, topk=5)
+    users = np.arange(6, dtype=np.int32)
+    want_scores, want_idx = dense_topk(
+        params, users, 5, t_p=upd.t_p, t_q=upd.t_q, hist=None
+    )
+    got_idx = ev._rank(users)
+    np.testing.assert_array_equal(got_idx, np.asarray(want_idx))
+
+
+# -- plumbing edge cases ----------------------------------------------------
+
+def test_empty_batch_is_a_noop():
+    ev = PrequentialRankingEvaluator(_updater(), topk=3)
+    metrics = ev.score(EventBatch.from_events([]))
+    assert metrics["events"] == 0 and np.isnan(metrics["hit_rate"])
+    assert ev.events == 0
+
+
+def test_hit_window_overflow_keeps_newest():
+    win = _HitWindow(4)
+    win.extend(np.float64([1, 1, 1]))
+    win.extend(np.float64([0, 0, 0, 0, 0, 1]))   # overflows capacity
+    np.testing.assert_allclose(win.mean(), 0.25)
+    assert win.count == 4
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError, match="ranking source"):
+        PrequentialRankingEvaluator()
+    with pytest.raises(ValueError, match="topk"):
+        PrequentialRankingEvaluator(_updater(), topk=0)
+    with pytest.raises(ValueError, match="new_user_events"):
+        PrequentialRankingEvaluator(_updater(), new_user_events=0)
+    with pytest.raises(ValueError, match="window"):
+        PrequentialRankingEvaluator(_updater(), window=0)

@@ -143,6 +143,42 @@ def test_topk_out_of_range_raises():
             ops.pruned_topk(p, q, 0.0, 0.0, 0, use_kernel=use_kernel)
 
 
+@pytest.mark.parametrize("use_kernel", [False, True], ids=["stream", "kernel"])
+@pytest.mark.parametrize("t", [0.0, 1 / 16, 1 / 8])
+def test_sasrec_session_vectors_topk_parity(t, use_kernel):
+    """Session-shaped factor pairs through both top-k paths.
+
+    Real SASRec final-state encodings (``workloads.sequential``) scored
+    against the item embedding table — snapped to the 1/8 grid so the
+    file's bitwise-equality contract holds through the kernel's split-k
+    reduction.  This is the serving geometry the sequential workload
+    produces: p rows are transformer outputs (dense, unnormalized), q is an
+    embedding table with its padding row dropped, no biases, topk == n.
+    """
+    from repro.data import clicks
+    from repro.models import recsys
+    from repro.workloads import sequential
+
+    cfg = recsys.SASRecConfig(
+        n_items=33, embed_dim=16, n_blocks=2, n_heads=2, seq_len=8
+    )
+    import jax
+
+    sasrec = recsys.init_sasrec_params(jax.random.PRNGKey(4), cfg)
+    seqs = clicks.sasrec_batch(9, seq_len=8, n_items=33, seed=4)["seq"]
+    view = sequential.session_params(sasrec, jnp.asarray(seqs), cfg)
+    # snap to the grid; rescale first so the thresholds bite mid-row
+    snap = lambda a: np.round(np.asarray(a) * 8.0).astype(np.float32) / 8.0
+    p = snap(view.p)
+    q = snap(view.q * 40.0)   # embed init is ~0.01-scale: lift onto the grid
+    assert (np.abs(q) > 0).any()
+    blocks = (
+        dict(block_m=8, block_n=16, block_k=8) if use_kernel
+        else dict(block_n=7)
+    )
+    _check_case(p, q, t, t, q.shape[0], None, use_kernel=use_kernel, **blocks)
+
+
 def test_total_pruning_serves_bias_order():
     """Thresholds above every |factor|: all ranks 0, every dot product empty
     — the top-k must then be exactly the bias ordering (maximal tie stress
